@@ -1,0 +1,66 @@
+"""Shared benchmark utilities: timing, CSV emission, result loading."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+DRYRUN_JSON = os.path.join(RESULTS_DIR, "dryrun.json")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (seconds) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def time_decode(step: Callable, params, cache, tok, warmup: int = 2,
+                iters: int = 5) -> float:
+    """Median wall-time of a cache-donating decode step (threads the cache)."""
+    for _ in range(warmup):
+        out, cache = step(params, cache, tok)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out, cache = step(params, cache, tok)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: Dict) -> None:
+    """CSV contract: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.2f},{json.dumps(derived, sort_keys=True)}")
+
+
+def load_dryrun(path: Optional[str] = None) -> Dict:
+    p = path or DRYRUN_JSON
+    if not os.path.exists(p):
+        return {}
+    with open(p) as f:
+        return json.load(f)
+
+
+def dryrun_cells(results: Dict, *, mesh: str = "16x16", status: str = "ok",
+                 tag: str = ""):
+    for key, rec in sorted(results.items()):
+        if rec.get("mesh") != mesh or rec.get("status") != status:
+            continue
+        if (rec.get("tag") or "") != tag:
+            continue
+        yield key, rec

@@ -1,0 +1,55 @@
+"""Paper Fig. 11 analogue: depth-wise morphing latency / compute / accuracy.
+
+Measured wall-clock per decode token on CPU for the smoke model (real
+execution), plus TPU roofline deltas from the dry-run width/depth records for
+the full-size archs. Accuracy axis = eval CE of each path after DistillCycle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_decode
+from repro.configs import smoke_config
+from repro.configs.base import MorphMode
+from repro.core import elastic
+from repro.core.distillcycle import DistillCycle, DistillCycleConfig
+from repro.core.morph import make_serve_controller
+from repro.data import DataConfig
+from repro.models import init_decode_cache, init_params
+from repro.optim import OptimizerConfig
+
+
+def run(arch: str = "tinyllama-1.1b", train_steps: int = 6) -> None:
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    dc = DataConfig(seed=5, global_batch=8, seq_len=32)
+    cyc = DistillCycle(cfg, OptimizerConfig(lr=5e-3), dc,
+                       dcfg=DistillCycleConfig(epochs_per_stage=1,
+                                               steps_per_epoch=train_steps,
+                                               epoch_lr_decay=1.0))
+    params, _ = cyc.run(params)
+    ce = cyc.eval_modes(params)
+
+    depths = sorted({m.depth for m in cfg.elastic.modes(cfg.n_groups)})
+    ctrl = make_serve_controller(params, cfg)
+    B = 4
+    tok = jnp.zeros((B, 1), jnp.int32)
+    base_t = None
+    for d in depths:
+        mode = MorphMode(depth=d, width=1.0)
+        cfg_m = elastic.morph_config(cfg, mode)
+        cache = init_decode_cache(cfg_m, B, 16)
+        step = ctrl.step_for(mode)
+        t = time_decode(step, params, cache, tok)
+        base_t = base_t or t
+        frac = elastic.flops_fraction(cfg, mode)
+        emit(f"depth_morph/{arch}/d{d}", t * 1e6, {
+            "active_flops_frac": round(frac, 3),
+            "eval_ce": round(ce.get(mode.name, float("nan")), 4),
+            "latency_vs_smallest": round(t / base_t, 3),
+        })
+
+
+if __name__ == "__main__":
+    run()

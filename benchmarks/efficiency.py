@@ -1,0 +1,39 @@
+"""Paper Table VI analogue: edge-platform efficiency (inferences per watt).
+
+The paper compares Zynq-7100 against Jetson/Coral/etc. on MobileNetV1. The
+transferable quantity here: roofline inferences/s/W on v5e for the smallest
+assigned archs at decode, full vs best morph mode — demonstrating the same
+'efficiency via reconfiguration' effect (not cross-hardware numbers, which
+this container cannot measure)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.configs.base import MorphMode
+from repro.core.neuroforge import estimate
+from repro.core.neuroforge.hw import V5E
+from repro.core.neuroforge.space import DesignPoint
+
+
+def run() -> None:
+    cell = SHAPE_BY_NAME["decode_32k"]
+    for arch in ("tinyllama-1.1b", "mamba2-370m", "granite-moe-1b-a400m",
+                 "whisper-base"):
+        cfg = get_config(arch)
+        for w in (1.0, min(cfg.elastic.width_fractions)):
+            pt = DesignPoint(dp=16, tp=16, microbatches=1, remat="none",
+                             param_dtype="bfloat16", moment_dtype="float32",
+                             grad_comm="allreduce", kv_quant=(w < 1.0),
+                             attn_chunk=1024, capacity_factor=1.25, width=w)
+            rep = estimate(cfg, cell, pt)
+            tok_s = cell.global_batch / rep.latency_s
+            watts = 256 * V5E.tdp_watts
+            emit(f"efficiency/{arch}/w{int(w * 100)}", rep.latency_s * 1e6, {
+                "tokens_per_s": round(tok_s, 1),
+                "tokens_per_joule": round(tok_s / watts, 4),
+                "bound": rep.bound,
+            })
+
+
+if __name__ == "__main__":
+    run()

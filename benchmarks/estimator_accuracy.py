@@ -1,0 +1,44 @@
+"""Paper Fig. 10 / Table III analogue: analytical estimates vs compiled truth.
+
+The paper reports >95% resource-estimate accuracy and 10-15% latency error vs
+post-synthesis reports. Here the 'synthesis report' is the dry-run compiled
+artifact: we compare analytical FLOPs vs loop-aware HLO FLOPs (target <=15%
+error) and traffic/collective estimates (order-of-magnitude, like the
+paper's LUT caveat).
+"""
+from __future__ import annotations
+
+from benchmarks.common import dryrun_cells, emit, load_dryrun
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.core.neuroforge.validate import point_from_record, validate_against_record
+
+
+def run(mesh: str = "16x16") -> None:
+    results = load_dryrun()
+    if not results:
+        emit("estimator_accuracy/NO_DRYRUN", 0.0, {"note": "run repro.launch.dryrun first"})
+        return
+    by_kind = {"train": [], "prefill": [], "decode": []}
+    for key, rec in dryrun_cells(results, mesh=mesh):
+        cfg = get_config(rec["arch"])
+        cell = SHAPE_BY_NAME[rec["shape"]]
+        try:
+            row = validate_against_record(cfg, cell, point_from_record(rec), rec)
+        except Exception as e:  # noqa: BLE001
+            emit(f"estimator_accuracy/{rec['arch']}/{rec['shape']}/ERROR", 0.0,
+                 {"error": str(e)[:120]})
+            continue
+        by_kind[cell.kind].append(row.flops_err)
+        emit(f"estimator_accuracy/{rec['arch']}/{rec['shape']}", 0.0, row.as_dict())
+    summary = {"paper_target_pct": 15.0}
+    for kind, errs in by_kind.items():
+        if errs:
+            errs.sort()
+            summary[f"{kind}_median_pct"] = round(100 * errs[len(errs) // 2], 1)
+            summary[f"{kind}_max_pct"] = round(100 * max(errs), 1)
+            summary[f"{kind}_cells"] = len(errs)
+    emit("estimator_accuracy/summary", 0.0, summary)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness-shaped timing;
+the derived fields carry the TPU-relevant tile/skip accounting)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import flash_attention_bshd, morph_matmul, ssd_scan_bshn
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    x = jax.random.normal(ks[0], (256, 256), jnp.float32)
+    w = jax.random.normal(ks[1], (256, 256), jnp.float32)
+    for an in (256, 128, 64):
+        t = time_fn(lambda: morph_matmul(x, w, jnp.int32(an), None,
+                                         block=(64, 64, 64), interpret=True))
+        n_tiles = (256 // 64) * (max(an, 1) + 63) // 64 * (256 // 64)
+        emit(f"kernel/morph_matmul/an{an}", t * 1e6,
+             {"active_tiles": n_tiles, "total_tiles": 4 * 4 * 4})
+
+    q = jax.random.normal(ks[2], (2, 256, 4, 64), jnp.float32)
+    k2 = jax.random.normal(ks[3], (2, 256, 2, 64), jnp.float32)
+    v2 = jax.random.normal(ks[4], (2, 256, 2, 64), jnp.float32)
+    for window in (0, 64):
+        t = time_fn(lambda: flash_attention_bshd(q, k2, v2, causal=True,
+                                                 window=window, bq=64, bk=64,
+                                                 interpret=True), iters=3)
+        emit(f"kernel/flash_attention/win{window}", t * 1e6,
+             {"seq": 256, "gqa_group": 2})
+
+    xs = jax.random.normal(ks[5], (2, 256, 4, 32), jnp.float32)
+    dts = jax.nn.softplus(jax.random.normal(ks[6], (2, 256, 4)))
+    A = -jnp.exp(jax.random.normal(ks[7], (4,)))
+    B_ = jax.random.normal(ks[5], (2, 256, 1, 16))
+    C_ = jax.random.normal(ks[6], (2, 256, 1, 16))
+    t = time_fn(lambda: ssd_scan_bshn(xs, dts, A, B_, C_, chunk=64,
+                                      interpret=True), iters=3)
+    emit("kernel/ssd_scan/s256", t * 1e6, {"chunk": 64, "state": 16})
+
+
+if __name__ == "__main__":
+    run()

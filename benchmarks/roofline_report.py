@@ -1,0 +1,58 @@
+"""§Roofline report: per (arch x shape x mesh) three-term roofline table,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful-compute ratio, and
+per-cell improvement notes. Reads the dry-run JSON."""
+from __future__ import annotations
+
+from benchmarks.common import emit, load_dryrun
+
+NOTES = {
+    ("train", "collective"): "cut FSDP re-gather: fewer microbatches or larger dp-shard; reduce-scatter grads",
+    ("train", "memory"): "remat policy down (dots/none) or bf16 moments to cut optimizer traffic",
+    ("train", "compute"): "at compute roof: only useful-ratio (less remat recompute) helps",
+    ("prefill", "collective"): "shard seq instead of batch (SP) to shrink TP activation all-reduces",
+    ("prefill", "memory"): "larger attention chunk / fused attention kernel to cut score traffic",
+    ("prefill", "compute"): "attention is O(s^2): sliding-window or sparse attention to cut FLOPs",
+    ("decode", "memory"): "int8 KV cache (+int8 weights) halves the stream; batch more requests",
+    ("decode", "collective"): "move to 2d weight sharding: activation psums instead of weight gathers",
+    ("decode", "compute"): "unexpected for decode: check dispatch einsum inflation (MoE)",
+}
+
+
+def run(mesh: str = "both") -> None:
+    results = load_dryrun()
+    if not results:
+        emit("roofline/NO_DRYRUN", 0.0, {"note": "run repro.launch.dryrun first"})
+        return
+    meshes = ["16x16", "2x16x16"] if mesh == "both" else [mesh]
+    for mname in meshes:
+        for key, rec in sorted(results.items()):
+            if rec.get("mesh") != mname or (rec.get("tag") or "") != "":
+                continue
+            if rec["status"] == "skip":
+                emit(f"roofline/{mname}/{rec['arch']}/{rec['shape']}", 0.0,
+                     {"status": "skip", "reason": rec["reason"]})
+                continue
+            if rec["status"] != "ok":
+                emit(f"roofline/{mname}/{rec['arch']}/{rec['shape']}", 0.0,
+                     {"status": "error", "error": rec.get("error", "")[:120]})
+                continue
+            r = rec["roofline"]
+            kind = {"train_4k": "train", "prefill_32k": "prefill",
+                    "decode_32k": "decode", "long_500k": "decode"}[rec["shape"]]
+            emit(f"roofline/{mname}/{rec['arch']}/{rec['shape']}",
+                 r["step_s"] * 1e6, {
+                     "compute_s": round(r["compute_s"], 6),
+                     "memory_s": round(r["memory_s"], 6),
+                     "collective_s": round(r["collective_s"], 6),
+                     "dominant": r["dominant"],
+                     "useful_ratio": round(r["useful_ratio"], 3),
+                     "roofline_fraction": round(r["roofline_fraction"], 4),
+                     "mem_gb_per_chip": round(
+                         rec["memory"]["live_bytes_per_device"] / 1e9, 2),
+                     "fits_16gb": rec["memory"]["fits_16gb"],
+                     "note": NOTES.get((kind, r["dominant"]), ""),
+                 })
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark suite entry point.
+
+Each sub-benchmark maps to one paper artifact (see DESIGN.md experiment
+index):
+  pareto_front        -> Fig. 2   (NeuroForge Pareto front)
+  estimator_accuracy  -> Fig. 10 / Table III (analytical vs compiled)
+  morph_throughput    -> Table IV (full vs morph throughput + energy)
+  depth_morph         -> Fig. 11  (depth-wise reconfiguration)
+  width_morph         -> Fig. 12  (width-wise reconfiguration + kernel skip)
+  efficiency          -> Table VI (efficiency via reconfiguration)
+  dse_speed           -> §II.A    (fast DSE without synthesis-in-loop)
+  kernel_bench        -> kernels  (per-kernel microbench)
+  roofline_report     -> §Roofline (reads dry-run JSON)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        depth_morph,
+        dse_speed,
+        efficiency,
+        estimator_accuracy,
+        kernel_bench,
+        morph_throughput,
+        pareto_front,
+        roofline_report,
+        width_morph,
+    )
+
+    only = sys.argv[1] if len(sys.argv) > 1 else ""
+    suites = {
+        "pareto_front": pareto_front.run,
+        "estimator_accuracy": estimator_accuracy.run,
+        "morph_throughput": morph_throughput.run,
+        "depth_morph": depth_morph.run,
+        "width_morph": width_morph.run,
+        "efficiency": efficiency.run,
+        "dse_speed": dse_speed.run,
+        "kernel_bench": kernel_bench.run,
+        "roofline_report": roofline_report.run,
+    }
+    for name, fn in suites.items():
+        if only and name != only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — a failing suite must not kill the run
+            print(f"{name}/SUITE_ERROR,0.0,{{}}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

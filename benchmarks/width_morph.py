@@ -1,0 +1,63 @@
+"""Paper Fig. 12 analogue: width-wise morphing latency / compute / accuracy,
+plus the morph_matmul kernel's tile-skip scaling (the clock-gating analogue:
+one executable, latency proportional to active width)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_decode, time_fn
+from repro.configs import smoke_config
+from repro.configs.base import MorphMode
+from repro.core import elastic
+from repro.core.distillcycle import DistillCycle, DistillCycleConfig
+from repro.core.morph import make_serve_controller
+from repro.data import DataConfig
+from repro.kernels import morph_matmul
+from repro.models import init_decode_cache, init_params
+from repro.optim import OptimizerConfig
+
+
+def run(arch: str = "tinyllama-1.1b", train_steps: int = 6) -> None:
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    dc = DataConfig(seed=5, global_batch=8, seq_len=32)
+    cyc = DistillCycle(cfg, OptimizerConfig(lr=5e-3), dc,
+                       dcfg=DistillCycleConfig(epochs_per_stage=1,
+                                               steps_per_epoch=train_steps,
+                                               epoch_lr_decay=1.0))
+    params, _ = cyc.run(params)
+    ce = cyc.eval_modes(params)
+
+    ctrl = make_serve_controller(params, cfg)
+    B = 4
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for w in sorted(cfg.elastic.width_fractions):
+        mode = MorphMode(depth=cfg.n_groups, width=w)
+        cfg_m = elastic.morph_config(cfg, mode)
+        cache = init_decode_cache(cfg_m, B, 16)
+        step = ctrl.step_for(mode)
+        t = time_decode(step, params, cache, tok)
+        emit(f"width_morph/{arch}/w{int(w * 100)}", t * 1e6, {
+            "active_flops_frac": round(elastic.flops_fraction(cfg, mode), 3),
+            "eval_ce": round(ce.get(mode.name, float("nan")), 4),
+        })
+
+    # kernel-level clock-gating: ONE executable, dynamic width scalar
+    M = K = N = 256
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K), jnp.float32)
+    wmat = jax.random.normal(jax.random.PRNGKey(2), (K, N), jnp.float32)
+    full = None
+    for frac in (1.0, 0.5, 0.25):
+        an = int(N * frac)
+        t = time_fn(lambda: morph_matmul(x, wmat, jnp.int32(an), jnp.int32(K),
+                                         block=(64, 64, 64), interpret=True))
+        full = full or t
+        emit(f"width_morph/kernel_tile_skip/w{int(frac * 100)}", t * 1e6, {
+            "active_cols": an, "latency_vs_full": round(t / full, 3),
+            "note": "interpret-mode timing: tile-skip count is the TPU signal",
+        })
+
+
+if __name__ == "__main__":
+    run()

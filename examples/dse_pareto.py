@@ -1,0 +1,47 @@
+"""NeuroForge DSE scenario: explore the distribution design space for an
+assigned arch under user latency/HBM budgets; print the Pareto front and the
+selected deployable config (paper Fig. 2 workflow).
+
+    PYTHONPATH=src python examples/dse_pareto.py --arch mixtral-8x22b
+"""
+import argparse
+
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.core.neuroforge import Constraints, run_moga
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x22b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--hbm-budget-gb", type=float, default=16.0)
+    ap.add_argument("--latency-budget-s", type=float, default=0.0)
+    ap.add_argument("--pop", type=int, default=48)
+    ap.add_argument("--gens", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    cell = SHAPE_BY_NAME[args.shape]
+    cons = Constraints(hbm_bytes=args.hbm_budget_gb * 1e9,
+                       latency_s=args.latency_budget_s or None)
+    res = run_moga(cfg, cell, constraints=cons, pop_size=args.pop,
+                   generations=args.gens, seed=0)
+
+    print(f"{args.arch} x {args.shape}: {res.evaluations} evals, "
+          f"front size {len(res.pareto)}")
+    print(f"{'config':58s} {'latency':>10s} {'HBM/chip':>9s} {'coll':>9s} bound")
+    for p in res.pareto:
+        r = p.report
+        print(f"{p.point.name():58s} {r.latency_s * 1e3:8.1f}ms "
+              f"{r.hbm_capacity_per_chip / 1e9:7.2f}GB "
+              f"{r.collective_s * 1e3:7.1f}ms {r.bound}")
+    best = res.pareto[0]
+    print(f"\nselected (min latency, feasible): {best.point.name()}")
+    print("apply via: python -m repro.launch.dryrun "
+          f"--arch {args.arch} --shape {args.shape} "
+          f"--remat {best.point.remat} --microbatches {best.point.microbatches} "
+          f"--moment-dtype {best.point.moment_dtype}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: build a model, train a few steps, morph it, serve it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import MorphMode, smoke_config
+from repro.core import elastic
+from repro.core.morph import make_serve_controller
+from repro.data import DataConfig, make_batch
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models import init_decode_cache
+from repro.optim import OptimizerConfig
+
+
+def main():
+    # 1. pick an assigned architecture (reduced smoke variant for CPU)
+    cfg = smoke_config("tinyllama-1.1b")
+    print(f"model: {cfg.name} ({cfg.n_params() / 1e6:.2f}M params, "
+          f"{cfg.n_groups} layer groups)")
+
+    # 2. train a few steps on the synthetic bigram task
+    ocfg = OptimizerConfig(lr=5e-3)
+    dc = DataConfig(seed=0, global_batch=8, seq_len=32)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, ocfg)
+    for i in range(10):
+        state, metrics = step(state, make_batch(cfg, dc, i))
+    print(f"loss after 10 steps: {float(metrics['loss']):.3f}")
+
+    # 3. NeuroMorph: the same weights serve every execution path
+    params = state["params"]
+    ctrl = make_serve_controller(params, cfg)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for mode in ctrl.modes:
+        cfg_m = elastic.morph_config(cfg, mode)
+        cache = init_decode_cache(cfg_m, 2, 8)
+        ctrl.set_mode(mode)
+        logits, _ = ctrl(params, cache, tok)
+        frac = elastic.flops_fraction(cfg, mode)
+        print(f"mode {mode.name:8s}: logits {logits.shape}, "
+              f"active FLOPs {frac * 100:5.1f}%")
+    print(f"mode switches: {ctrl.stats['switches']}, "
+          f"compiles: {ctrl.stats['compiles']} (one per mode, never on switch)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Render EXPERIMENTS.md roofline/dry-run tables from dryrun.json."""
+import json
+import sys
+
+r = json.load(open("benchmarks/results/dryrun.json"))
+
+
+def table(mesh):
+    rows = []
+    for k, v in sorted(r.items()):
+        if v.get("mesh") != mesh or (v.get("tag") or ""):
+            continue
+        if v["status"] == "skip":
+            rows.append(f"| {v['arch']} | {v['shape']} | skip | — | — | — | — | — | — | — |")
+            continue
+        rf = v["roofline"]
+        m = v["memory"]
+        c = v["collectives"]
+        rows.append(
+            f"| {v['arch']} | {v['shape']} | {rf['dominant']} | "
+            f"{rf['compute_s']:.3f} | {rf['memory_s']:.3f} | {rf['collective_s']:.3f} | "
+            f"{m['live_bytes_per_device']/1e9:.2f} | {'Y' if m['fits_16gb'] else 'N'} | "
+            f"{rf['useful_ratio']:.3f} | {rf['roofline_fraction']:.4f} |")
+    return rows
+
+
+def summary(mesh):
+    n_ok = n_skip = 0
+    for k, v in r.items():
+        if v.get("mesh") != mesh or (v.get("tag") or ""):
+            continue
+        n_ok += v["status"] == "ok"
+        n_skip += v["status"] == "skip"
+    return n_ok, n_skip
+
+
+hdr = ("| arch | shape | dominant | compute_s | memory_s | collective_s | "
+       "GB/chip | fits 16GB | useful ratio | roofline frac |\n"
+       "|---|---|---|---|---|---|---|---|---|---|")
+for mesh in ("16x16", "2x16x16"):
+    ok, skip = summary(mesh)
+    print(f"\n### Mesh {mesh} — {ok} compiled OK, {skip} documented skips\n")
+    print(hdr)
+    print("\n".join(table(mesh)))
+
+# collective breakdown for the hillclimb cells
+print("\n### Collective composition (baseline, 16x16)\n")
+for cell in ("nemotron-4-340b|train_4k|16x16", "nemotron-4-340b|decode_32k|16x16",
+             "mixtral-8x22b|decode_32k|16x16"):
+    for k, v in r.items():
+        if k.startswith(cell) and not (v.get("tag") or ""):
+            c = v["collectives"]["per_op_bytes"]
+            tot = sum(c.values())
+            parts = ", ".join(f"{op}={b/1e9:.1f}GB" for op, b in
+                              sorted(c.items(), key=lambda x: -x[1]))
+            print(f"- `{cell}`: wire {tot/1e9:.1f} GB/chip ({parts})")

@@ -1,0 +1,50 @@
+"""Dev iteration script: run every smoke arch through fwd / loss / prefill / decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import list_archs, smoke_config
+from repro.models import decode_step, forward, init_decode_cache, init_params, loss_fn, prefill
+
+
+def make_batch(cfg, B, S, key):
+    ks = jax.random.split(key, 3)
+    text = S - (cfg.frontend_seq if cfg.frontend == "vision_stub" else 0)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, text), 0, cfg.vocab_size),
+        "targets": jax.random.randint(ks[1], (B, text), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = jax.random.normal(ks[2], (B, cfg.frontend_seq, cfg.frontend_dim))
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(ks[2], (B, cfg.enc_seq, cfg.frontend_dim))
+    return batch
+
+
+def main(names):
+    key = jax.random.PRNGKey(0)
+    for name in names:
+        cfg = smoke_config(name)
+        B, S = 2, 32
+        params = init_params(key, cfg)
+        batch = make_batch(cfg, B, S, key)
+        n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+        outs, aux = jax.jit(lambda p, b: forward(p, b, cfg, collect_exits=cfg.elastic.exit_layers))(params, batch)
+        loss, parts = jax.jit(lambda p, b: loss_fn(p, b, cfg))(params, batch)
+        lg, cache = jax.jit(lambda p, b: prefill(p, b, cfg))(params, batch)
+        tok = batch["tokens"][:, :1]
+        lg2, cache2 = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))(params, cache, tok)
+        # decode from scratch cache too
+        c0 = init_decode_cache(cfg, B, 16)
+        lg3, c1 = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))(params, c0, tok)
+        assert all(jnp.isfinite(v).all() for v in outs.values()), name
+        assert jnp.isfinite(loss), name
+        assert jnp.isfinite(lg2).all() and jnp.isfinite(lg3).all(), name
+        print(f"OK {name:28s} params={n/1e6:6.2f}M loss={float(loss):7.3f} "
+              f"outs={sorted(outs)} logits={lg2.shape}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or list_archs())

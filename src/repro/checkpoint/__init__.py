@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointing import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,6 @@
+"""Paper contributions: NeuroForge (DSE), NeuroMorph (elastic/morph), DistillCycle."""
+from repro.core import elastic, morph
+from repro.core.distillcycle import DistillCycle, DistillCycleConfig, default_schedule, kd_loss
+
+__all__ = ["elastic", "morph", "DistillCycle", "DistillCycleConfig",
+           "default_schedule", "kd_loss"]

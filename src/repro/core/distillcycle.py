@@ -1,0 +1,220 @@
+"""DistillCycle training (paper §IV.B, Algorithm 2, Eq. 16-21).
+
+Three principles, implemented faithfully:
+  1. *Grow progressively* — the schedule is ordered by depth; stage ``i``
+     trains the network up to its exit boundary (Eq. 19: N_full^(i) =
+     N_full^(i-1) ∘ B_i). Growth is positional: deeper groups simply remain
+     untouched until their stage arrives (shared-weight store).
+  2. *Train in cycles* — each stage alternates a **teacher phase** (full
+     current net, plain CE — Eq. 16) and a **student phase** (subnet,
+     CE + temperature-scaled KL distillation — Eq. 17/18).
+  3. *Knowledge distillation* — students match the teacher's softened
+     distribution; λ balances ground truth vs soft labels.
+
+The paper's ``merge(subnet, net)`` is structural here: subnet weights are
+prefix *views* of the full weights (repro.core.elastic), so student gradients
+scatter straight into the shared store — merging is the identity.
+
+Eq. 20 (exponential LR decay for earlier layers across stages) is applied as
+a per-stage global LR factor gamma^stage plus the paper's per-epoch alpha/10.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MorphMode
+from repro.core import elastic
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models.model import cross_entropy, forward
+from repro.optim import OptimizerConfig, apply_updates, init_opt_state
+
+
+# ---------------------------------------------------------------------------
+# losses (Eq. 16-18)
+# ---------------------------------------------------------------------------
+
+
+def _mask_pad(logits, cfg: ModelConfig):
+    v = cfg.vocab_size
+    if logits.shape[-1] == v:
+        return logits
+    pad = logits.shape[-1] - v
+    neg = jnp.full(logits.shape[:-1] + (pad,), -1e9, logits.dtype)
+    return jnp.concatenate([logits[..., :v], neg], axis=-1)
+
+
+def kd_loss(student_logits, teacher_logits, cfg: ModelConfig, temperature: float):
+    """Eq. 17: tau^2 * KL( sigma(x_t / tau) || sigma(x_s / tau) )."""
+    t = temperature
+    sl = _mask_pad(student_logits.astype(jnp.float32), cfg) / t
+    tl = _mask_pad(teacher_logits.astype(jnp.float32), cfg) / t
+    pt = jax.nn.softmax(tl, axis=-1)
+    kl = jnp.sum(pt * (jax.nn.log_softmax(tl, axis=-1) - jax.nn.log_softmax(sl, axis=-1)),
+                 axis=-1)
+    return (t * t) * jnp.mean(kl)
+
+
+def teacher_loss(params, batch, cfg: ModelConfig, depth: int):
+    """Eq. 16: plain CE on the current full network."""
+    outs, aux = forward(params, batch, cfg, depth=depth)
+    logits = outs["final"]
+    if cfg.frontend == "vision_stub":
+        logits = logits[:, cfg.frontend_seq:]
+    return cross_entropy(logits, batch["targets"], cfg) + 0.01 * aux
+
+
+def student_loss(params, batch, cfg: ModelConfig, mode: MorphMode,
+                 teacher_logits, lam: float, temperature: float):
+    """Eq. 18: L = lambda * L_GT + (1 - lambda) * L_KD on the subnet."""
+    outs, aux = elastic.morph_forward(params, batch, cfg, mode)
+    logits = outs["final"]
+    if cfg.frontend == "vision_stub":
+        logits = logits[:, cfg.frontend_seq:]
+    ce = cross_entropy(logits, batch["targets"], cfg)
+    kd = kd_loss(logits, teacher_logits, cfg, temperature)
+    return lam * ce + (1.0 - lam) * kd + 0.01 * aux, {"ce": ce, "kd": kd}
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DistillCycleConfig:
+    temperature: float = 2.0  # tau
+    lam: float = 0.5  # lambda
+    gamma: float = 0.8  # Eq. 20 cross-stage decay
+    epochs_per_stage: int = 2
+    steps_per_epoch: int = 10
+    epoch_lr_decay: float = 10.0  # paper line 22: alpha <- alpha / 10 per epoch
+    teacher_steps_ratio: float = 1.0  # teacher steps per student step
+
+
+def default_schedule(cfg: ModelConfig) -> Tuple[MorphMode, ...]:
+    """Depth-ordered morphing schedule covering every deployable path.
+
+    For each exit depth (ascending, ending at full depth) train the reduced
+    widths first, then the full width — the paper's depth- and width-aware
+    schedule.
+    """
+    exits = tuple(e for e in cfg.elastic.exit_layers if 0 < e < cfg.n_groups)
+    depths = exits + (cfg.n_groups,)
+    widths = tuple(sorted(cfg.elastic.width_fractions))
+    sched: List[MorphMode] = []
+    for d in depths:
+        for w in widths:
+            sched.append(MorphMode(depth=d, width=w))
+    return tuple(sched)
+
+
+class DistillCycle:
+    """Runs Algorithm 2 over a shared-weight elastic model."""
+
+    def __init__(self, cfg: ModelConfig, ocfg: OptimizerConfig, dc: DataConfig,
+                 schedule: Optional[Sequence[MorphMode]] = None,
+                 dcfg: Optional[DistillCycleConfig] = None):
+        self.cfg = cfg
+        self.ocfg = ocfg
+        self.dc = dc
+        self.dcfg = dcfg or DistillCycleConfig(
+            temperature=cfg.elastic.distill_temperature,
+            lam=cfg.elastic.distill_lambda,
+            gamma=cfg.elastic.lr_decay_gamma,
+        )
+        self.schedule = tuple(schedule or default_schedule(cfg))
+        self.trained_paths: List[MorphMode] = []
+        self.history: List[Dict] = []
+        self._teacher_steps: Dict[int, Callable] = {}
+        self._student_steps: Dict[str, Callable] = {}
+
+    # -- jitted steps (cached per static depth/mode) -------------------------
+    def _teacher_step(self, depth: int):
+        if depth not in self._teacher_steps:
+            cfg, ocfg = self.cfg, self.ocfg
+
+            @jax.jit
+            def step(params, opt, batch, lr_scale):
+                loss, grads = jax.value_and_grad(
+                    lambda p: teacher_loss(p, batch, cfg, depth))(params)
+                params, opt, _ = apply_updates(params, grads, opt, ocfg, lr_scale)
+                return params, opt, loss
+
+            self._teacher_steps[depth] = step
+        return self._teacher_steps[depth]
+
+    def _student_step(self, mode: MorphMode, teacher_depth: int):
+        key = f"{mode.name}@t{teacher_depth}"
+        if key not in self._student_steps:
+            cfg, ocfg, dcfg = self.cfg, self.ocfg, self.dcfg
+
+            @jax.jit
+            def step(params, opt, batch, lr_scale):
+                t_outs, _ = forward(params, batch, cfg, depth=teacher_depth)
+                t_logits = jax.lax.stop_gradient(t_outs["final"])
+                if cfg.frontend == "vision_stub":
+                    t_logits = t_logits[:, cfg.frontend_seq:]
+
+                def lf(p):
+                    return student_loss(p, batch, cfg, mode, t_logits,
+                                        dcfg.lam, dcfg.temperature)
+
+                (loss, parts), grads = jax.value_and_grad(lf, has_aux=True)(params)
+                params, opt, _ = apply_updates(params, grads, opt, ocfg, lr_scale)
+                return params, opt, loss, parts
+
+            self._student_steps[key] = step
+        return self._student_steps[key]
+
+    # -- main loop (Algorithm 2) ---------------------------------------------
+    def run(self, params, opt_state=None):
+        opt = opt_state or init_opt_state(params, self.ocfg)
+        d = self.dcfg
+        data_step = 0
+        grown_depth = 0
+        for stage, mode in enumerate(self.schedule):
+            grown_depth = max(grown_depth, mode.depth)  # Eq. 19 growth
+            stage_scale = d.gamma ** stage  # Eq. 20
+            t_step = self._teacher_step(grown_depth)
+            s_step = self._student_step(mode, grown_depth)
+            for epoch in range(d.epochs_per_stage):
+                lr_scale = stage_scale / (d.epoch_lr_decay ** epoch)
+                # Phase 1: teacher (full current net, Eq. 16)
+                n_teacher = max(1, int(d.steps_per_epoch * d.teacher_steps_ratio))
+                for _ in range(n_teacher):
+                    batch = make_batch(self.cfg, self.dc, data_step)
+                    data_step += 1
+                    params, opt, t_loss = t_step(params, opt, batch, lr_scale)
+                # Phase 2: student with KD (Eq. 17-18)
+                for _ in range(d.steps_per_epoch):
+                    batch = make_batch(self.cfg, self.dc, data_step)
+                    data_step += 1
+                    params, opt, s_loss, parts = s_step(params, opt, batch, lr_scale)
+                self.history.append({
+                    "stage": stage, "mode": mode.name, "epoch": epoch,
+                    "teacher_loss": float(t_loss), "student_loss": float(s_loss),
+                    "student_ce": float(parts["ce"]), "student_kd": float(parts["kd"]),
+                })
+            self.trained_paths.append(mode)  # merge == identity (shared store)
+        return params, opt
+
+    # -- evaluation ----------------------------------------------------------
+    def eval_modes(self, params, n_batches: int = 4, seed_offset: int = 10_000):
+        """Eval CE for every trained path (paper Figs. 11/12 accuracy axis)."""
+        out = {}
+        for mode in self.schedule:
+            tot = 0.0
+            for i in range(n_batches):
+                batch = make_batch(self.cfg, self.dc, seed_offset + i)
+                outs, _ = elastic.morph_forward(params, batch, self.cfg, mode)
+                lg = outs["final"]
+                if self.cfg.frontend == "vision_stub":
+                    lg = lg[:, self.cfg.frontend_seq:]
+                tot += float(cross_entropy(lg, batch["targets"], self.cfg))
+            out[mode.name] = tot / n_batches
+        return out

@@ -1,0 +1,182 @@
+"""NeuroMorph elastic parameterization: width/depth morphing of a shared net.
+
+The paper's width-wise morphing deactivates a fraction of conv filters per
+layer (clock-gated on the FPGA); depth-wise morphing truncates the network at
+a Layer-Block boundary and branches to an exit head. Here:
+
+* **width**: prefix-slice the *inner* dimensions — attention heads, KV heads,
+  MLP hidden columns, SSD heads — while keeping the d_model residual stream
+  intact (the paper's "preserve data integrity" invariant). For MoE layers
+  the active-expert count ``top_k`` is reduced instead (the per-token filter
+  count analogue). Subnetwork weights are literal prefix views of the full
+  weights, so every path shares one parameter store (single bitstream).
+* **depth**: run only the first ``mode.depth`` scanned layer groups, then a
+  (dedicated-norm) exit head.
+
+Slicing happens *inside* jit: a morphed step function takes the FULL param
+pytree and slices lazily, so switching modes never copies weights — the
+TPU analogue of flipping clock-gate toggles.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ElasticConfig, ModelConfig, MorphMode
+
+
+def check_width(cfg: ModelConfig, w: float) -> None:
+    if not (0.0 < w <= 1.0):
+        raise ValueError(f"width fraction {w} out of (0, 1]")
+    for name, v in (("n_heads", cfg.n_heads), ("n_kv_heads", cfg.n_kv_heads)):
+        if v and abs(v * w - round(v * w)) > 1e-9:
+            raise ValueError(f"{cfg.name}: width {w} does not divide {name}={v}")
+    if cfg.ssm_state:
+        nh = cfg.ssm_nheads
+        if abs(nh * w - round(nh * w)) > 1e-9:
+            raise ValueError(f"{cfg.name}: width {w} does not divide ssm heads={nh}")
+
+
+def morph_config(cfg: ModelConfig, mode: MorphMode) -> ModelConfig:
+    """Config of the subnetwork selected by ``mode`` (full weights untouched)."""
+    check_width(cfg, mode.width)
+    if not (0 < mode.depth <= cfg.n_groups):
+        raise ValueError(f"depth {mode.depth} out of (0, {cfg.n_groups}]")
+    w = mode.width
+    kw: Dict = {}
+    if cfg.n_heads:
+        kw["n_heads"] = int(round(cfg.n_heads * w))
+        kw["n_kv_heads"] = max(1, int(round(cfg.n_kv_heads * w)))
+    if cfg.d_ff:
+        kw["d_ff"] = int(round(cfg.d_ff * w))
+    if cfg.n_experts:
+        kw["top_k"] = max(1, int(round(cfg.top_k * w)))
+    if cfg.ssm_state:
+        nh = int(round(cfg.ssm_nheads * w))
+        kw["ssm_d_inner_override"] = nh * cfg.ssm_head_dim
+    return cfg.scaled(**kw)
+
+
+# ---------------------------------------------------------------------------
+# param slicing (structural, key-driven)
+# ---------------------------------------------------------------------------
+
+
+def _slice_dim(a, size: int, axis: int):
+    """Prefix-slice `a` along `axis`, skipping the leading stack dim."""
+    idx = [slice(None)] * a.ndim
+    idx[axis] = slice(0, size)
+    return a[tuple(idx)]
+
+
+def _slice_attn(p, cfg_m: ModelConfig, stacked: bool):
+    o = 1 if stacked else 0  # stacked leaves carry a leading group axis
+    q, kv = cfg_m.q_dim, cfg_m.kv_dim
+    return {
+        "wq": _slice_dim(p["wq"], q, o + 1),
+        "wk": _slice_dim(p["wk"], kv, o + 1),
+        "wv": _slice_dim(p["wv"], kv, o + 1),
+        "wo": _slice_dim(p["wo"], q, o + 0),
+    }
+
+
+def _slice_mlp(p, cfg_m: ModelConfig, stacked: bool):
+    o = 1 if stacked else 0
+    f = cfg_m.d_ff
+    out = {"wi": _slice_dim(p["wi"], f, o + 1), "wo": _slice_dim(p["wo"], f, o + 0)}
+    if "wg" in p:
+        out["wg"] = _slice_dim(p["wg"], f, o + 1)
+    return out
+
+
+def _slice_ssm(p, cfg_m: ModelConfig, stacked: bool):
+    o = 1 if stacked else 0
+    d_in = cfg_m.ssm_d_inner
+    nh = cfg_m.ssm_nheads
+    return {
+        "w_x": _slice_dim(p["w_x"], d_in, o + 1),
+        "w_z": _slice_dim(p["w_z"], d_in, o + 1),
+        "w_bc": p["w_bc"],
+        "w_dt": _slice_dim(p["w_dt"], nh, o + 1),
+        "conv_x_w": _slice_dim(p["conv_x_w"], d_in, o + 0),
+        "conv_x_b": _slice_dim(p["conv_x_b"], d_in, o + 0),
+        "conv_bc_w": p["conv_bc_w"],
+        "conv_bc_b": p["conv_bc_b"],
+        "A_log": _slice_dim(p["A_log"], nh, o + 0),
+        "D": _slice_dim(p["D"], nh, o + 0),
+        "dt_bias": _slice_dim(p["dt_bias"], nh, o + 0),
+        "ssm_norm": {"scale": _slice_dim(p["ssm_norm"]["scale"], d_in, o + 0)},
+        "out_proj": _slice_dim(p["out_proj"], d_in, o + 0),
+    }
+
+
+def _slice_layer(lp, cfg_m: ModelConfig, stacked: bool):
+    out = dict(lp)
+    if "attn" in lp:
+        out["attn"] = _slice_attn(lp["attn"], cfg_m, stacked)
+    if "cross" in lp:
+        out["cross"] = _slice_attn(lp["cross"], cfg_m, stacked)
+    if "ssm" in lp:
+        out["ssm"] = _slice_ssm(lp["ssm"], cfg_m, stacked)
+    if "mlp" in lp:
+        out["mlp"] = _slice_mlp(lp["mlp"], cfg_m, stacked)
+    # moe: weights untouched (top_k reduction happens in routing)
+    return out
+
+
+def slice_params(params, cfg: ModelConfig, mode: MorphMode):
+    """Params view for ``mode``. Pure slicing — call inside jit for zero-copy."""
+    cfg_m = morph_config(cfg, mode)
+    out = dict(params)
+    out["stack"] = {
+        k: _slice_layer(v, cfg_m, stacked=True) for k, v in params["stack"].items()
+    }
+    if "encoder" in params:
+        # encoder depth is never morphed (cross-KV contract: DESIGN.md), but
+        # width slicing is safe: the encoder's output contract is d_model.
+        out["encoder"] = dict(params["encoder"])
+        out["encoder"]["stack"] = {
+            k: _slice_layer(v, cfg_m, stacked=True)
+            for k, v in params["encoder"]["stack"].items()
+        }
+    return out
+
+
+def morph_forward(params, batch, cfg: ModelConfig, mode: MorphMode, **kw):
+    """Forward through the subnetwork selected by ``mode``."""
+    from repro.models.model import forward  # local import to avoid cycle
+
+    cfg_m = morph_config(cfg, mode)
+    p = slice_params(params, cfg, mode) if mode.width < 1.0 else params
+    return forward(p, batch, cfg_m, depth=mode.depth, **kw)
+
+
+def morph_decode_step(params, cache, tokens, cfg: ModelConfig, mode: MorphMode):
+    """Decode step through the subnetwork selected by ``mode``.
+
+    The cache must have been created for the *morphed* dims (a serving
+    deployment allocates one cache per active mode; modes share weights, not
+    KV state — same as the paper's per-subnet output heads).
+    """
+    from repro.models.model import decode_step
+
+    cfg_m = morph_config(cfg, mode)
+    p = slice_params(params, cfg, mode) if mode.width < 1.0 else params
+    return decode_step(p, cache, tokens, cfg_m, depth=mode.depth)
+
+
+def flops_fraction(cfg: ModelConfig, mode: MorphMode) -> float:
+    """Active-FLOPs fraction of a mode vs the full model (paper Fig. 11/12)."""
+    full = cfg.n_active_params()
+    cfg_m = morph_config(cfg, mode)
+    # per-group active params scale linearly with depth
+    body_full = full - _embed_params(cfg)
+    body_m = (cfg_m.n_active_params() - _embed_params(cfg_m)) * mode.depth / cfg.n_groups
+    return (body_m + _embed_params(cfg)) / (body_full + _embed_params(cfg))
+
+
+def _embed_params(cfg: ModelConfig) -> int:
+    pc = cfg.param_counts()
+    return pc["embed"] + pc["unembed"]

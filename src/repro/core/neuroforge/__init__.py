@@ -1,0 +1,28 @@
+from repro.core.neuroforge.analytical import CostReport, estimate, forward_costs, kv_cache_bytes
+from repro.core.neuroforge.hw import V5E, HardwareSpec, dtype_bytes
+from repro.core.neuroforge.moga import (
+    Constraints,
+    Individual,
+    MogaResult,
+    pareto_is_consistent,
+    run_moga,
+)
+from repro.core.neuroforge.space import DesignPoint, DesignSpace, valid_tp
+
+__all__ = [
+    "CostReport",
+    "estimate",
+    "forward_costs",
+    "kv_cache_bytes",
+    "V5E",
+    "HardwareSpec",
+    "dtype_bytes",
+    "Constraints",
+    "Individual",
+    "MogaResult",
+    "pareto_is_consistent",
+    "run_moga",
+    "DesignPoint",
+    "DesignSpace",
+    "valid_tp",
+]

@@ -1,0 +1,26 @@
+"""Target-hardware constants (TPU v5e) used by every analytical model.
+
+These are the §Roofline constants from the assignment: 197 TFLOP/s bf16 per
+chip, 819 GB/s HBM, ~50 GB/s/link ICI. The FPGA paper's resource vector
+(DSP / LUT / BRAM slices) maps onto (peak FLOP/s, HBM bytes, ICI bandwidth).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    hbm_bytes: float = 16e9  # capacity per chip
+    ici_bw: float = 50e9  # bytes/s per link (one active link per phase, worst case)
+    tdp_watts: float = 200.0  # per chip, for Table-VI-style J/inference estimates
+
+
+V5E = HardwareSpec()
+
+
+def dtype_bytes(name: str) -> int:
+    return {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}[name]

@@ -1,0 +1,3 @@
+from repro.data.pipeline import BigramTask, DataConfig, PrefetchIterator, make_batch
+
+__all__ = ["BigramTask", "DataConfig", "PrefetchIterator", "make_batch"]

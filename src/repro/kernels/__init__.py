@@ -1,0 +1,16 @@
+from repro.kernels.flash_decode import flash_decode, flash_decode_ref
+from repro.kernels.ops import (
+    default_interpret,
+    flash_attention_bshd,
+    morph_matmul,
+    ssd_scan_bshn,
+)
+
+__all__ = [
+    "default_interpret",
+    "flash_attention_bshd",
+    "flash_decode",
+    "flash_decode_ref",
+    "morph_matmul",
+    "ssd_scan_bshn",
+]

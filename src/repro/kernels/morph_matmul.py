@@ -1,0 +1,93 @@
+"""morph_matmul — width-morphable blocked matmul (NeuroMorph clock-gate analogue).
+
+The FPGA design clock-gates de-activated filters. A TPU MXU cannot gate
+lanes, but a Pallas kernel *can* skip whole tiles: ``active_n`` / ``active_k``
+arrive via scalar prefetch, and every (bm x bn) output tile or (bk) reduction
+step that lies beyond the active width issues **no MXU op** (``pl.when``).
+Because the grid is fixed at compile time, ONE executable serves every width
+— switching morph modes at runtime is just a different scalar operand.
+
+Tiles straddling the active boundary are column/row-masked in-register, so
+results are exact for any (not necessarily tile-aligned) active width.
+
+Layout: x (M, K) @ w (K, N) -> (M, N), zero-filled beyond active_n.
+Block shapes default to MXU-native (128, 128, 128) tiles in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(active_ref, x_ref, w_ref, o_ref, acc_ref, *, bm, bk, bn, nk):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    active_n = active_ref[0]
+    active_k = active_ref[1]
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n_live = j * bn < active_n  # this output tile has live columns
+    k_live = k * bk < active_k  # this reduction step has live rows
+
+    @pl.when(jnp.logical_and(n_live, k_live))
+    def _compute():
+        x_blk = x_ref[...]
+        w_blk = w_ref[...]
+        # mask the partial boundary block of the contraction dim
+        k_ids = k * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+        w_blk = jnp.where(k_ids < active_k, w_blk, jnp.zeros_like(w_blk))
+        acc_ref[...] += jnp.dot(x_blk, w_blk, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _write():
+        n_ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+        out = jnp.where(n_ids < active_n, acc_ref[...], jnp.zeros_like(acc_ref))
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def morph_matmul(x: jnp.ndarray, w: jnp.ndarray,
+                 active_n: Optional[jnp.ndarray] = None,
+                 active_k: Optional[jnp.ndarray] = None,
+                 *, block: Tuple[int, int, int] = (128, 128, 128),
+                 interpret: bool = True) -> jnp.ndarray:
+    """x: (M, K) or (B, M, K); w: (K, N). active_* are dynamic scalars."""
+    if x.ndim == 3:
+        return jax.vmap(lambda xb: morph_matmul(xb, w, active_n, active_k,
+                                                block=block, interpret=interpret))(x)
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    bm, bk, bn = (min(block[0], M), min(block[1], K), min(block[2], N))
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (
+        f"dims {(M, K, N)} must tile by {(bm, bk, bn)}")
+    nk = K // bk
+    an = jnp.asarray(N if active_n is None else active_n, jnp.int32).reshape(1)
+    ak = jnp.asarray(K if active_k is None else active_k, jnp.int32).reshape(1)
+    scalars = jnp.concatenate([an, ak])
+
+    grid = (M // bm, N // bn, nk)
+    kern = functools.partial(_kernel, bm=bm, bk=bk, bn=bn, nk=nk)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k, s: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k, s: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, s: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern, grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(scalars, x, w)

@@ -1,0 +1,18 @@
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.steps import (
+    init_train_state,
+    make_decode_fn,
+    make_prefill_step,
+    make_train_step,
+    to_microbatches,
+)
+
+__all__ = [
+    "make_debug_mesh",
+    "make_production_mesh",
+    "init_train_state",
+    "make_decode_fn",
+    "make_prefill_step",
+    "make_train_step",
+    "to_microbatches",
+]

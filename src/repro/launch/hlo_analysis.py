@@ -1,0 +1,450 @@
+"""Post-SPMD HLO analysis: loop-aware FLOPs, HBM traffic, collective bytes.
+
+``compiled.cost_analysis()`` sums op costs over the module TEXT — a
+``lax.scan`` body (one while loop) is counted once, not trip-count times, so
+scanned-layer models under-report FLOPs/bytes by ~n_layers x. This module
+re-derives all three roofline inputs from the compiled HLO with loop
+accounting:
+
+  1. parse every computation into an op table (name -> shape/dtype/opcode/
+     operands/attrs),
+  2. FLOPs: 2 * prod(result dims) * prod(contraction dims) for every
+     ``dot``; convolutions likewise; elementwise ops at 1 FLOP/element
+     (they are <1% for transformer workloads),
+  3. HBM traffic: post-fusion op boundaries — for each compute op, result
+     bytes + operand bytes (fusion internals excluded: on-chip),
+  4. collectives: ring-model wire bytes per chip,
+  5. while loops: trip count from the condition computation's largest
+     integer constant (lax.scan lowers to `i < K`), multiplier applied to
+     everything inside.
+
+All numbers are PER DEVICE (the compiled module is the per-partition SPMD
+program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# ops that represent no HBM data movement of their own
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call", "custom-call", "copy-start", "copy-done", "opt-barrier",
+}
+
+# ops whose operand/result boundaries are genuine HBM traffic on a TPU build.
+# Standalone elementwise/layout ops (add, transpose, broadcast, convert, copy,
+# ...) are treated as fused into these boundaries: the CPU lowering leaves
+# them unfused, but XLA:TPU fuses them, so counting them would overstate the
+# memory roofline term by ~10x (convention recorded in DESIGN.md).
+_MOVE_OPS = {
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "sort",
+    "scatter", "select-and-scatter", "rng", "rng-bit-generator", "cholesky",
+    "triangular-solve", "fft", "map", "iota",
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_OP = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_A = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_B = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_shapes(types: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(types):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _shapes_bytes(shapes) -> float:
+    total = 0.0
+    for dt, shape in shapes:
+        total += _DTYPE_BYTES[dt] * (math.prod(shape) if shape else 1)
+    return total
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_A.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_B.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return world
+
+
+def _wire_bytes(op: str, result_bytes: float, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    r = (g - 1) / g
+    if op.startswith("all-reduce"):
+        return 2.0 * r * result_bytes
+    if op.startswith("all-gather"):
+        return r * result_bytes
+    if op == "reduce-scatter":
+        return (g - 1) * result_bytes
+    if op == "all-to-all":
+        return r * result_bytes
+    return result_bytes  # collective-permute
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op] = field(default_factory=dict)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)  # (body, cond)
+    fusion_calls: List[str] = field(default_factory=list)
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+def _parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry = None
+    for line in hlo.splitlines():
+        line = _COMMENT.sub("", line)
+        if not line.startswith(" ") and line.rstrip().endswith("{") and "->" in line:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                current = Computation(m.group(1))
+                comps[current.name] = current
+                if line.startswith("ENTRY"):
+                    entry = current.name
+                continue
+        if current is None:
+            continue
+        m = _OP.match(line)
+        if not m:
+            continue
+        name, types, opcode, rest = m.groups()
+        # operand names: inside the parens, before attrs (split at first ')')
+        depth = 0
+        args_end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    args_end = i
+                    break
+                depth -= 1
+        args = rest[:args_end]
+        operands = _OPERAND.findall(args)
+        op = Op(name=name, opcode=opcode, shapes=_parse_shapes(types),
+                operands=operands, line=line)
+        current.ops[name] = op
+        if opcode == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            cm = re.search(r"condition=%?([\w.\-]+)", line)
+            if bm and cm:
+                current.whiles.append((bm.group(1), cm.group(1)))
+        if opcode == "fusion":
+            fm = re.search(r"calls=%?([\w.\-]+)", line)
+            if fm:
+                current.fusion_calls.append(fm.group(1))
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    comps["__entry__"] = comps.get(entry, Computation("empty"))
+    return comps
+
+
+_PARAM_NUM = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_bytes(op: Op, comp: "Computation",
+                  comps: Dict[str, "Computation"]) -> float:
+    """HBM traffic of a fusion = bytes it actually reads + writes.
+
+    Fusion emitters read only the input regions they touch: an operand that
+    is exclusively dynamic-sliced inside the callee contributes the slice
+    size, not the full (possibly multi-GB loop-carried) buffer. A fusion
+    whose root is dynamic-update-slice into a same-shaped operand is an
+    in-place update: the big buffer is aliased (write = update size).
+    """
+    result_b = _shapes_bytes(op.shapes)
+    fm = re.search(r"calls=%?([\w.\-]+)", op.line)
+    callee = comps.get(fm.group(1)) if fm else None
+    operand_sizes = []
+    for o in op.operands:
+        src = comp.ops.get(o)
+        operand_sizes.append(_shapes_bytes(src.shapes) if src is not None else 0.0)
+    if callee is None:
+        return result_b + sum(operand_sizes)
+
+    # map parameter number -> op name, and find per-param consumers
+    param_name = {}
+    for cop in callee.ops.values():
+        if cop.opcode == "parameter":
+            m = _PARAM_NUM.search(cop.line)
+            if m:
+                param_name[int(m.group(1))] = cop.name
+    consumers: Dict[str, List[Op]] = {}
+    for cop in callee.ops.values():
+        for o in cop.operands:
+            consumers.setdefault(o, []).append(cop)
+
+    read_b = 0.0
+    for i, full_sz in enumerate(operand_sizes):
+        pname = param_name.get(i)
+        cons = consumers.get(pname, []) if pname else []
+        if cons and all(c.opcode in ("dynamic-slice", "dynamic-update-slice")
+                        for c in cons):
+            sliced = 0.0
+            for c in cons:
+                if c.opcode == "dynamic-slice":
+                    sliced += _shapes_bytes(c.shapes)
+                else:  # DUS: the big operand is aliased, read ~ update size
+                    upd = callee.ops.get(c.operands[1]) if len(c.operands) > 1 else None
+                    sliced += _shapes_bytes(upd.shapes) if upd else 0.0
+            read_b += min(sliced, full_sz)
+        else:
+            read_b += full_sz
+
+    # root DUS -> in-place write of the update region only
+    root = None
+    for cop in callee.ops.values():
+        if "ROOT" in cop.line:
+            root = cop
+    write_b = result_b
+    if root is not None and root.opcode == "dynamic-update-slice":
+        upd = callee.ops.get(root.operands[1]) if len(root.operands) > 1 else None
+        if upd is not None:
+            write_b = _shapes_bytes(upd.shapes)
+    return read_b + write_b
+
+
+def _is_bf16_upcast(op: Op, comp: "Computation",
+                    comps: Dict[str, "Computation"]) -> bool:
+    """True if the collective's f32 operand is produced by a bf16->f32
+    upcast (direct ``convert`` or a fusion whose body converts bf16 data)."""
+    for name in op.operands[:2]:
+        src = comp.ops.get(name)
+        hops = 0
+        while src is not None and hops < 3:
+            if src.opcode == "convert":
+                inner = comp.ops.get(src.operands[0]) if src.operands else None
+                if inner and inner.shapes and inner.shapes[0][0] == "bf16":
+                    return True
+                return False
+            if src.opcode == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", src.line)
+                callee = comps.get(fm.group(1)) if fm else None
+                if callee is not None:
+                    has_convert = any(o.opcode == "convert" for o in callee.ops.values())
+                    has_bf16 = any(o.shapes and o.shapes[0][0] == "bf16"
+                                   for o in callee.ops.values())
+                    if has_convert and has_bf16:
+                        return True
+                return False
+            if src.opcode in ("copy", "bitcast", "get-tuple-element", "transpose",
+                              "reshape"):
+                src = comp.ops.get(src.operands[0]) if src.operands else None
+                hops += 1
+                continue
+            return False
+    return False
+
+
+def _dot_flops(op: Op, table: Dict[str, Op]) -> float:
+    result_elems = sum(math.prod(s) if s else 1 for _, s in op.shapes)
+    lhs = table.get(op.operands[0]) if op.operands else None
+    contract = 1
+    m = _LHS_CONTRACT.search(op.line)
+    if m and lhs and lhs.shapes:
+        dims = [int(x) for x in m.group(1).split(",") if x]
+        shape = lhs.shapes[0][1]
+        for d in dims:
+            if d < len(shape):
+                contract *= shape[d]
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(op: Op, table: Dict[str, Op]) -> float:
+    """2 * result_elems * kernel_volume upper bound (convs are rare here —
+    the SSM depthwise conv lowers to einsum/dot in this codebase)."""
+    result_elems = sum(math.prod(s) if s else 1 for _, s in op.shapes)
+    rhs = table.get(op.operands[1]) if len(op.operands) > 1 else None
+    k = math.prod(rhs.shapes[0][1]) if rhs and rhs.shapes else 1
+    return 2.0 * result_elems * k
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_result_bytes: float = 0.0
+    per_op_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    per_op_count: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    while_trips: List[int] = field(default_factory=list)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes,
+            "wire_bytes_per_chip": self.coll_wire_bytes,
+            "coll_result_bytes": self.coll_result_bytes,
+            "per_op_bytes": dict(self.per_op_bytes),
+            "per_op_count": dict(self.per_op_count),
+            "while_trips": self.while_trips,
+        }
+
+
+def analyze_hlo(hlo: str, world: int) -> HloCost:
+    comps = _parse_module(hlo)
+    entry = comps["__entry__"]
+    cost = HloCost()
+
+    def trip_count(cond_name: str) -> int:
+        comp = comps.get(cond_name)
+        if not comp:
+            return 1
+        consts = []
+        for op in comp.ops.values():
+            consts += [int(x) for x in _CONST_INT.findall(op.line)]
+        return max(consts) if consts else 1
+
+    stack: List[str] = []
+
+    def walk(comp: Computation, mult: float):
+        if comp.name in stack:
+            return
+        stack.append(comp.name)
+        handled = set()
+        for body, cond in comp.whiles:
+            tc = trip_count(cond)
+            cost.while_trips.append(tc)
+            if body in comps:
+                walk(comps[body], mult * tc)
+            handled.add(body)
+            handled.add(cond)
+        for op in comp.ops.values():
+            oc = op.opcode
+            if oc in _FREE_OPS:
+                # still walk call/conditional targets once
+                if oc in ("call", "conditional", "custom-call"):
+                    for m2 in re.finditer(r"(?:to_apply|calls|branch_computations)=\{?%?([\w.\-,%\s]+)\}?", op.line):
+                        for callee in re.findall(r"[\w.\-]+", m2.group(1)):
+                            if callee in comps and callee not in handled:
+                                walk(comps[callee], mult)
+                                handled.add(callee)
+                continue
+            base = oc.replace("-start", "")
+            if base in COLLECTIVE_OPS:
+                if oc.endswith("-done"):
+                    continue
+                rb = _shapes_bytes(op.shapes)
+                # XLA:CPU upcasts bf16 dots to f32, so weight gathers move
+                # f32 here where a TPU build moves bf16. If the collective's
+                # operand chain is a bf16->f32 convert, count bf16 wire size.
+                if op.shapes and op.shapes[0][0] == "f32" and \
+                        _is_bf16_upcast(op, comp, comps):
+                    rb *= 0.5
+                g = _group_size(op.line, world)
+                wb = _wire_bytes(base, rb, g)
+                cost.coll_wire_bytes += mult * wb
+                cost.coll_result_bytes += mult * rb
+                cost.per_op_bytes[base] += mult * wb
+                cost.per_op_count[base] += int(mult)
+                cost.bytes += mult * rb  # collectives also touch HBM
+                continue
+            result_b = _shapes_bytes(op.shapes)
+            if oc == "dynamic-update-slice":
+                # in-place update: traffic = write + read of the *slice* only
+                upd = comp.ops.get(op.operands[1]) if len(op.operands) > 1 else None
+                slice_b = _shapes_bytes(upd.shapes) if upd else 0.0
+                cost.bytes += mult * 2.0 * slice_b
+                continue
+            if oc in ("dynamic-slice", "gather", "slice"):
+                # read + write of the slice; the full operand is not streamed
+                cost.bytes += mult * 2.0 * result_b
+                continue
+            if oc not in _MOVE_OPS:
+                # fused-on-TPU elementwise/layout op: FLOPs only
+                cost.flops += mult * sum(
+                    math.prod(s) if s else 1 for _, s in op.shapes)
+                continue
+            if oc == "fusion":
+                cost.bytes += mult * _fusion_bytes(op, comp, comps)
+                continue
+            operand_b = 0.0
+            for o in op.operands:
+                src = comp.ops.get(o)
+                if src is not None:
+                    operand_b += _shapes_bytes(src.shapes)
+            cost.bytes += mult * (result_b + operand_b)
+            if oc == "dot":
+                cost.flops += mult * _dot_flops(op, comp.ops)
+            elif oc == "convolution":
+                cost.flops += mult * _conv_flops(op, comp.ops)
+            else:
+                # elementwise/reduce etc: 1 flop per result element
+                cost.flops += mult * sum(
+                    math.prod(s) if s else 1 for _, s in op.shapes)
+        stack.pop()
+
+    walk(entry, 1.0)
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# backwards-compatible collective-only interface
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CollectiveStats:
+    per_op_bytes: Dict[str, float]
+    per_op_count: Dict[str, int]
+    result_bytes: float
+
+    @property
+    def wire_bytes_per_chip(self) -> float:
+        return sum(self.per_op_bytes.values())
+
+    def as_dict(self) -> Dict:
+        return {
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "result_bytes": self.result_bytes,
+            "per_op_bytes": dict(self.per_op_bytes),
+            "per_op_count": dict(self.per_op_count),
+        }
+
+
+def analyze_collectives(hlo: str, world: int) -> CollectiveStats:
+    cost = analyze_hlo(hlo, world)
+    return CollectiveStats(per_op_bytes=cost.per_op_bytes,
+                           per_op_count=cost.per_op_count,
+                           result_bytes=cost.coll_result_bytes)

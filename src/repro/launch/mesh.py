@@ -1,0 +1,23 @@
+"""Production mesh construction (assignment-mandated shapes)."""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    # pin Auto axis types: we rely on GSPMD propagation (jax 0.9 default flips)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Small mesh for CI-scale dry-run tests (8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)

@@ -1,0 +1,86 @@
+"""Re-run the HLO cost walker over saved dry-run HLO dumps (no recompile).
+
+The dry-run saves ``compiled.as_text()`` per cell (``--save-hlo``); when the
+cost model in ``hlo_analysis`` evolves, this tool refreshes the JSON records
+in place:
+
+    PYTHONPATH=src python -m repro.launch.reanalyze \
+        --results benchmarks/results/dryrun.json \
+        --hlo benchmarks/results/hlo
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import os
+
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.core.neuroforge.hw import V5E
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def reanalyze_record(rec, hlo_dir: str) -> bool:
+    if rec.get("status") != "ok" or "hlo_file" not in rec:
+        return False
+    path = os.path.join(hlo_dir, rec["hlo_file"])
+    if not os.path.exists(path):
+        return False
+    with gzip.open(path, "rt") as f:
+        hlo = f.read()
+    chips = 1
+    for d in rec["mesh"].split("x"):
+        chips *= int(d)
+    hc = analyze_hlo(hlo, chips)
+    rec["cost"].update(flops_per_device=hc.flops, bytes_per_device=hc.bytes,
+                       while_trips=hc.while_trips)
+    rec["collectives"] = {
+        "wire_bytes_per_chip": hc.coll_wire_bytes,
+        "result_bytes": hc.coll_result_bytes,
+        "per_op_bytes": dict(hc.per_op_bytes),
+        "per_op_count": dict(hc.per_op_count),
+    }
+    compute_s = hc.flops / V5E.peak_flops
+    memory_s = hc.bytes / V5E.hbm_bw
+    coll_s = hc.coll_wire_bytes / V5E.ici_bw
+    r = rec["roofline"]
+    model_flops = r["model_flops"]
+    hlo_global = hc.flops * chips
+    step = max(compute_s, memory_s, coll_s)
+    ideal = model_flops / (chips * V5E.peak_flops)
+    r.update(compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+             dominant=max(
+                 ("compute", compute_s), ("memory", memory_s),
+                 ("collective", coll_s), key=lambda kv: kv[1])[0],
+             hlo_flops_global=hlo_global,
+             useful_ratio=model_flops / hlo_global if hlo_global else 0.0,
+             ideal_s=ideal, step_s=step,
+             roofline_fraction=ideal / step if step > 0 else 0.0)
+    return True
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default="benchmarks/results/dryrun.json")
+    ap.add_argument("--hlo", default="benchmarks/results/hlo")
+    args = ap.parse_args(argv)
+    with open(args.results) as f:
+        results = json.load(f)
+    n = 0
+    for key, rec in results.items():
+        if reanalyze_record(rec, args.hlo):
+            n += 1
+            r = rec["roofline"]
+            print(f"{key}: dom={r['dominant']} frac={r['roofline_fraction']:.4f} "
+                  f"compute={r['compute_s']*1e3:.1f}ms memory={r['memory_s']*1e3:.1f}ms "
+                  f"coll={r['collective_s']*1e3:.1f}ms")
+    tmp = args.results + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    os.replace(tmp, args.results)
+    print(f"reanalyzed {n} records")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,111 @@
+"""Step functions (train / prefill / decode) with microbatching and remat.
+
+These are the functions the dry-run lowers and the drivers jit. They are
+pure (state, batch) -> (state, metrics) pytree functions; sharding is
+attached by the caller via in_shardings + the activation-constraint context.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MorphMode
+from repro.core import elastic
+from repro.models.model import decode_step as _decode_step
+from repro.models.model import loss_fn, prefill
+from repro.optim import OptimizerConfig, apply_updates, init_opt_state
+
+
+def to_microbatches(x, mb: int):
+    """(B, ...) -> (mb, B/mb, ...) with each microbatch spanning all batch
+    shards (strided split keeps per-device row counts equal)."""
+    B = x.shape[0]
+    assert B % mb == 0, (B, mb)
+    return x.reshape(B // mb, mb, *x.shape[1:]).swapaxes(0, 1)
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimizerConfig, *,
+                    microbatches: int = 1, remat: str = "full",
+                    lr_schedule: Optional[Callable] = None,
+                    grad_shardings=None, grad_dtype: str = "float32") -> Callable:
+    """Build a (state, batch) -> (state, metrics) step.
+
+    ``grad_shardings`` (a pytree of NamedSharding matching params) constrains
+    the gradient accumulator: without it GSPMD may replicate the f32
+    accumulator and all-gather full gradients every microbatch (a 10-100x
+    collective blowup observed on the 340B dry-run). ``grad_dtype`` selects
+    the reduction dtype (bf16 halves cross-pod gradient traffic; the
+    accumulator itself stays f32 when microbatching).
+    """
+    sched = lr_schedule or (lambda step: 1.0)
+    gdt = jnp.dtype(grad_dtype)
+
+    def _constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, grad_shardings)
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+
+        def mb_grads(p, mb_batch):
+            (loss, parts), grads = jax.value_and_grad(
+                lambda q: loss_fn(q, mb_batch, cfg, remat=remat), has_aux=True)(p)
+            grads = jax.tree_util.tree_map(lambda g: g.astype(gdt), grads)
+            return loss, _constrain(grads)
+
+        if microbatches == 1:
+            loss, grads = mb_grads(params, batch)
+        else:
+            mbs = jax.tree_util.tree_map(
+                lambda x: to_microbatches(x, microbatches), batch)
+            g0 = _constrain(jax.tree_util.tree_map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), params))
+
+            def body(carry, mb_batch):
+                g_acc, l_acc = carry
+                loss, grads = mb_grads(params, mb_batch)
+                g_acc = _constrain(jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads))
+                return (g_acc, l_acc + loss), None
+
+            (g_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g, p: (g / microbatches).astype(p.dtype), g_sum, params)
+            loss = l_sum / microbatches
+
+        params, opt, metrics = apply_updates(params, grads, opt, ocfg,
+                                             sched(opt.step))
+        return {"params": params, "opt": opt}, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, remat: str = "none") -> Callable:
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, remat=remat)
+
+    return prefill_step
+
+
+def make_decode_fn(cfg: ModelConfig, mode: Optional[MorphMode] = None) -> Callable:
+    """serve_step: one token for every sequence in the batch."""
+    if mode is None or (mode.width == 1.0 and mode.depth == cfg.n_groups):
+        def serve_step(params, cache, tokens):
+            return _decode_step(params, cache, tokens, cfg)
+    else:
+        def serve_step(params, cache, tokens):
+            return elastic.morph_decode_step(params, cache, tokens, cfg, mode)
+
+    return serve_step
+
+
+def init_train_state(key, cfg: ModelConfig, ocfg: OptimizerConfig) -> Dict:
+    from repro.models.model import init_params
+
+    params = init_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(params, ocfg)}

@@ -1,0 +1,21 @@
+from repro.models.model import (
+    cross_entropy,
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    pos_kind,
+    prefill,
+)
+
+__all__ = [
+    "cross_entropy",
+    "decode_step",
+    "forward",
+    "init_decode_cache",
+    "init_params",
+    "loss_fn",
+    "pos_kind",
+    "prefill",
+]

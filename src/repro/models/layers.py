@@ -1,0 +1,394 @@
+"""Core transformer layers: norms, positions, MLPs, GQA attention.
+
+Everything is functional: ``init_*`` builds a param subtree, ``apply`` style
+functions consume (params, inputs). Activations run in ``cfg.dtype``; params
+are stored in ``cfg.param_dtype``. All matmuls accumulate in f32
+(``preferred_element_type``) — the TPU MXU native mode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key, shape, in_axis: int = 0, scale: float = 1.0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (maxtext-style)."""
+    fan_in = shape[in_axis] if in_axis >= 0 else int(np.prod(shape[:-1]))
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def matmul(x, w, dtype):
+    if _BF16_GRAD_MATMUL:
+        return _matmul_bf16g(x.astype(dtype), w.astype(dtype)).astype(dtype)
+    return jax.lax.dot_general(
+        x, w.astype(dtype), (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(dtype)
+
+
+# --- bf16-cotangent matmul (beyond-paper §Perf lever) -----------------------
+#
+# The default transpose rule leaves dW in f32 and GSPMD reduces it over the
+# token axes *in f32* (2x wire). This custom VJP downcasts dW to the weight
+# dtype immediately after the backward dot, so the cross-shard reduction
+# happens at bf16. Enabled via ``use_bf16_grad_matmul`` (dry-run knob).
+
+_BF16_GRAD_MATMUL = False
+
+
+def set_bf16_grad_matmul(on: bool) -> None:
+    global _BF16_GRAD_MATMUL
+    _BF16_GRAD_MATMUL = on
+
+
+@jax.custom_vjp
+def _matmul_bf16g(x, w):
+    return jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _matmul_bf16g_fwd(x, w):
+    return _matmul_bf16g(x, w), (x, w)
+
+
+def _matmul_bf16g_bwd(res, dy):
+    x, w = res
+    dy = dy.astype(x.dtype)
+    dx = jax.lax.dot_general(dy, w, (((dy.ndim - 1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32).astype(x.dtype)
+    # contract all leading (token) dims of x against dy. The dot's result
+    # type IS the cross-shard reduction dtype under GSPMD (a later convert
+    # cannot be hoisted above the psum without changing semantics), so emit
+    # bf16 directly — the industry-standard bf16 gradient reduction.
+    lead = tuple(range(x.ndim - 1))
+    dw = jax.lax.dot_general(x, dy, ((lead, lead), ((), ())),
+                             preferred_element_type=w.dtype)
+    return dx, dw.astype(w.dtype)
+
+
+_matmul_bf16g.defvjp(_matmul_bf16g_fwd, _matmul_bf16g_bwd)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    pd = _dtype(cfg.param_dtype)
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), pd), "bias": jnp.zeros((d,), pd)}
+    return {"scale": jnp.ones((d,), pd)}
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+        y = (x - mean) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """Apply rotary embeddings. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions, d: int):
+    """Absolute sinusoidal positions (whisper-style). positions: (..., S)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (math.log(10000.0) / max(half - 1, 1)))
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pd = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (d, f), dtype=pd), "wo": dense_init(ks[1], (f, d), dtype=pd)}
+    if cfg.activation == "swiglu":
+        p["wg"] = dense_init(ks[2], (d, f), dtype=pd)
+    return p
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    h = matmul(x, params["wi"], dt)
+    if cfg.activation == "swiglu":
+        g = matmul(x, params["wg"], dt)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * h
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:  # gelu
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    return matmul(h, params["wo"], dt)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full / sliding window; train, prefill, decode)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e9
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d = cfg.d_model
+    pd = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.q_dim), dtype=pd),
+        "wk": dense_init(ks[1], (d, cfg.kv_dim), dtype=pd),
+        "wv": dense_init(ks[2], (d, cfg.kv_dim), dtype=pd),
+        "wo": dense_init(ks[3], (cfg.q_dim, d), dtype=pd),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _attn_mask(q_pos, k_pos, causal: bool, window: int):
+    """(..., Sq, Sk) additive mask."""
+    m = jnp.zeros(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), jnp.float32)
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    m = jnp.where(dk < 0, NEG_INF, m)  # unwritten / padded slots carry pos < 0
+    if causal:
+        m = jnp.where(dk > dq, NEG_INF, m)
+    if window > 0:
+        m = jnp.where(dk <= dq - window, NEG_INF, m)
+    return m
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q: (B,Sq,H,hd), k: (B,Sk,KV,hd) -> (B,KV,H/KV,Sq,Sk) f32."""
+    groups = cfg.n_heads // max(cfg.n_kv_heads, 1)
+    B, Sq, H, hd = q.shape
+    qg = q.reshape(B, Sq, cfg.n_kv_heads, groups, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    return s / math.sqrt(hd)
+
+
+def _gqa_out(w, v, cfg: ModelConfig):
+    """w: (B,KV,G,Sq,Sk) f32, v: (B,Sk,KV,hd) -> (B,Sq,H,hd).
+
+    v stays in its storage dtype (bf16): upcasting the whole cache to f32
+    would double the decode HBM stream; the MXU accumulates in f32 via
+    preferred_element_type regardless.
+    """
+    B = w.shape[0]
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, o.shape[1], cfg.n_heads, cfg.head_dim)
+
+
+def attention_full(q, k, v, cfg: ModelConfig, q_pos, k_pos, causal=True):
+    """Plain einsum attention (used for short sequences)."""
+    s = _gqa_scores(q, k, cfg)
+    mask = _attn_mask(q_pos, k_pos, causal, cfg.sliding_window)
+    s = s + mask[:, None, None] if mask.ndim == 3 else s + mask
+    w = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(w, v, cfg).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, cfg: ModelConfig, q_pos, k_pos, causal=True):
+    """Blockwise (flash-style) attention in pure JAX.
+
+    Scans over KV chunks carrying running (max, sum, acc) so peak memory is
+    O(Sq * chunk) instead of O(Sq * Sk). This is the default for long
+    sequences in dry-run lowering (honest FLOPs, bounded memory); the Pallas
+    kernel in ``repro.kernels.flash_attention`` is the TPU-native fast path.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    chunk = min(cfg.attn_chunk, Sk)
+    n_chunks = (Sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, pad),), constant_values=-10**9)
+    kc = k.reshape(B, n_chunks, chunk, cfg.n_kv_heads, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, cfg.n_kv_heads, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, chunk)
+    groups = H // max(cfg.n_kv_heads, 1)
+    qg = q.reshape(B, Sq, cfg.n_kv_heads, groups, hd)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_i, v_i, p_i = xs
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_i, preferred_element_type=jnp.float32)
+        s = s / math.sqrt(hd)
+        mask = _attn_mask(q_pos, p_i, causal, cfg.sliding_window)
+        s = s + mask  # (B?,Sq,chunk) broadcast over (b,k,g,..)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(v_i.dtype), v_i,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, cfg.n_kv_heads, groups, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, cfg.n_kv_heads, groups, Sq), jnp.float32)
+    a0 = jnp.zeros((B, cfg.n_kv_heads, groups, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def mha(params, x, cfg: ModelConfig, positions, *, kv_x=None, kv_positions=None,
+        causal=True):
+    """Full-sequence attention (train/prefill). Returns (out, (k, v))."""
+    dt = x.dtype
+    q = _split_heads(matmul(x, params["wq"], dt), cfg.n_heads, cfg.head_dim)
+    kv_in = x if kv_x is None else kv_x
+    k = _split_heads(matmul(kv_in, params["wk"], dt), cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(matmul(kv_in, params["wv"], dt), cfg.n_kv_heads, cfg.head_dim)
+    kpos = positions if kv_positions is None else kv_positions
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kpos, cfg.rope_theta)
+    Sk = k.shape[1]
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "chunked" if Sk > 2048 else "einsum"
+    fn = attention_chunked if impl == "chunked" else attention_full
+    out = fn(q, k, v, cfg, positions, kpos, causal=causal)
+    out = matmul(out.reshape(out.shape[0], out.shape[1], cfg.q_dim), params["wo"], dt)
+    return out, (k, v)
+
+
+# --- decode path with KV cache ---------------------------------------------
+
+
+def quantize_kv(x):
+    """int8 per-(batch,pos,head) absmax quantization."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32) / 127.0
+    q = jnp.round(x.astype(jnp.float32) / jnp.maximum(scale, 1e-8)).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, dtype):
+    """KV cache for one attention layer. SWA uses a rolling window buffer."""
+    window = cfg.sliding_window
+    s = min(seq, window) if window else seq
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_quant:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.bfloat16),
+            "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.bfloat16),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False):
+    """One-token decode. x: (B,1,d); cache dict; pos: scalar int32.
+
+    Returns (out, new_cache). For cross-attention the cache holds precomputed
+    encoder K/V and is returned unchanged.
+    """
+    dt = x.dtype
+    B = x.shape[0]
+    q = _split_heads(matmul(x, params["wq"], dt), cfg.n_heads, cfg.head_dim)
+    if cfg.use_rope and not cross:
+        q = rope(q, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+
+    if cross:
+        k, v = cache["k"], cache["v"]
+        if cfg.kv_quant and "k_scale" in cache:
+            k = dequantize_kv(k, cache["k_scale"], dt)
+            v = dequantize_kv(v, cache["v_scale"], dt)
+        S = k.shape[1]
+        kpos = jnp.arange(S)
+        qpos = jnp.full((1,), pos, jnp.int32)
+        out = attention_full(q, k, v, cfg, qpos, kpos, causal=False)
+        out = matmul(out.reshape(B, 1, cfg.q_dim), params["wo"], dt)
+        return out, cache
+
+    k_new = _split_heads(matmul(x, params["wk"], dt), cfg.n_kv_heads, cfg.head_dim)
+    v_new = _split_heads(matmul(x, params["wv"], dt), cfg.n_kv_heads, cfg.head_dim)
+    if cfg.use_rope:
+        k_new = rope(k_new, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+
+    S = cache["k"].shape[1]
+    window = cfg.sliding_window
+    slot = jnp.mod(pos, S) if window else jnp.minimum(pos, S - 1)
+
+    new_cache = dict(cache)
+    if cfg.kv_quant:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
+        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=1)
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot, axis=1)
+        k = dequantize_kv(new_cache["k"], new_cache["k_scale"], dt)
+        v = dequantize_kv(new_cache["v"], new_cache["v_scale"], dt)
+    else:
+        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        k, v = new_cache["k"].astype(dt), new_cache["v"].astype(dt)
+
+    if window:
+        # rolling buffer: absolute position of slot i given current pos
+        idx = jnp.arange(S)
+        wraps = jnp.where(idx <= jnp.mod(pos, S), 0, 1)
+        kpos = (pos // S - wraps) * S + idx  # absolute positions, may be negative
+        kpos = jnp.where(kpos < 0, -10**9, kpos)  # unwritten slots -> masked
+    else:
+        idx = jnp.arange(S)
+        kpos = jnp.where(idx <= pos, idx, -10**9)
+    qpos = jnp.full((1,), pos, jnp.int32)
+    out = attention_full(q, k, v, cfg, qpos, kpos, causal=True)
+    out = matmul(out.reshape(B, 1, cfg.q_dim), params["wo"], dt)
+    return out, new_cache

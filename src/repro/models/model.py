@@ -1,0 +1,415 @@
+"""Unified model zoo: init / forward / prefill / decode for every assigned family.
+
+Layer stacks are organized as *groups*: one group = one period of the layer
+pattern (8 layers for jamba, 1 for dense archs). Group parameters are stacked
+along a leading axis of size ``cfg.n_groups`` and executed with ``lax.scan``
+— this is what keeps 96-layer models compiling fast and what gives NeuroMorph
+its depth-morph boundaries (exits live between groups).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.parallel import sharding as _sh
+
+Params = Dict
+Cache = Dict
+
+
+def pos_kind(cfg: ModelConfig) -> str:
+    if cfg.use_rope:
+        return "rope"
+    if cfg.family in ("ssm", "hybrid"):
+        return "none"
+    return "sinusoidal"
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    pol = {
+        "full": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[policy]
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, p: int, *, cross: bool = False) -> Params:
+    kind = cfg.layer_kind(p)
+    is_moe = cfg.layer_is_moe(p)
+    ks = jax.random.split(key, 6)
+    out: Params = {"norm1": L.init_norm(cfg)}
+    if kind == "attn":
+        out["attn"] = L.init_attention(ks[0], cfg)
+    else:
+        out["ssm"] = SSM.init_ssm(ks[0], cfg)
+    if cross:
+        out["norm_cross"] = L.init_norm(cfg)
+        out["cross"] = L.init_attention(ks[1], cfg, cross=True)
+    if is_moe:
+        out["norm2"] = L.init_norm(cfg)
+        out["moe"] = MOE.init_moe(ks[2], cfg)
+    elif cfg.d_ff:
+        out["norm2"] = L.init_norm(cfg)
+        out["mlp"] = L.init_mlp(ks[2], cfg)
+    return out
+
+
+def _init_stack(key, cfg: ModelConfig, n_groups: int, *, cross: bool = False) -> Params:
+    def one_group(k):
+        ks = jax.random.split(k, cfg.period)
+        return {f"pos{p}": _init_layer(ks[p], cfg, p, cross=cross) for p in range(cfg.period)}
+
+    keys = jax.random.split(key, n_groups)
+    return jax.vmap(one_group)(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    v = cfg.padded_vocab()
+    params: Params = {
+        "embed": L.dense_init(ks[0], (v, cfg.d_model), in_axis=-1, dtype=pd),
+        "final_norm": L.init_norm(cfg),
+        "stack": _init_stack(ks[1], cfg, cfg.n_groups, cross=cfg.is_encdec),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(ks[2], (cfg.d_model, v), dtype=pd)
+    if cfg.elastic.exit_layers and cfg.elastic.dedicated_exit_norm:
+        params["exit_norms"] = {
+            f"g{g}": L.init_norm(cfg) for g in cfg.elastic.exit_layers
+        }
+    if cfg.is_encdec:
+        enc_cfg = cfg.scaled(layer_pattern=("attn",), n_layers=cfg.enc_layers,
+                             n_experts=0, top_k=0, use_rope=False, enc_layers=0)
+        params["encoder"] = {
+            "stack": _init_stack(ks[3], enc_cfg, cfg.enc_layers),
+            "final_norm": L.init_norm(cfg),
+        }
+    if cfg.frontend:
+        params["frontend_proj"] = L.dense_init(ks[4], (cfg.frontend_dim, cfg.d_model), dtype=pd)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _group_fwd(group_params, h, cfg: ModelConfig, positions, *, enc_out=None,
+               enc_positions=None, causal=True, want_cache=False, cache_extra=0):
+    """Run one period of layers. Returns (h, aux, cache_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    caches = {}
+    for p in range(cfg.period):
+        lp = group_params[f"pos{p}"]
+        kind = cfg.layer_kind(p)
+        hn = L.apply_norm(lp["norm1"], h, cfg)
+        if kind == "attn":
+            mix, (k_, v_) = L.mha(lp["attn"], hn, cfg, positions, causal=causal)
+            if want_cache:
+                caches[f"pos{p}"] = _pack_kv_cache(k_, v_, cfg, cache_extra)
+        else:
+            need_state = want_cache
+            mix, st = SSM.ssm_forward(lp["ssm"], hn, cfg, return_state=need_state)
+            if want_cache:
+                (x_tail, bc_tail), state = st
+                caches[f"pos{p}"] = {"conv_x": x_tail, "conv_bc": bc_tail, "state": state}
+        h = h + mix
+        if cfg.is_encdec:
+            hn = L.apply_norm(lp["norm_cross"], h, cfg)
+            mix, (ck, cv) = L.mha(lp["cross"], hn, cfg, positions, kv_x=enc_out,
+                                  kv_positions=enc_positions, causal=False)
+            if want_cache:
+                caches[f"pos{p}"]["cross_k"] = ck
+                caches[f"pos{p}"]["cross_v"] = cv
+            h = h + mix
+        if cfg.layer_is_moe(p):
+            hn = L.apply_norm(lp["norm2"], h, cfg)
+            moe_fn = MOE.apply_moe_dense if cfg.moe_impl == "dense" else MOE.apply_moe
+            y, a = moe_fn(lp["moe"], hn, cfg)
+            aux = aux + a
+            h = h + y
+        elif cfg.d_ff:
+            hn = L.apply_norm(lp["norm2"], h, cfg)
+            h = h + L.apply_mlp(lp["mlp"], hn, cfg)
+    return h, aux, (caches if want_cache else None)
+
+
+def _pack_kv_cache(k, v, cfg: ModelConfig, extra: int = 0):
+    """Full-seq K/V -> decode cache layout.
+
+    Sliding-window archs use a rolling buffer of exactly ``window`` slots
+    (token at absolute position t lives at slot t %% window — matches
+    ``mha_decode``). Full-attention archs get ``extra`` free slots appended
+    so subsequent decode steps have room.
+    """
+    S = k.shape[1]
+    w = cfg.sliding_window
+    if w:
+        eff = min(S, w)
+        slots = (jnp.arange(S - eff, S) % w).astype(jnp.int32)
+        kc = jnp.zeros((k.shape[0], w) + k.shape[2:], k.dtype).at[:, slots].set(k[:, -eff:])
+        vc = jnp.zeros((v.shape[0], w) + v.shape[2:], v.dtype).at[:, slots].set(v[:, -eff:])
+        k, v = kc, vc
+    elif extra:
+        pad = [(0, 0)] * k.ndim
+        pad[1] = (0, extra)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    if cfg.kv_quant:
+        kq, ks_ = L.quantize_kv(k)
+        vq, vs = L.quantize_kv(v)
+        return {"k": kq, "v": vq, "k_scale": ks_, "v_scale": vs}
+    return {"k": k, "v": v}
+
+
+def _scan_groups(stack, h, cfg: ModelConfig, positions, *, start: int, stop: int,
+                 remat: str = "none", enc_out=None, enc_positions=None,
+                 want_cache: bool = False, cache_extra: int = 0):
+    """Scan groups [start, stop). Returns (h, aux, caches(G-slice) or None)."""
+    sub = jax.tree_util.tree_map(lambda a: a[start:stop], stack)
+
+    def body(carry, group_params):
+        h, aux = carry
+        h, a, cache = _group_fwd(group_params, h, cfg, positions, enc_out=enc_out,
+                                 enc_positions=enc_positions, want_cache=want_cache,
+                                 cache_extra=cache_extra)
+        h = _sh.constrain(h, "residual")  # SP: seq -> model between groups
+        return (h, aux + a), cache
+
+    body = _remat_wrap(body, remat)
+    (h, aux), caches = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), sub)
+    return h, aux, caches
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """Token (+frontend) embedding. Returns (h, positions, enc_out, enc_pos)."""
+    dt = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    h = params["embed"][tokens].astype(dt)
+    enc_out = enc_pos = None
+    if cfg.frontend == "vision_stub":
+        patches = batch["patches"].astype(dt)  # (B, P, fd)
+        ph = L.matmul(patches, params["frontend_proj"], dt)
+        h = jnp.concatenate([ph, h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if pos_kind(cfg) == "sinusoidal":
+        h = h + L.sinusoidal_pos(positions, cfg.d_model).astype(dt)
+    if cfg.is_encdec:
+        frames = batch["frames"].astype(dt)  # (B, enc_seq, fd)
+        eh = L.matmul(frames, params["frontend_proj"], dt)
+        enc_pos = jnp.arange(eh.shape[1], dtype=jnp.int32)
+        eh = eh + L.sinusoidal_pos(enc_pos, cfg.d_model).astype(dt)
+        ecfg = cfg.scaled(layer_pattern=("attn",), n_layers=cfg.enc_layers,
+                          n_experts=0, top_k=0, use_rope=False, sliding_window=0,
+                          enc_layers=0)
+        (eh, _), _ = jax.lax.scan(
+            lambda c, gp: ((_group_fwd(gp, c[0], ecfg, enc_pos, causal=False)[0], c[1]), None),
+            (eh, jnp.zeros((), jnp.float32)), params["encoder"]["stack"])
+        enc_out = L.apply_norm(params["encoder"]["final_norm"], eh, cfg)
+    return h, positions, enc_out, enc_pos
+
+
+def _logits(params, h, cfg: ModelConfig, norm_params) -> jnp.ndarray:
+    h = L.apply_norm(norm_params, h, cfg)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return L.matmul(h, w, h.dtype)
+
+
+def forward(params, batch, cfg: ModelConfig, *, depth: Optional[int] = None,
+            collect_exits: Tuple[int, ...] = (), remat: str = "none"):
+    """Full-sequence forward.
+
+    Returns (outputs, aux) where outputs maps "final" -> logits and
+    "exit_g{i}" -> logits for each requested exit group.
+    """
+    depth = depth if depth is not None else cfg.n_groups
+    h, positions, enc_out, enc_pos = _embed_inputs(params, batch, cfg)
+    boundaries = sorted([g for g in collect_exits if g < depth]) + [depth]
+    outputs = {}
+    aux = jnp.zeros((), jnp.float32)
+    start = 0
+    for b in boundaries:
+        if b > start:
+            h, a, _ = _scan_groups(params["stack"], h, cfg, positions, start=start,
+                                   stop=b, remat=remat, enc_out=enc_out,
+                                   enc_positions=enc_pos)
+            aux = aux + a
+        if b < depth:
+            np_ = params.get("exit_norms", {}).get(f"g{b}", params["final_norm"])
+            outputs[f"exit_g{b}"] = _logits(params, h, cfg, np_)
+        start = b
+    norm_p = params["final_norm"]
+    if depth < cfg.n_groups:
+        norm_p = params.get("exit_norms", {}).get(f"g{depth}", norm_p)
+    outputs["final"] = _logits(params, h, cfg, norm_p)
+    return outputs, aux
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, targets, cfg: ModelConfig, loss_mask=None):
+    """Next-token CE with padded-vocab masking. logits: (B,S,Vp), targets: (B,S)."""
+    v = cfg.vocab_size
+    lg = logits.astype(jnp.float32)
+    pad = lg.shape[-1] - v
+    if pad:
+        neg = jnp.full(lg.shape[:-1] + (pad,), -1e9, jnp.float32)
+        lg = jnp.concatenate([lg[..., :v], neg], axis=-1)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if loss_mask is None:
+        loss_mask = jnp.ones_like(nll)
+    return jnp.sum(nll * loss_mask) / jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, depth=None, remat: str = "none",
+            aux_weight: float = 0.01):
+    """Standard LM loss (teacher phase / plain training)."""
+    outs, aux = forward(params, batch, cfg, depth=depth, remat=remat)
+    logits = outs["final"]
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    if cfg.frontend == "vision_stub":  # logits cover patches + text; text only
+        P = cfg.frontend_seq
+        logits = logits[:, P:]
+    loss = cross_entropy(logits, targets, cfg, mask)
+    return loss + aux_weight * aux, {"ce": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int) -> Cache:
+    """Zeroed cache with room for ``capacity`` tokens."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def one_layer(p: int):
+        kind = cfg.layer_kind(p)
+        if kind == "attn":
+            c = L.init_kv_cache(cfg, batch, capacity, dt)
+        else:
+            c = SSM.init_ssm_cache(cfg, batch, dtype=dt)
+        if cfg.is_encdec:
+            c["cross_k"] = jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim), dt)
+            c["cross_v"] = jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim), dt)
+        return c
+
+    stack = {f"pos{p}": jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), one_layer(p))
+        for p in range(cfg.period)}
+    return {"pos": jnp.zeros((), jnp.int32), "stack": stack}
+
+
+def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig):
+    new_cache = {}
+    for p in range(cfg.period):
+        lp = group_params[f"pos{p}"]
+        cp = group_cache[f"pos{p}"]
+        kind = cfg.layer_kind(p)
+        hn = L.apply_norm(lp["norm1"], h, cfg)
+        nc = dict(cp)
+        if kind == "attn":
+            self_keys = {k: v for k, v in cp.items() if not k.startswith("cross_")}
+            mix, upd = L.mha_decode(lp["attn"], hn, self_keys, pos, cfg)
+            nc.update(upd)
+        else:
+            self_keys = {k: cp[k] for k in ("conv_x", "conv_bc", "state")}
+            mix, upd = SSM.ssm_decode_step(lp["ssm"], hn, self_keys, cfg)
+            nc.update(upd)
+        h = h + mix
+        if cfg.is_encdec:
+            hn = L.apply_norm(lp["norm_cross"], h, cfg)
+            mix, _ = L.mha_decode(lp["cross"], hn,
+                                  {"k": cp["cross_k"], "v": cp["cross_v"]}, pos, cfg,
+                                  cross=True)
+            h = h + mix
+        if cfg.layer_is_moe(p):
+            # decode always uses the exact dropless path (see apply_moe_dense)
+            hn = L.apply_norm(lp["norm2"], h, cfg)
+            y, _ = MOE.apply_moe_dense(lp["moe"], hn, cfg)
+            h = h + y
+        elif cfg.d_ff:
+            hn = L.apply_norm(lp["norm2"], h, cfg)
+            h = h + L.apply_mlp(lp["mlp"], hn, cfg)
+        new_cache[f"pos{p}"] = nc
+    return h, new_cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int] = None):
+    """One-token decode. tokens: (B, 1). Returns (logits (B,1,Vp), new_cache).
+
+    The cache stack rides through the group scan as a CARRY updated with
+    slice-sized dynamic updates (never as stacked scan outputs): stacked ys
+    force XLA to rebuild the full multi-GB cache buffer every iteration,
+    which dominated decode HBM traffic in the baseline dry-run (§Perf B2).
+    """
+    depth = depth if depth is not None else cfg.n_groups
+    dt = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]
+    h = params["embed"][tokens].astype(dt)
+    if pos_kind(cfg) == "sinusoidal":
+        h = h + L.sinusoidal_pos(jnp.full((1,), pos, jnp.int32), cfg.d_model).astype(dt)
+
+    stack_p = jax.tree_util.tree_map(lambda a: a[:depth], params["stack"])
+    full_stack = cache["stack"]
+
+    def body(carry, xs):
+        h, cache_stack = carry
+        g_idx, gp = xs
+        gc = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, g_idx, 0, keepdims=False),
+            cache_stack)
+        h, nc = _group_decode(gp, gc, h, pos, cfg)
+        cache_stack = jax.tree_util.tree_map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), g_idx, 0),
+            cache_stack, nc)
+        return (h, cache_stack), None
+
+    (h, full_stack), _ = jax.lax.scan(
+        body, (h, full_stack), (jnp.arange(depth, dtype=jnp.int32), stack_p))
+
+    norm_p = params["final_norm"]
+    if depth < cfg.n_groups:
+        norm_p = params.get("exit_norms", {}).get(f"g{depth}", norm_p)
+    logits = _logits(params, h, cfg, norm_p)
+    return logits, {"pos": pos + 1, "stack": full_stack}
+
+
+def prefill(params, batch, cfg: ModelConfig, *, remat: str = "none",
+            cache_extra: int = 0):
+    """Process a full prompt; returns (last-position logits, decode cache).
+
+    ``cache_extra`` appends free KV slots so decode can continue past the
+    prompt (the prefill_32k dry-run cell uses 0: cache of exactly seq_len).
+    """
+    h, positions, enc_out, enc_pos = _embed_inputs(params, batch, cfg)
+    S = h.shape[1]
+    h, aux, caches = _scan_groups(params["stack"], h, cfg, positions, start=0,
+                                  stop=cfg.n_groups, remat=remat, enc_out=enc_out,
+                                  enc_positions=enc_pos, want_cache=True,
+                                  cache_extra=cache_extra)
+    logits = _logits(params, h[:, -1:], cfg, params["final_norm"])
+    cache = {"pos": jnp.full((), S, jnp.int32), "stack": caches}
+    return logits, cache

@@ -1,0 +1,131 @@
+"""Top-k mixture-of-experts with capacity-based one-hot dispatch.
+
+The dispatch follows the flaxformer/maxtext pattern: tokens are processed in
+groups, assignments are prioritized choice-major (all first choices before
+second choices), and tokens beyond an expert's capacity are dropped (their
+combine weight is zero, so the residual path carries them — graceful, and the
+FLOP count is proportional to capacity, which keeps the roofline honest about
+*active* compute).
+
+Width morphing (NeuroMorph) reduces ``top_k`` — the MoE analogue of the
+paper's per-layer filter-count reduction.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),  # router in f32
+        "wi": dense_init(ks[1], (e, d, f), in_axis=1, dtype=pd),
+        "wo": dense_init(ks[2], (e, f, d), in_axis=1, dtype=pd),
+    }
+    if cfg.activation == "swiglu":
+        p["wg"] = dense_init(ks[3], (e, d, f), in_axis=1, dtype=pd)
+    return p
+
+
+def _capacity(group: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(math.ceil(group * top_k / n_experts * factor))
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def apply_moe(params, x, cfg: ModelConfig, top_k: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss). Routing per token group."""
+    dt = x.dtype
+    B, S, d = x.shape
+    k = top_k or cfg.top_k
+    e = cfg.n_experts
+    T = B * S
+    g = min(cfg.moe_group_size, T)
+    if T % g:
+        g = T  # fall back to one group (tiny smoke inputs)
+    ng = T // g
+    xt = x.reshape(ng, g, d)
+
+    logits = jnp.einsum("sgd,de->sge", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (ng, g, k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    cap = _capacity(g, k, e, cfg.capacity_factor)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (ng, g, k, e)
+    # choice-major priority: first choices of all tokens come first
+    m_flat = onehot.transpose(0, 2, 1, 3).reshape(ng, k * g, e)
+    pos = jnp.cumsum(m_flat, axis=1) * m_flat - m_flat  # 0-based slot per assignment
+    keep = (pos < cap).astype(jnp.float32) * m_flat
+    disp_flat = keep[..., None] * jax.nn.one_hot(
+        pos.astype(jnp.int32), cap, dtype=jnp.float32)  # (ng,kg,e,cap)
+    dispatch = disp_flat.reshape(ng, k, g, e, cap).transpose(0, 2, 1, 3, 4)  # (ng,g,k,e,cap)
+
+    combine = jnp.einsum("sgkec,sgk->sgec", dispatch, gate_vals)  # (ng,g,e,cap)
+    disp_any = jnp.sum(dispatch, axis=2)  # (ng,g,e,cap) in {0,1}
+
+    xe = jnp.einsum("sgec,sgd->secd", disp_any.astype(dt), xt)  # (ng,e,cap,d)
+    h = jnp.einsum("secd,edf->secf", xe, params["wi"].astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)
+    if "wg" in params:
+        gg = jnp.einsum("secd,edf->secf", xe, params["wg"].astype(dt),
+                        preferred_element_type=jnp.float32)
+        h = jax.nn.silu(gg).astype(dt) * h
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    ye = jnp.einsum("secf,efd->secd", h, params["wo"].astype(dt),
+                    preferred_element_type=jnp.float32).astype(dt)
+    y = jnp.einsum("sgec,secd->sgd", combine.astype(dt), ye)
+
+    # Switch-style load balance aux: e * sum_e fraction_e * prob_e
+    top1 = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32)
+    frac = jnp.mean(top1, axis=(0, 1))
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac * pmean)
+    return y.reshape(B, S, d), aux
+
+
+def apply_moe_dense(params, x, cfg: ModelConfig, top_k: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact dropless top-k MoE: compute every expert, combine sparse gates.
+
+    Used on the decode path (token counts are tiny and every expert's weights
+    are streamed from HBM regardless — the FLOP inflation is roofline-free)
+    and as the no-drop oracle for capacity-dispatch tests.
+    """
+    dt = x.dtype
+    B, S, d = x.shape
+    k = top_k or cfg.top_k
+    e = cfg.n_experts
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    gates = jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32) * gate_vals[..., None], axis=-2)
+
+    h = jnp.einsum("bsd,edf->bsef", x, params["wi"].astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)
+    if "wg" in params:
+        gg = jnp.einsum("bsd,edf->bsef", x, params["wg"].astype(dt),
+                        preferred_element_type=jnp.float32)
+        h = jax.nn.silu(gg).astype(dt) * h
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    ye = jnp.einsum("bsef,efd->bsed", h, params["wo"].astype(dt),
+                    preferred_element_type=jnp.float32)
+    y = jnp.einsum("bsed,bse->bsd", ye, gates).astype(dt)
+
+    top1 = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32)
+    aux = e * jnp.sum(jnp.mean(top1, axis=(0, 1)) * jnp.mean(probs, axis=(0, 1)))
+    return y, aux

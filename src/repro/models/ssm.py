@@ -1,0 +1,240 @@
+"""Mamba2 / SSD (state-space duality) blocks — pure JAX chunked implementation.
+
+The chunked SSD algorithm (arXiv:2405.21060) decomposes the linear recurrence
+into intra-chunk dense (matmul-friendly — maps onto the MXU) and inter-chunk
+state-passing terms. This file is the reference implementation used by the
+model zoo and the oracle for ``repro.kernels.ssd_scan``.
+
+Projection weights are stored *unpacked* (w_x, w_z, w_bc, w_dt) so NeuroMorph
+width morphing can prefix-slice SSD heads without re-packing.
+
+Recurrence convention (inclusive decay):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . h_t + D * x_t
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, dense_init, matmul
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = cfg.ssm_d_inner
+    nh, g, n, k = cfg.ssm_nheads, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_conv
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 9)
+    # A init in [1, 16) (mamba2 default), dt bias ~ softplus^-1(dt) for dt in [1e-3, 1e-1]
+    a = jax.random.uniform(ks[5], (nh,), jnp.float32, 1.0, 16.0)
+    dt = jnp.exp(
+        jax.random.uniform(ks[6], (nh,), jnp.float32) * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "w_x": dense_init(ks[0], (d, d_in), dtype=pd),
+        "w_z": dense_init(ks[1], (d, d_in), dtype=pd),
+        "w_bc": dense_init(ks[2], (d, 2 * g * n), dtype=pd),
+        "w_dt": dense_init(ks[3], (d, nh), dtype=pd),
+        "conv_x_w": dense_init(ks[4], (d_in, k), in_axis=1, dtype=pd),
+        "conv_x_b": jnp.zeros((d_in,), pd),
+        "conv_bc_w": dense_init(ks[7], (2 * g * n, k), in_axis=1, dtype=pd),
+        "conv_bc_b": jnp.zeros((2 * g * n,), pd),
+        "A_log": jnp.log(a).astype(pd),
+        "D": jnp.ones((nh,), pd),
+        "dt_bias": dt_bias.astype(pd),
+        "ssm_norm": {"scale": jnp.ones((d_in,), pd)},
+        "out_proj": dense_init(ks[8], (d_in, d), dtype=pd),
+    }
+
+
+def _causal_conv(u, w, b, tail: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. u: (B,S,Cc), w: (Cc,K), b: (Cc,).
+
+    If ``tail`` (B,K-1,Cc) is given it is prepended (decode/prefill chaining).
+    Returns (y, new_tail).
+    """
+    B, S, Cc = u.shape
+    K = w.shape[1]
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, Cc), u.dtype)
+    xt = jnp.concatenate([tail, u], axis=1)  # (B, S+K-1, Cc)
+    # gather K shifted views and contract: y_t = sum_k w[:,k] * x_{t+k}
+    views = jnp.stack([xt[:, k : k + S, :] for k in range(K)], axis=-1)  # (B,S,Cc,K)
+    y = jnp.einsum("bsck,ck->bsc", views.astype(jnp.float32), w.astype(jnp.float32))
+    y = (y + b.astype(jnp.float32)).astype(u.dtype)
+    new_tail = xt[:, S:, :] if S >= K - 1 else xt[:, -(K - 1):, :]
+    return y, new_tail
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p) f32; dt: (b, s, h) f32 (post-softplus); A: (h,) f32 (<0);
+    B_, C_: (b, s, g, n) f32 with g dividing h. Returns (y, final_state) where
+    y: (b, s, h, p) and final_state: (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    rep = h // g
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = x.shape[1]
+    nc = S // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bh = jnp.repeat(B_.reshape(b, nc, chunk, g, n), rep, axis=3)  # (b,nc,Q,h,n)
+    Ch = jnp.repeat(C_.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtc * A  # (b,nc,Q,h), negative
+    dA_cs = jnp.cumsum(dA, axis=2)  # inclusive
+
+    # intra-chunk: y_q += C_q . sum_{s<=q} exp(dA_cs[q]-dA_cs[s]) dt_s B_s x_s
+    CB = jnp.einsum("bcqhn,bcshn->bchqs", Ch, Bh, preferred_element_type=jnp.float32)
+    t = dA_cs.transpose(0, 1, 3, 2)  # (b,nc,h,Q)
+    L = jnp.exp(t[..., :, None] - t[..., None, :])  # (b,nc,h,Q,Q)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri, L, 0.0)
+    u = xc * dtc[..., None]  # (b,nc,Q,h,p)
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", CB * L, u, preferred_element_type=jnp.float32)
+
+    # end-of-chunk states: sum_s exp(dA_cs[-1]-dA_cs[s]) dt_s B_s x_s
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b,nc,Q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bh, decay_states * dtc, xc,
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (b,nc,h)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev  # emit state *before* this chunk
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    # contribution of carried state: y_q += exp(dA_cs[q]) C_q . state_prev
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, jnp.exp(dA_cs),
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, S, h, p)[:, :s]
+    return y, final_state
+
+
+def ssd_reference(x, dt, A, B_, C_):
+    """O(s) sequential reference (oracle for tests). Same signature/returns."""
+    b, s, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B_, rep, axis=2)
+    Ch = jnp.repeat(C_, rep, axis=2)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp  # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        decay = jnp.exp(dt_t * A)  # (b,h)
+        upd = jnp.einsum("bhp,bhn->bhpn", x_t * dt_t[..., None], b_t)
+        state = state * decay[..., None, None] + upd
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y_t
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def ssm_forward(params, x, cfg: ModelConfig, *, conv_tail=None, ssm_state=None,
+                return_state: bool = False):
+    """Full-sequence mamba2 block. x: (B,S,d). Returns (y, (conv_tail, state))."""
+    dt_ = x.dtype
+    nh = params["A_log"].shape[0]
+    hp = cfg.ssm_head_dim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    xs = matmul(x, params["w_x"], dt_)  # (B,S,d_in')
+    z = matmul(x, params["w_z"], dt_)
+    bc = matmul(x, params["w_bc"], dt_)  # (B,S,2gn)
+    dt_raw = matmul(x, params["w_dt"], dt_)  # (B,S,nh)
+
+    xs, x_tail = _causal_conv(xs, params["conv_x_w"][: nh * hp], params["conv_x_b"][: nh * hp],
+                              None if conv_tail is None else conv_tail[0])
+    bc, bc_tail = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"],
+                               None if conv_tail is None else conv_tail[1])
+    xs = jax.nn.silu(xs.astype(jnp.float32))
+    bc = jax.nn.silu(bc.astype(jnp.float32))
+    B_ = bc[..., : g * n].reshape(bc.shape[0], bc.shape[1], g, n)
+    C_ = bc[..., g * n :].reshape(bc.shape[0], bc.shape[1], g, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(xs.shape[0], xs.shape[1], nh, hp)
+    if ssm_state is not None:
+        # prefix state from a previous segment: fold in via off-diagonal term
+        # (decode path uses ssm_decode_step; segment chaining rarely needed)
+        raise NotImplementedError("segment chaining handled by ssd_chunked caller")
+    y, final_state = ssd_chunked(xh, dt, A, B_, C_, cfg.ssm_chunk)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(xs.shape[0], xs.shape[1], nh * hp)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = apply_norm({"scale": params["ssm_norm"]["scale"][: nh * hp]}, y.astype(dt_), cfg)
+    out = matmul(y, params["out_proj"], dt_)
+    if return_state:
+        return out, ((x_tail, bc_tail), final_state.astype(jnp.float32))
+    return out, None
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, nh: Optional[int] = None, dtype=jnp.float32):
+    nh = nh or cfg.ssm_nheads
+    hp, g, n, k = cfg.ssm_head_dim, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, k - 1, nh * hp), dtype),
+        "conv_bc": jnp.zeros((batch, k - 1, 2 * g * n), dtype),
+        "state": jnp.zeros((batch, nh, hp, n), jnp.float32),
+    }
+
+
+def ssm_decode_step(params, x, cache, cfg: ModelConfig):
+    """One-token decode. x: (B,1,d). Returns (y, new_cache)."""
+    dt_ = x.dtype
+    nh = params["A_log"].shape[0]
+    hp = cfg.ssm_head_dim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    xs = matmul(x, params["w_x"], dt_)
+    z = matmul(x, params["w_z"], dt_)
+    bc = matmul(x, params["w_bc"], dt_)
+    dt_raw = matmul(x, params["w_dt"], dt_)
+
+    xs, x_tail = _causal_conv(xs, params["conv_x_w"][: nh * hp], params["conv_x_b"][: nh * hp],
+                              cache["conv_x"])
+    bc, bc_tail = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"], cache["conv_bc"])
+    xs = jax.nn.silu(xs.astype(jnp.float32))[:, 0]  # (B, d_in)
+    bc = jax.nn.silu(bc.astype(jnp.float32))[:, 0]
+    B_ = jnp.repeat(bc[..., : g * n].reshape(-1, g, n), nh // g, axis=1)  # (B,h,n)
+    C_ = jnp.repeat(bc[..., g * n :].reshape(-1, g, n), nh // g, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)[:, 0] + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(-1, nh, hp)
+
+    decay = jnp.exp(dt * A)  # (B,h)
+    upd = jnp.einsum("bhp,bhn->bhpn", xh * dt[..., None], B_)
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, C_) + params["D"].astype(jnp.float32)[:, None] * xh
+    y = (y.reshape(-1, 1, nh * hp) * jax.nn.silu(z.astype(jnp.float32)))
+    y = apply_norm({"scale": params["ssm_norm"]["scale"][: nh * hp]}, y.astype(dt_), cfg)
+    out = matmul(y, params["out_proj"], dt_)
+    return out, {"conv_x": x_tail, "conv_bc": bc_tail, "state": state}

@@ -1,0 +1,23 @@
+from repro.optim.optimizer import (
+    OptimizerConfig,
+    OptState,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    opt_state_bytes,
+)
+from repro.optim.schedule import constant, distillcycle_decay, warmup_cosine
+
+__all__ = [
+    "OptimizerConfig",
+    "OptState",
+    "apply_updates",
+    "clip_by_global_norm",
+    "global_norm",
+    "init_opt_state",
+    "opt_state_bytes",
+    "constant",
+    "distillcycle_decay",
+    "warmup_cosine",
+]

@@ -1,0 +1,27 @@
+"""LR schedules, including the DistillCycle per-stage exponential decay (Eq. 20)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, min_frac: float = 0.1) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+        return warm * cos  # scale on top of base lr
+
+    return fn
+
+
+def constant(scale: float = 1.0) -> Callable:
+    return lambda step: jnp.asarray(scale, jnp.float32)
+
+
+def distillcycle_decay(gamma: float, stage: int) -> float:
+    """Paper Eq. (20): alpha_t = alpha_0 * gamma^t for earlier-stage layers."""
+    return gamma ** stage

@@ -1,0 +1,4 @@
+from repro.parallel import sharding
+from repro.parallel.pipeline_parallel import bubble_fraction, pipeline_apply
+
+__all__ = ["sharding", "bubble_fraction", "pipeline_apply"]

@@ -1,0 +1,265 @@
+"""Logical-axis sharding rules for every family and execution kind.
+
+Policies (see DESIGN.md §Sharding):
+
+* ``train`` — 2-D weight sharding: dim0 (d_model/vocab) -> data axes (FSDP /
+  ZeRO-3: XLA all-gathers per scan step), inner dims (heads / d_ff / experts /
+  d_inner) -> ``model`` (TP). Batch -> data axes. Residual stream sequence ->
+  ``model`` between groups (Megatron-style SP) via ``constrain``.
+* ``serve_tp`` — weights inner-dim -> ``model`` only (fit small/mid models),
+  batch -> data axes, KV cache seq -> ``model``.
+* ``serve_2d`` — weights 2-D like train (required to fit >=67B on 16 GB
+  chips), batch REPLICATED (decode activations are KB-scale; sharded weights
+  still shard the compute), KV cache seq -> all axes (256-way).
+
+MoE experts: EP (experts -> model) when divisible, else expert-TP
+(per-expert d_ff -> model).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# activation-constraint context (used by model code via `constrain`)
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, specs: Dict[str, P]):
+    prev = getattr(_CTX, "val", None)
+    _CTX.val = (mesh, specs)
+    try:
+        yield
+    finally:
+        _CTX.val = prev
+
+
+def constrain(x, name: str):
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None:
+        return x
+    mesh, specs = ctx
+    spec = specs.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# axis vocabulary
+# ---------------------------------------------------------------------------
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _spec_like(tree, fn):
+    return jax.tree_util.tree_map_with_path(fn, tree)
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh: Mesh, policy: str) -> Any:
+    """PartitionSpec pytree matching the params structure.
+
+    ``params_shape`` is a ShapeDtypeStruct pytree (from eval_shape) or real
+    params; only the tree structure and leaf ranks are consulted.
+    """
+    m = model_axis(mesh)
+    d0: Any = data_axes(mesh) or None
+    if policy == "serve_tp":
+        d0 = None  # inner-dim sharding only
+    ep = bool(cfg.n_experts) and cfg.n_experts % (mesh.shape.get("model", 1)) == 0
+
+    def leaf_spec(path, leaf) -> P:
+        keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        flat = "/".join(keys)
+        nd = len(leaf.shape)
+        stacked = ("stack" in keys) or ("encoder" in keys and "stack" in keys)
+        o = 1 if stacked else 0  # leading group axis
+
+        def spec(*axes):
+            full = [None] * nd
+            for i, ax in enumerate(axes):
+                full[o + i] = ax
+            return P(*full)
+
+        name = keys[-1]
+        parent = keys[-2] if len(keys) >= 2 else ""
+        if name == "embed":
+            return P(m, d0)
+        if name == "unembed":
+            return P(d0, m)
+        if name == "frontend_proj":
+            return P(None, d0)
+        if name in ("scale", "bias"):  # norms (incl. ssm_norm)
+            if parent == "ssm_norm":
+                return spec(m)
+            return P(*([None] * nd))
+        if parent in ("attn", "cross"):
+            if name in ("wq", "wk", "wv"):
+                return spec(d0, m)
+            if name == "wo":
+                return spec(m, d0)
+        if parent == "mlp":
+            if name in ("wi", "wg"):
+                return spec(d0, m)
+            if name == "wo":
+                return spec(m, d0)
+        if parent == "moe":
+            if name == "router":
+                return spec(d0, None)
+            if ep:
+                if name in ("wi", "wg"):
+                    return spec(m, d0, None)
+                if name == "wo":
+                    return spec(m, None, d0)
+            else:
+                if name in ("wi", "wg"):
+                    return spec(None, d0, m)
+                if name == "wo":
+                    return spec(None, m, d0)
+        if parent == "ssm":
+            if name in ("w_x", "w_z"):
+                return spec(d0, m)
+            if name == "w_bc":
+                return spec(d0, None)
+            if name == "w_dt":
+                return spec(d0, None)
+            if name == "conv_x_w":
+                return spec(m, None)
+            if name == "conv_x_b":
+                return spec(m)
+            if name in ("conv_bc_w", "conv_bc_b"):
+                return P(*([None] * nd))
+            if name in ("A_log", "D", "dt_bias"):
+                return P(*([None] * nd))
+            if name == "out_proj":
+                return spec(m, d0)
+        return P(*([None] * nd))
+
+    return _spec_like(params_shape, leaf_spec)
+
+
+def shardings_for(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / state specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shape, mesh: Mesh, policy: str) -> Any:
+    d: Any = data_axes(mesh) or None
+    if policy == "serve_2d":
+        d = None  # decode activations replicated
+
+    def leaf(path, leafv):
+        nd = len(leafv.shape)
+        return P(*([d] + [None] * (nd - 1)))
+
+    return _spec_like(batch_shape, leaf)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_specs(cache_shape, cfg: ModelConfig, mesh: Mesh, policy: str) -> Any:
+    """Decode-cache specs. Leaves carry leading group axis.
+
+    KV seq dim -> model (serve_tp) or (data, model) (serve_2d, 256-way).
+    SSM state heads -> model; batch -> data (serve_tp) / replicated (serve_2d).
+    Axes that do not divide a leaf dim fall back to replication (e.g.
+    global_batch=1 in long_500k).
+    """
+    m = model_axis(mesh)
+    d: Any = data_axes(mesh) or None
+    batch_ax = d if policy != "serve_2d" else None
+    seq_ax: Any = m if policy != "serve_2d" else ((d, m) if isinstance(d, str)
+                                                  else tuple(list(d or ()) + [m]))
+
+    def fit(ax, dim):
+        return ax if ax is not None and dim % _axes_size(mesh, ax) == 0 else None
+
+    def leaf(path, leafv):
+        keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        name = keys[-1]
+        nd = len(leafv.shape)
+        if name == "pos":
+            return P()
+        # leading dim is the group stack
+        if name in ("k", "v", "k_scale", "v_scale", "cross_k", "cross_v"):
+            # (G, B, S, KV, hd) or scales (G, B, S, KV, 1)
+            return P(None, fit(batch_ax, leafv.shape[1]), fit(seq_ax, leafv.shape[2]),
+                     None, None)
+        if name == "state":  # (G, B, nh, hp, n)
+            return P(None, fit(batch_ax, leafv.shape[1]), fit(m, leafv.shape[2]),
+                     None, None)
+        if name in ("conv_x",):  # (G, B, k-1, d_inner)
+            return P(None, fit(batch_ax, leafv.shape[1]), None,
+                     fit(m, leafv.shape[3]))
+        if name in ("conv_bc",):
+            return P(None, fit(batch_ax, leafv.shape[1]), None, None)
+        return P(*([None] * nd))
+
+    return _spec_like(cache_shape, leaf)
+
+
+def opt_specs(opt_shape, pspecs) -> Any:
+    """Optimizer state mirrors param sharding; step is replicated."""
+    from repro.optim.optimizer import OptState
+
+    def nu_spec(spec, leafv):
+        if leafv.shape == (0,):  # sgdm placeholder
+            return P(None)
+        return spec
+
+    nu = jax.tree_util.tree_map(nu_spec, pspecs, opt_shape.nu,
+                                is_leaf=lambda x: isinstance(x, P))
+    return OptState(step=P(), mu=pspecs, nu=nu)
+
+
+def residual_specs(mesh: Mesh, policy: str) -> Dict[str, P]:
+    """Activation constraints (SP): residual (B, S, d)."""
+    m = model_axis(mesh)
+    d: Any = data_axes(mesh) or None
+    if policy == "train":
+        return {"residual": P(d, m, None), "logits": P(d, m, None)}
+    if policy == "serve_tp":
+        return {"residual": P(d, None, None)}
+    return {"residual": P(None, None, None)}
+
+
+def serve_policy(cfg: ModelConfig, tp: int = 16) -> str:
+    """Pick serve sharding by per-chip footprint at TP-only sharding."""
+    per_chip = cfg.n_params() * 2 / tp  # bf16
+    return "serve_2d" if per_chip > 8e9 else "serve_tp"

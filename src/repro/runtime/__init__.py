@@ -1,0 +1,27 @@
+from repro.runtime.compression import (
+    compress_with_feedback,
+    compressed_psum,
+    dequantize,
+    init_error_buffer,
+    quantize,
+)
+from repro.runtime.fault_tolerance import (
+    FailurePlan,
+    SimulatedFailure,
+    StragglerMonitor,
+    TrainRunner,
+    elastic_reshard,
+)
+
+__all__ = [
+    "compress_with_feedback",
+    "compressed_psum",
+    "dequantize",
+    "init_error_buffer",
+    "quantize",
+    "FailurePlan",
+    "SimulatedFailure",
+    "StragglerMonitor",
+    "TrainRunner",
+    "elastic_reshard",
+]

@@ -1,0 +1,9 @@
+import os
+
+# keep the default single CPU device for tests (the dry-run subprocess test
+# sets its own device count via REPRO_DRYRUN_DEVICES)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

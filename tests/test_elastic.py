@@ -1,0 +1,117 @@
+"""NeuroMorph invariants: slicing equivalence, zero-copy switching, mode scaling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MorphMode, list_archs, smoke_config
+from repro.core import elastic
+from repro.core.morph import make_serve_controller
+from repro.models import forward, init_decode_cache, init_params
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, B, S, key):
+    ks = jax.random.split(key, 3)
+    text = S - (cfg.frontend_seq if cfg.frontend == "vision_stub" else 0)
+    b = {"tokens": jax.random.randint(ks[0], (B, text), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision_stub":
+        b["patches"] = jax.random.normal(ks[2], (B, cfg.frontend_seq, cfg.frontend_dim))
+    if cfg.is_encdec:
+        b["frames"] = jax.random.normal(ks[2], (B, cfg.enc_seq, cfg.frontend_dim))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_all_modes_run(arch):
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, 2, 24, jax.random.PRNGKey(1))
+    fracs = []
+    for mode in cfg.elastic.modes(cfg.n_groups):
+        outs, _ = elastic.morph_forward(params, batch, cfg, mode)
+        assert bool(jnp.isfinite(outs["final"]).all()), (arch, mode.name)
+        fracs.append(elastic.flops_fraction(cfg, mode))
+    # full mode is exactly 1.0, and fractions are monotone in (depth, width)
+    assert abs(fracs[-1] - 1.0) < 1e-9
+    assert all(f <= 1.0 + 1e-9 for f in fracs)
+
+
+def test_full_width_mode_equals_plain_forward():
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, 2, 16, jax.random.PRNGKey(1))
+    mode = MorphMode(depth=cfg.n_groups, width=1.0)
+    o1, _ = elastic.morph_forward(params, batch, cfg, mode)
+    o2, _ = forward(params, batch, cfg)
+    np.testing.assert_array_equal(np.asarray(o1["final"]), np.asarray(o2["final"]))
+
+
+def test_width_slice_is_prefix_view():
+    """Sliced weights must be exact prefixes of the full weights."""
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    mode = MorphMode(depth=cfg.n_groups, width=0.5)
+    sliced = elastic.slice_params(params, cfg, mode)
+    cfg_m = elastic.morph_config(cfg, mode)
+    wq_s = sliced["stack"]["pos0"]["attn"]["wq"]
+    wq_f = params["stack"]["pos0"]["attn"]["wq"]
+    assert wq_s.shape[-1] == cfg_m.q_dim == cfg.q_dim // 2
+    np.testing.assert_array_equal(np.asarray(wq_s),
+                                  np.asarray(wq_f[..., : cfg_m.q_dim]))
+    wi_s = sliced["stack"]["pos0"]["mlp"]["wi"]
+    assert wi_s.shape[-1] == cfg_m.d_ff == cfg.d_ff // 2
+
+
+def test_subnet_independent_of_inactive_weights():
+    """Clock-gating contract: perturbing inactive (sliced-away) weights must
+    not change the subnet's output."""
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, 1, 16, jax.random.PRNGKey(1))
+    mode = MorphMode(depth=1, width=0.5)
+    o1, _ = elastic.morph_forward(params, batch, cfg, mode)
+    cfg_m = elastic.morph_config(cfg, mode)
+    # perturb inactive attention columns + deeper groups
+    p2 = jax.tree_util.tree_map(lambda a: a, params)
+    wq = p2["stack"]["pos0"]["attn"]["wq"]
+    p2["stack"]["pos0"]["attn"]["wq"] = wq.at[..., cfg_m.q_dim:].add(123.0)
+    p2["stack"]["pos0"]["mlp"]["wi"] = \
+        p2["stack"]["pos0"]["mlp"]["wi"].at[1:].add(99.0)  # deeper groups
+    o2, _ = elastic.morph_forward(p2, batch, cfg, mode)
+    np.testing.assert_array_equal(np.asarray(o1["final"]), np.asarray(o2["final"]))
+
+
+def test_moe_width_reduces_topk():
+    cfg = smoke_config("mixtral-8x22b")
+    mode = MorphMode(depth=cfg.n_groups, width=0.5)
+    cfg_m = elastic.morph_config(cfg, mode)
+    assert cfg_m.top_k == max(1, cfg.top_k // 2)
+    assert cfg_m.n_experts == cfg.n_experts  # experts not sliced
+
+
+def test_morph_controller_no_recompile_switching():
+    cfg = smoke_config("mamba2-370m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ctrl = make_serve_controller(params, cfg)
+    caches = {}
+    for m in ctrl.modes:
+        cfg_m = elastic.morph_config(cfg, m)
+        caches[m.name] = init_decode_cache(cfg_m, 2, 8)
+    ctrl.warmup()
+    n_compiles = ctrl.stats["compiles"]
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for m in list(ctrl.modes) * 2:  # switch through all modes twice
+        ctrl.set_mode(m)
+        lg, caches[m.name] = ctrl(params, caches[m.name], tok)
+        assert bool(jnp.isfinite(lg).all())
+    assert ctrl.stats["compiles"] == n_compiles, "switch must not recompile"
+
+
+def test_invalid_width_rejected():
+    cfg = smoke_config("tinyllama-1.1b")  # kv heads = 2
+    with pytest.raises(ValueError):
+        elastic.morph_config(cfg, MorphMode(depth=cfg.n_groups, width=0.3))
+    with pytest.raises(ValueError):
+        elastic.morph_config(cfg, MorphMode(depth=0, width=1.0))

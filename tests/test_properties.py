@@ -1,0 +1,197 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.core.neuroforge import (
+    Constraints,
+    DesignPoint,
+    DesignSpace,
+    estimate,
+    pareto_is_consistent,
+    run_moga,
+)
+from repro.core.distillcycle import kd_loss
+from repro.configs import smoke_config
+from repro.kernels import morph_matmul
+from repro.kernels.ref import morph_matmul_ref
+from repro.optim import OptimizerConfig, apply_updates, init_opt_state
+from repro.runtime import dequantize, quantize
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# analytical model invariants
+# ---------------------------------------------------------------------------
+
+_CFG = get_config("tinyllama-1.1b")
+_CELL = SHAPE_BY_NAME["train_4k"]
+
+
+def _point(dp, tp, mb, remat="full"):
+    return DesignPoint(dp=dp, tp=tp, microbatches=mb, remat=remat,
+                       param_dtype="bfloat16", moment_dtype="float32",
+                       grad_comm="allreduce", kv_quant=False, attn_chunk=1024,
+                       capacity_factor=1.25, width=1.0)
+
+
+@given(st.sampled_from([1, 2, 4, 8, 16]), st.sampled_from([1, 2, 4, 8, 16]),
+       st.sampled_from([1, 2, 4, 8]))
+@settings(**SETTINGS)
+def test_estimate_positive_and_finite(dp, tp, mb):
+    rep = estimate(_CFG, _CELL, _point(dp, tp, mb))
+    assert rep.flops > 0 and rep.hbm_traffic > 0
+    assert rep.latency_s == max(rep.compute_s, rep.memory_s, rep.collective_s)
+    assert np.isfinite(rep.hbm_capacity_per_chip)
+
+
+@given(st.sampled_from([1, 2, 4, 8]), st.sampled_from([2, 4, 8, 16]))
+@settings(**SETTINGS)
+def test_more_chips_never_increase_compute_term(tp, scale):
+    a = estimate(_CFG, _CELL, _point(16, tp, 1))
+    b = estimate(_CFG, _CELL, _point(16 * scale, tp, 1))
+    assert b.compute_s <= a.compute_s * 1.0001
+
+
+@given(st.sampled_from([2, 4, 8, 16]))
+@settings(**SETTINGS)
+def test_tp_reduces_capacity(tp):
+    a = estimate(_CFG, _CELL, _point(16, 1, 1))
+    b = estimate(_CFG, _CELL, _point(16, tp, 1))
+    assert b.hbm_capacity_per_chip < a.hbm_capacity_per_chip
+
+
+@given(st.sampled_from(["none", "dots", "full"]))
+@settings(**SETTINGS)
+def test_remat_monotone(remat):
+    """More remat -> never less compute, never more activation capacity."""
+    base = estimate(_CFG, _CELL, _point(16, 16, 2, "none"))
+    other = estimate(_CFG, _CELL, _point(16, 16, 2, remat))
+    assert other.compute_s >= base.compute_s * 0.999
+    assert other.hbm_capacity_per_chip <= base.hbm_capacity_per_chip * 1.001
+
+
+# ---------------------------------------------------------------------------
+# MOGA invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=5, deadline=None)
+def test_moga_front_nondominated_and_feasible(seed):
+    res = run_moga(_CFG, _CELL, pop_size=16, generations=4, seed=seed)
+    assert pareto_is_consistent(res.pareto)
+    if any(p.feasible for p in res.population):
+        assert all(p.feasible for p in res.pareto)
+
+
+def test_moga_front_dominates_random_sampling():
+    """The GA front should weakly dominate random search at equal budget."""
+    import random as _r
+
+    res = run_moga(_CFG, _CELL, pop_size=24, generations=8, seed=3)
+    space = DesignSpace(_CFG, _CELL, n_chips=256)
+    rng = _r.Random(3)
+    rand_pts = [space.decode(tuple(rng.randrange(b) for b in space.bounds()))
+                for _ in range(res.evaluations)]
+    rand_best = min(estimate(_CFG, _CELL, p).latency_s
+                    for p in rand_pts
+                    if estimate(_CFG, _CELL, p).fits)
+    ga_best = min(p.report.latency_s for p in res.pareto)
+    assert ga_best <= rand_best * 1.05  # allow tie within 5%
+
+
+# ---------------------------------------------------------------------------
+# kernel property: morph_matmul == oracle for random active widths
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_morph_matmul_random_widths(an, ak, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed % 2**31))
+    x = jax.random.normal(kx, (32, 64), jnp.float32)
+    w = jax.random.normal(kw, (64, 64), jnp.float32)
+    y = morph_matmul(x, w, an, ak, block=(16, 16, 16), interpret=True)
+    yr = morph_matmul_ref(x, w, an, ak)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# optimizer invariants
+# ---------------------------------------------------------------------------
+
+@given(st.floats(1e-5, 1e-1), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_adamw_first_step_is_sign_descent(lr, seed):
+    """With zero init moments, step 1 of Adam = lr * sign(g) / (1 + eps')."""
+    key = jax.random.PRNGKey(seed % 2**31)
+    p = {"w": jax.random.normal(key, (8, 8))}
+    g = {"w": jax.random.normal(jax.random.fold_in(key, 1), (8, 8))}
+    ocfg = OptimizerConfig(lr=lr, weight_decay=0.0, grad_clip=1e9)
+    opt = init_opt_state(p, ocfg)
+    p2, opt2, _ = apply_updates(p, g, opt, ocfg, 1.0)
+    delta = np.asarray(p["w"] - p2["w"])
+    expect = lr * np.sign(np.asarray(g["w"]))
+    np.testing.assert_allclose(delta, expect, atol=lr * 1e-2)
+    assert int(opt2.step) == 1
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_grad_clip_bounds_global_norm(seed):
+    from repro.optim import clip_by_global_norm, global_norm
+
+    key = jax.random.PRNGKey(seed % 2**31)
+    g = {"a": 100.0 * jax.random.normal(key, (16,)),
+         "b": 100.0 * jax.random.normal(jax.random.fold_in(key, 1), (4, 4))}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# KD loss invariants (Eq. 17)
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.5, 8.0), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_kd_loss_nonnegative_and_zero_at_match(tau, seed):
+    cfg = smoke_config("tinyllama-1.1b")
+    key = jax.random.PRNGKey(seed % 2**31)
+    logits = jax.random.normal(key, (2, 4, cfg.padded_vocab()))
+    assert float(kd_loss(logits, logits, cfg, tau)) < 1e-4
+    other = jax.random.normal(jax.random.fold_in(key, 1), logits.shape)
+    assert float(kd_loss(other, logits, cfg, tau)) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# compression invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(1e-3, 1e3))
+@settings(**SETTINGS)
+def test_quantize_roundtrip_error_bound(seed, scale):
+    key = jax.random.PRNGKey(seed % 2**31)
+    x = scale * jax.random.normal(key, (64,))
+    q, s = quantize(x)
+    err = np.max(np.abs(np.asarray(dequantize(q, s) - x)))
+    assert err <= float(s) * 0.5 + 1e-9  # half-ULP of the int8 grid
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 1000), st.sampled_from([1, 2, 4]))
+@settings(**SETTINGS)
+def test_pipeline_global_stream_invariant_under_sharding(step, n_shards):
+    from repro.data import DataConfig, make_batch
+
+    cfg = smoke_config("tinyllama-1.1b")
+    full = make_batch(cfg, DataConfig(seed=5, global_batch=8, seq_len=16), step)
+    parts = [make_batch(cfg, DataConfig(seed=5, global_batch=8, seq_len=16,
+                                        n_shards=n_shards, shard=i), step)
+             for i in range(n_shards)]
+    merged = np.concatenate([p["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(merged, full["tokens"])
