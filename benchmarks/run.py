@@ -12,6 +12,7 @@ index):
   dse_speed           -> §II.A    (fast DSE without synthesis-in-loop)
   kernel_bench        -> kernels  (per-kernel microbench)
   roofline_report     -> §Roofline (reads dry-run JSON)
+  serve_continuous    -> §Runtime (continuous batching + SLO mode churn)
 """
 import sys
 import traceback
@@ -27,6 +28,7 @@ def main() -> None:
         morph_throughput,
         pareto_front,
         roofline_report,
+        serve_continuous,
         width_morph,
     )
 
@@ -41,6 +43,7 @@ def main() -> None:
         "dse_speed": dse_speed.run,
         "kernel_bench": kernel_bench.run,
         "roofline_report": roofline_report.run,
+        "serve_continuous": serve_continuous.run,
     }
     for name, fn in suites.items():
         if only and name != only:

@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: run the pytest suite with a timeout and print the
+# pass/fail delta vs the seed baseline (124 passed / 5 failed / 1 collection
+# error at repo seed). Exits non-zero on any failure/error or if passes
+# regress below the baseline.
+#
+#   scripts/ci.sh            # default 1800s timeout
+#   CI_TIMEOUT=600 scripts/ci.sh
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+SEED_PASSED=124
+SEED_FAILED=5
+SEED_ERRORS=1
+TIMEOUT="${CI_TIMEOUT:-1800}"
+
+out=$(PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
+      python -m pytest -q 2>&1)
+status=$?
+echo "$out" | tail -25
+
+if [ $status -eq 124 ]; then
+    echo "CI: TIMEOUT after ${TIMEOUT}s"
+    exit 124
+fi
+
+summary=$(echo "$out" | grep -E '[0-9]+ (passed|failed|error)' | tail -1)
+passed=$(echo "$summary" | grep -oE '[0-9]+ passed' | grep -oE '[0-9]+' || echo 0)
+failed=$(echo "$summary" | grep -oE '[0-9]+ failed' | grep -oE '[0-9]+' || echo 0)
+errors=$(echo "$summary" | grep -oE '[0-9]+ error' | grep -oE '[0-9]+' || echo 0)
+passed=${passed:-0}; failed=${failed:-0}; errors=${errors:-0}
+
+echo ""
+echo "CI: passed=$passed failed=$failed errors=$errors"
+echo "CI: delta vs seed baseline ($SEED_PASSED passed / $SEED_FAILED failed / $SEED_ERRORS collection error):"
+echo "CI:   passed $((passed - SEED_PASSED)) | failed $((failed - SEED_FAILED)) | errors $((errors - SEED_ERRORS))"
+
+if [ "$failed" -gt 0 ] || [ "$errors" -gt 0 ]; then
+    echo "CI: FAIL (failures or errors present)"
+    exit 1
+fi
+if [ "$passed" -lt "$SEED_PASSED" ]; then
+    echo "CI: FAIL (fewer passes than seed baseline)"
+    exit 1
+fi
+echo "CI: OK"

@@ -1,0 +1,63 @@
+"""jax version-compatibility shims.
+
+The codebase targets the jax >= 0.7 mesh/shard_map surface (``jax.set_mesh``,
+top-level ``jax.shard_map`` with ``check_vma``, ``jax.sharding.AxisType``);
+the container image ships jax 0.4.x, where those live under older names:
+
+  * ``jax.set_mesh``            -> ``Mesh`` is itself a context manager
+  * ``jax.shard_map(check_vma)``-> ``jax.experimental.shard_map`` (``check_rep``)
+  * ``AxisType.Auto``           -> absent; Auto is the only behaviour
+
+Everything (src, subprocess test scripts, benchmarks) goes through this
+module so the version split lives in exactly one place.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` pinning Auto axis types where the concept exists.
+
+    We rely on GSPMD propagation; jax 0.9 flips the default axis type, so pin
+    Auto explicitly whenever the installed jax knows about axis types.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh(mesh)`` context: falls back to the Mesh object itself,
+    which is a context manager on jax <= 0.5."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict.
+
+    jax >= 0.6 returns a dict; 0.4.x returns a one-element list of dicts
+    (one per computation). Absent/empty analyses become {}.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Top-level ``jax.shard_map``; on old jax, ``check_vma`` maps to the
+    experimental entry point's ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

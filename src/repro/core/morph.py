@@ -12,13 +12,66 @@ count) so tests can assert the no-copy/no-recompile invariants.
 """
 from __future__ import annotations
 
+import bisect
 import time
-from typing import Callable, Dict, Optional, Tuple
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 
 from repro.configs.base import ModelConfig, MorphMode
 from repro.core import elastic
+
+
+class ModeTelemetry:
+    """Online per-mode step-latency / throughput statistics.
+
+    Latencies are kept sorted in a bounded window: percentile queries are
+    O(1); recording is O(window) worst case (sorted-list insert/evict) —
+    trivial at serving tick rates with the default window of 512.
+    ``tokens_per_s`` is aggregate over everything recorded.
+    """
+
+    def __init__(self, window: int = 512):
+        self._window = window
+        self._sorted: List[float] = []  # sorted latencies, bounded
+        self._fifo: Deque[float] = deque()  # same values in arrival order
+        self.steps = 0
+        self.tokens = 0
+        self.total_s = 0.0
+
+    def record(self, dt_s: float, tokens: int = 0) -> None:
+        self.steps += 1
+        self.tokens += tokens
+        self.total_s += dt_s
+        bisect.insort(self._sorted, dt_s)
+        self._fifo.append(dt_s)
+        if len(self._fifo) > self._window:
+            old = self._fifo.popleft()
+            self._sorted.pop(bisect.bisect_left(self._sorted, old))
+
+    def _quantile(self, q: float) -> float:
+        if not self._sorted:
+            return 0.0
+        i = min(len(self._sorted) - 1, int(q * len(self._sorted)))
+        return self._sorted[i]
+
+    @property
+    def p50_s(self) -> float:
+        return self._quantile(0.50)
+
+    @property
+    def p95_s(self) -> float:
+        return self._quantile(0.95)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.total_s if self.total_s > 0 else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {"steps": self.steps, "tokens": self.tokens,
+                "p50_ms": self.p50_s * 1e3, "p95_ms": self.p95_s * 1e3,
+                "tokens_per_s": self.tokens_per_s}
 
 
 class MorphController:
@@ -28,9 +81,15 @@ class MorphController:
                  modes: Optional[Tuple[MorphMode, ...]] = None):
         self.cfg = cfg
         self.modes = tuple(modes or cfg.elastic.modes(cfg.n_groups))
+        self.mode_by_name = {m.name: m for m in self.modes}
         self._factory = step_factory
         self._compiled: Dict[str, Callable] = {}
         self.stats = {"compiles": 0, "dispatches": 0, "switches": 0}
+        self.telemetry: Dict[str, ModeTelemetry] = {m.name: ModeTelemetry()
+                                                   for m in self.modes}
+        # (dispatch#, from, to) per set_mode change; bounded for long serves
+        self.switch_log: Deque[Tuple[int, str, str]] = deque(maxlen=4096)
+        self.last_step_s = 0.0  # latency of the most recent timed_step
         self._mode = self.modes[-1]  # full model by default
 
     @property
@@ -38,10 +97,12 @@ class MorphController:
         return self._mode
 
     def set_mode(self, mode: MorphMode) -> None:
-        if mode.name not in {m.name for m in self.modes}:
+        if mode.name not in self.mode_by_name:
             raise KeyError(f"mode {mode.name} not in deployed mode table")
         if mode.name != self._mode.name:
             self.stats["switches"] += 1
+            self.switch_log.append(
+                (self.stats["dispatches"], self._mode.name, mode.name))
         self._mode = mode
 
     def _get(self, mode: MorphMode) -> Callable:
@@ -61,8 +122,34 @@ class MorphController:
         self.stats["dispatches"] += 1
         return self._get(self._mode)(*args, **kw)
 
+    def timed_step(self, *args, mode: Optional[MorphMode] = None, tokens: int = 0,
+                   **kw):
+        """Dispatch one step, block on the result, record telemetry.
+
+        ``mode`` dispatches a specific executable WITHOUT going through
+        ``set_mode``: a serving engine interleaving draining mode groups is
+        not making policy decisions, and must not inflate the switch
+        counter/log. ``tokens`` is the number of useful tokens this step
+        produced (active batch slots), feeding ``tokens_per_s``. The measured
+        latency is the online correction signal an SLO policy blends with
+        the analytical estimate.
+        """
+        m = self._mode if mode is None else mode
+        self.stats["dispatches"] += 1
+        t0 = time.perf_counter()
+        out = self._get(m)(*args, **kw)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        self.telemetry[m.name].record(dt, tokens)
+        self.last_step_s = dt
+        return out
+
     def step_for(self, mode: MorphMode) -> Callable:
         return self._get(mode)
+
+    def telemetry_summary(self) -> Dict[str, Dict[str, float]]:
+        return {name: t.summary() for name, t in self.telemetry.items()
+                if t.steps}
 
 
 def make_serve_controller(params, cfg: ModelConfig,

@@ -43,6 +43,7 @@ class CostReport:
     model_flops: float  # 6*N*D train / 2*N*tokens inference (active params)
     fits: bool
     detail: Dict[str, float] = dataclasses.field(default_factory=dict)
+    hw: HardwareSpec = V5E  # the spec estimate() was called with
 
     @property
     def bound(self) -> str:
@@ -53,8 +54,8 @@ class CostReport:
     @property
     def roofline_fraction(self) -> float:
         """MODEL_FLOPS-ideal time over the dominant term (MFU-style score)."""
-        n_chips = self.flops / max(self.compute_s, 1e-30) / V5E.peak_flops
-        ideal = self.model_flops / (n_chips * V5E.peak_flops)
+        n_chips = self.flops / max(self.compute_s, 1e-30) / self.hw.peak_flops
+        ideal = self.model_flops / (n_chips * self.hw.peak_flops)
         return ideal / max(self.latency_s, 1e-30)
 
 
@@ -263,7 +264,7 @@ def estimate(cfg: ModelConfig, cell: ShapeCell, pt: DesignPoint,
         flops=flops, hbm_traffic=traffic, coll_bytes_per_chip=coll_per_chip,
         hbm_capacity_per_chip=cap, compute_s=compute_s, memory_s=memory_s,
         collective_s=collective_s, latency_s=latency, model_flops=model_flops,
-        fits=cap <= hw.hbm_bytes, detail=detail)
+        fits=cap <= hw.hbm_bytes, detail=detail, hw=hw)
 
 
 # tiny helper for morph_config call above

@@ -67,8 +67,23 @@ def morph_matmul(x: jnp.ndarray, w: jnp.ndarray,
     K2, N = w.shape
     assert K == K2, (x.shape, w.shape)
     bm, bk, bn = (min(block[0], M), min(block[1], K), min(block[2], N))
-    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (
-        f"dims {(M, K, N)} must tile by {(bm, bk, bn)}")
+    # Non-tile-divisible dims: zero-pad up to the next tile multiple. The
+    # kernel's active_n / active_k masking already zeroes everything beyond
+    # the true (K, N), so padded columns/rows contribute nothing; padded M
+    # rows are sliced off the result.
+    pad_m = -M % bm
+    pad_k = -K % bk
+    pad_n = -N % bn
+    if pad_m or pad_k or pad_n:
+        x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+        w = jnp.pad(w, ((0, pad_k), (0, pad_n)))
+        if active_n is None:
+            active_n = N
+        if active_k is None:
+            active_k = K
+        out = morph_matmul(x, w, active_n, active_k, block=block,
+                           interpret=interpret)
+        return out[:M, :N]
     nk = K // bk
     an = jnp.asarray(N if active_n is None else active_n, jnp.int32).reshape(1)
     ak = jnp.asarray(K if active_k is None else active_k, jnp.int32).reshape(1)

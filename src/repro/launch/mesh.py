@@ -1,13 +1,7 @@
 """Production mesh construction (assignment-mandated shapes)."""
 from __future__ import annotations
 
-import jax
-
-
-def _mk(shape, axes):
-    # pin Auto axis types: we rely on GSPMD propagation (jax 0.9 default flips)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+from repro.compat import make_mesh as _mk
 
 
 def make_production_mesh(*, multi_pod: bool = False):

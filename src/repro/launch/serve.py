@@ -1,9 +1,17 @@
-"""Serving driver with NeuroMorph runtime reconfiguration.
+"""Serving driver: continuous-batching engine with NeuroMorph reconfiguration.
 
-Decodes batched requests while switching morph modes on the fly — the
-paper's runtime accuracy/latency/power trade-off loop. Modes switch via the
-MorphController dispatch table: no weight movement, no recompilation after
-warmup (asserted and reported).
+Drives ``repro.runtime.serving.ServingEngine`` — request queue, per-step slot
+admission, per-mode slot groups — while switching morph modes on the fly.
+Modes switch via the MorphController dispatch table: no weight movement, no
+recompilation after warmup (asserted and reported).
+
+Two traffic shapes:
+  * default: a fixed round of ``--batch`` x enough requests to generate
+    ``--tokens`` tokens, cycling the admission mode every ``--switch-every``
+    engine steps (the original demo's forced mode churn).
+  * ``--budget-ms``: SLO-driven — the admission mode is chosen each tick as
+    the widest mode whose predicted step latency (analytical estimate,
+    corrected online by measured telemetry) fits the budget.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
@@ -12,69 +20,79 @@ Example:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.configs.base import MorphMode
 from repro.core import elastic
-from repro.core.morph import MorphController, make_serve_controller
-from repro.models.model import init_decode_cache, init_params
+from repro.models.model import init_params
+from repro.runtime.serving import Request, ServingEngine, SLOPolicy
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=64)
-    ap.add_argument("--switch-every", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4, help="batch slots per mode")
+    ap.add_argument("--tokens", type=int, default=64,
+                    help="total tokens to generate across all requests")
+    ap.add_argument("--switch-every", type=int, default=16,
+                    help="cycle admission mode every N engine steps")
+    ap.add_argument("--budget-ms", type=float, default=0.0,
+                    help="if > 0, use the SLO policy with this latency budget")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.batch < 1:
+        ap.error(f"--batch must be >= 1, got {args.batch}")
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
     modes = cfg.elastic.modes(cfg.n_groups)
-    ctrl = make_serve_controller(params, cfg, modes)
 
-    # one cache per mode (weights shared; KV dims differ per width)
-    caches = {}
-    for m in modes:
-        cfg_m = elastic.morph_config(cfg, m)
-        caches[m.name] = init_decode_cache(cfg_m, args.batch, args.tokens + 8)
+    per_req = max(4, args.tokens // (2 * args.batch))
+    n_requests = max(args.batch, (args.tokens + per_req - 1) // per_req)
+    capacity = per_req + 8
 
-    print(f"[serve] {cfg.name}: modes = {[m.name for m in modes]}")
-    ctrl.warmup()
-    compiles_after_warmup = ctrl.stats["compiles"]
+    engine = ServingEngine(params, cfg, batch_size=args.batch,
+                           cache_capacity=capacity, modes=modes)
+    print(f"[serve] {cfg.name}: modes = {[m.name for m in modes]} "
+          f"requests={n_requests} x {per_req} tokens, batch={args.batch}")
+    engine.warmup()
 
-    tok = jnp.zeros((args.batch, 1), jnp.int32)
-    times = {m.name: [] for m in modes}
+    for i in range(n_requests):
+        engine.submit(Request(rid=i, prompt=(1 + i % (cfg.vocab_size - 1),),
+                              max_new_tokens=per_req))
+
+    policy = None
+    if args.budget_ms > 0:
+        policy = SLOPolicy(cfg, engine.ctrl, batch_size=args.batch,
+                           cache_capacity=capacity)
+
     mode_idx = len(modes) - 1
-    for t in range(args.tokens):
-        if t and t % args.switch_every == 0:
+    busy = 0.0
+    while engine.queue or engine.n_active:
+        if policy is not None:
+            engine.set_admission_mode(policy.choose(args.budget_ms * 1e-3))
+        elif engine.step_count and engine.step_count % args.switch_every == 0:
             mode_idx = (mode_idx - 1) % len(modes)  # degrade then wrap
-            ctrl.set_mode(modes[mode_idx])
-        m = ctrl.mode
-        t0 = time.perf_counter()
-        logits, caches[m.name] = ctrl(params, caches[m.name], tok)
-        logits.block_until_ready()
-        times[m.name].append(time.perf_counter() - t0)
-        tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+            engine.set_admission_mode(modes[mode_idx])
+        busy += engine.step()
 
-    assert ctrl.stats["compiles"] == compiles_after_warmup, \
+    assert engine.ctrl.stats["compiles"] == engine.compiles_after_warmup, \
         "runtime switch must not recompile"
-    print(f"[serve] switches={ctrl.stats['switches']} "
-          f"recompiles_after_warmup=0 dispatches={ctrl.stats['dispatches']}")
-    for m in modes:
-        if times[m.name]:
-            med = np.median(times[m.name]) * 1e3
-            frac = elastic.flops_fraction(cfg, m)
-            print(f"  mode {m.name:8s} median {med:8.2f} ms/token "
-                  f"active-FLOPs {frac * 100:5.1f}%")
+    ctrl = engine.ctrl
+    generated = sum(len(r.generated) for r in engine.completed)
+    print(f"[serve] completed={len(engine.completed)} generated={generated} "
+          f"switches={ctrl.stats['switches']} "
+          f"admission_switches={len(engine.admission_switch_log)} "
+          f"recompiles_after_warmup=0 dispatches={ctrl.stats['dispatches']} "
+          f"tokens/s={generated / busy if busy else 0.0:.1f}")
+    for name, t in ctrl.telemetry_summary().items():
+        mode = ctrl.mode_by_name[name]
+        frac = elastic.flops_fraction(cfg, mode)
+        print(f"  mode {name:8s} p50 {t['p50_ms']:8.2f} ms  p95 {t['p95_ms']:8.2f} ms  "
+              f"{t['tokens_per_s']:8.1f} tok/s  active-FLOPs {frac * 100:5.1f}%")
     return 0
 
 

@@ -7,6 +7,7 @@ from repro.models.model import (
     loss_fn,
     pos_kind,
     prefill,
+    reset_cache_slot,
 )
 
 __all__ = [
@@ -18,4 +19,5 @@ __all__ = [
     "loss_fn",
     "pos_kind",
     "prefill",
+    "reset_cache_slot",
 ]

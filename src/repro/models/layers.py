@@ -332,16 +332,21 @@ def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, dtype):
 
 
 def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False):
-    """One-token decode. x: (B,1,d); cache dict; pos: scalar int32.
+    """One-token decode. x: (B,1,d); cache dict; pos: scalar int32 or (B,)
+    per-slot positions (continuous batching: each batch slot is an independent
+    request at its own sequence offset).
 
     Returns (out, new_cache). For cross-attention the cache holds precomputed
     encoder K/V and is returned unchanged.
     """
     dt = x.dtype
     B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    qpos = pos[:, None] if per_slot else jnp.full((1,), pos, jnp.int32)
     q = _split_heads(matmul(x, params["wq"], dt), cfg.n_heads, cfg.head_dim)
     if cfg.use_rope and not cross:
-        q = rope(q, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+        q = rope(q, qpos, cfg.rope_theta)
 
     if cross:
         k, v = cache["k"], cache["v"]
@@ -350,7 +355,6 @@ def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False):
             v = dequantize_kv(v, cache["v_scale"], dt)
         S = k.shape[1]
         kpos = jnp.arange(S)
-        qpos = jnp.full((1,), pos, jnp.int32)
         out = attention_full(q, k, v, cfg, qpos, kpos, causal=False)
         out = matmul(out.reshape(B, 1, cfg.q_dim), params["wo"], dt)
         return out, cache
@@ -358,37 +362,50 @@ def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False):
     k_new = _split_heads(matmul(x, params["wk"], dt), cfg.n_kv_heads, cfg.head_dim)
     v_new = _split_heads(matmul(x, params["wv"], dt), cfg.n_kv_heads, cfg.head_dim)
     if cfg.use_rope:
-        k_new = rope(k_new, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+        k_new = rope(k_new, qpos, cfg.rope_theta)
 
     S = cache["k"].shape[1]
     window = cfg.sliding_window
     slot = jnp.mod(pos, S) if window else jnp.minimum(pos, S - 1)
 
+    if per_slot:
+        batch_ix = jnp.arange(B)
+
+        def write(buf, new):
+            return buf.at[batch_ix, slot].set(new[:, 0].astype(buf.dtype))
+    else:
+        def write(buf, new):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, new.astype(buf.dtype), slot, axis=1)
+
     new_cache = dict(cache)
     if cfg.kv_quant:
         kq, ks = quantize_kv(k_new)
         vq, vs = quantize_kv(v_new)
-        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
-        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
-        new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=1)
-        new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot, axis=1)
+        new_cache["k"] = write(cache["k"], kq)
+        new_cache["v"] = write(cache["v"], vq)
+        new_cache["k_scale"] = write(cache["k_scale"], ks)
+        new_cache["v_scale"] = write(cache["v_scale"], vs)
         k = dequantize_kv(new_cache["k"], new_cache["k_scale"], dt)
         v = dequantize_kv(new_cache["v"], new_cache["v_scale"], dt)
     else:
-        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        new_cache["k"] = write(cache["k"], k_new)
+        new_cache["v"] = write(cache["v"], v_new)
         k, v = new_cache["k"].astype(dt), new_cache["v"].astype(dt)
 
+    # kpos: absolute position of each cache slot. With per-slot pos the mask
+    # broadcasts to (B, S) — stale entries from a slot's previous request sit
+    # at idx > pos and are masked out, which is what makes in-place slot
+    # re-admission safe without zeroing the KV buffer.
+    pos_b = pos[:, None] if per_slot else pos
+    idx = jnp.arange(S)[None, :] if per_slot else jnp.arange(S)
     if window:
         # rolling buffer: absolute position of slot i given current pos
-        idx = jnp.arange(S)
-        wraps = jnp.where(idx <= jnp.mod(pos, S), 0, 1)
-        kpos = (pos // S - wraps) * S + idx  # absolute positions, may be negative
+        wraps = jnp.where(idx <= jnp.mod(pos_b, S), 0, 1)
+        kpos = (pos_b // S - wraps) * S + idx  # absolute positions, may be negative
         kpos = jnp.where(kpos < 0, -10**9, kpos)  # unwritten slots -> masked
     else:
-        idx = jnp.arange(S)
-        kpos = jnp.where(idx <= pos, idx, -10**9)
-    qpos = jnp.full((1,), pos, jnp.int32)
+        kpos = jnp.where(idx <= pos_b, idx, -10**9)
     out = attention_full(q, k, v, cfg, qpos, kpos, causal=True)
     out = matmul(out.reshape(B, 1, cfg.q_dim), params["wo"], dt)
     return out, new_cache

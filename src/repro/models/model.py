@@ -300,8 +300,14 @@ def loss_fn(params, batch, cfg: ModelConfig, *, depth=None, remat: str = "none",
 # ---------------------------------------------------------------------------
 
 
-def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int) -> Cache:
-    """Zeroed cache with room for ``capacity`` tokens."""
+def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int, *,
+                      per_slot: bool = False) -> Cache:
+    """Zeroed cache with room for ``capacity`` tokens.
+
+    ``per_slot=True`` gives every batch slot its own position counter (shape
+    ``(batch,)`` instead of a scalar) so independent requests can occupy
+    slots at different sequence offsets — the continuous-batching layout.
+    """
     dt = jnp.dtype(cfg.dtype)
 
     def one_layer(p: int):
@@ -318,7 +324,30 @@ def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int) -> Cache:
     stack = {f"pos{p}": jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), one_layer(p))
         for p in range(cfg.period)}
-    return {"pos": jnp.zeros((), jnp.int32), "stack": stack}
+    pos = jnp.zeros((batch,) if per_slot else (), jnp.int32)
+    return {"pos": pos, "stack": stack}
+
+
+_RECURRENT_CACHE_KEYS = ("conv_x", "conv_bc", "state")
+
+
+def reset_cache_slot(cache: Cache, slot) -> Cache:
+    """Rewind one batch slot of a per-slot cache for a freshly admitted request.
+
+    Zeroes the slot's recurrent state (SSM conv tails / state, which carry
+    across tokens unconditionally) and its position counter. Attention KV
+    needs no zeroing: ``mha_decode`` masks cache entries at idx > pos, so a
+    rewound position hides the previous occupant's keys. Jit this once per
+    cache structure (with the cache donated) — ``slot`` is a traced scalar,
+    so re-admission never recompiles or copies.
+    """
+    stack = {
+        pname: {k: (a.at[:, slot].set(jnp.zeros_like(a[:, slot]))
+                    if k in _RECURRENT_CACHE_KEYS else a)
+                for k, a in layer.items()}
+        for pname, layer in cache["stack"].items()
+    }
+    return {"pos": cache["pos"].at[slot].set(0), "stack": stack}
 
 
 def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig):
@@ -366,10 +395,11 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int]
     """
     depth = depth if depth is not None else cfg.n_groups
     dt = jnp.dtype(cfg.dtype)
-    pos = cache["pos"]
+    pos = cache["pos"]  # scalar, or (B,) per-slot positions
     h = params["embed"][tokens].astype(dt)
     if pos_kind(cfg) == "sinusoidal":
-        h = h + L.sinusoidal_pos(jnp.full((1,), pos, jnp.int32), cfg.d_model).astype(dt)
+        spos = pos[:, None] if pos.ndim == 1 else jnp.full((1,), pos, jnp.int32)
+        h = h + L.sinusoidal_pos(spos, cfg.d_model).astype(dt)
 
     stack_p = jax.tree_util.tree_map(lambda a: a[:depth], params["stack"])
     full_stack = cache["stack"]

@@ -12,8 +12,18 @@ from repro.runtime.fault_tolerance import (
     TrainRunner,
     elastic_reshard,
 )
+from repro.runtime.serving import (
+    Request,
+    ServingEngine,
+    SLOPolicy,
+    poisson_trace,
+)
 
 __all__ = [
+    "Request",
+    "ServingEngine",
+    "SLOPolicy",
+    "poisson_trace",
     "compress_with_feedback",
     "compressed_psum",
     "dequantize",

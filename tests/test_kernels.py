@@ -58,6 +58,32 @@ def test_morph_matmul_one_executable_many_widths():
         np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
 
 
+@pytest.mark.parametrize("m,k,n,block", [
+    (100, 96, 200, (128, 128, 128)),  # regression: non-tile-divisible dims
+    (100, 96, 200, (32, 32, 32)),
+    (7, 5, 3, (16, 16, 16)),
+])
+def test_morph_matmul_non_divisible_dims(m, k, n, block):
+    """Dims that don't tile must be padded + sliced, not asserted out."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(4))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    y = morph_matmul(x, w, block=block, interpret=True)
+    assert y.shape == (m, n)
+    yr = ref.morph_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3, rtol=1e-3)
+
+
+def test_morph_matmul_non_divisible_with_active_width():
+    kx, kw = jax.random.split(jax.random.PRNGKey(5))
+    x = jax.random.normal(kx, (100, 96), jnp.float32)
+    w = jax.random.normal(kw, (96, 200), jnp.float32)
+    y = morph_matmul(x, w, 150, 80, block=(32, 32, 32), interpret=True)
+    yr = ref.morph_matmul_ref(x, w, 150, 80)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+    assert np.all(np.asarray(y)[:, 150:] == 0.0)
+
+
 def test_morph_matmul_batched():
     kx, kw = jax.random.split(jax.random.PRNGKey(3))
     x = jax.random.normal(kx, (3, 32, 64), jnp.float32)

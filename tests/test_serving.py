@@ -1,0 +1,209 @@
+"""Continuous-batching serving engine: no-recompile invariant, queue
+draining with exact per-request token counts, SLO budget policy, per-slot
+decode isolation, and controller telemetry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.configs.base import ShapeCell
+from repro.core.morph import ModeTelemetry
+from repro.core.neuroforge.analytical import estimate
+from repro.core.neuroforge.hw import V5E, HardwareSpec
+from repro.core.neuroforge.space import DesignPoint
+from repro.models import decode_step, init_decode_cache, init_params, reset_cache_slot
+from repro.runtime.serving import Request, ServingEngine, SLOPolicy, poisson_trace
+
+
+def _engine(arch="tinyllama-1.1b", batch=3, capacity=32):
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=batch, cache_capacity=capacity)
+    eng.warmup()
+    return cfg, eng
+
+
+# ---------------------------------------------------------------------------
+# engine invariants
+# ---------------------------------------------------------------------------
+
+
+def test_queue_drains_with_exact_token_counts():
+    """More requests than slots: slots are reused, every request finishes
+    with exactly max_new_tokens generated."""
+    cfg, eng = _engine(batch=2)
+    specs = [(1, 5), (3, 4), (2, 7), (1, 3), (2, 6), (4, 4), (1, 8)]
+    for rid, (plen, n_new) in enumerate(specs):
+        eng.submit(Request(rid=rid, prompt=tuple(range(1, 1 + plen)),
+                           max_new_tokens=n_new))
+    while eng.queue or eng.n_active:
+        eng.step()
+    assert len(eng.completed) == len(specs)
+    by_rid = {r.rid: r for r in eng.completed}
+    for rid, (plen, n_new) in enumerate(specs):
+        r = by_rid[rid]
+        assert len(r.generated) == n_new, (rid, r.generated)
+        assert r.fed == plen + n_new - 1  # last generated token is never re-fed
+
+
+def test_no_recompile_under_mixed_traffic():
+    """Arbitrary admission-mode churn + slot reuse after warmup must never
+    trigger a new compile."""
+    cfg, eng = _engine(batch=2)
+    frozen = eng.compiles_after_warmup
+    modes = eng.ctrl.modes
+    rid = 0
+    for round_ in range(3):
+        for m in modes:  # cycle through every mode
+            eng.set_admission_mode(m)
+            eng.submit(Request(rid=rid, prompt=(1 + rid % cfg.vocab_size,),
+                               max_new_tokens=3))
+            rid += 1
+            eng.step()
+    while eng.queue or eng.n_active:
+        eng.step()
+    assert eng.ctrl.stats["compiles"] == frozen, "mode churn recompiled"
+    assert eng.ctrl.stats["switches"] > 0
+    assert len(eng.completed) == rid
+    # in-flight requests finish in their admission mode
+    assert len({r.mode_name for r in eng.completed}) > 1
+
+
+def test_slo_policy_budget_tightening():
+    """Generous budget -> widest mode; tight budget -> narrowest mode; the
+    chosen mode's estimate fits the budget whenever any mode fits."""
+    cfg, eng = _engine(batch=2)
+    pol = SLOPolicy(cfg, eng.ctrl, batch_size=2, cache_capacity=32)
+    modes = eng.ctrl.modes
+    # analytical estimates are strictly increasing with active FLOPs
+    lats = [pol.est_latency(m) for m in modes]
+    assert lats == sorted(lats), lats
+    assert pol.choose(max(lats) * 10).name == modes[-1].name
+    assert pol.choose(min(lats) * 0.5).name == modes[0].name
+    mid = (lats[0] + lats[-1]) / 2
+    chosen = pol.choose(mid)
+    assert pol.est_latency(chosen) <= mid
+
+
+def test_slo_policy_uses_measured_telemetry():
+    """Once a mode has measured samples, its p50 replaces the raw estimate."""
+    cfg, eng = _engine(batch=2)
+    pol = SLOPolicy(cfg, eng.ctrl, batch_size=2, cache_capacity=32, min_samples=2)
+    m = eng.ctrl.modes[-1]
+    for _ in range(4):
+        eng.ctrl.telemetry[m.name].record(0.125, tokens=2)
+    assert pol.est_latency(m) == pytest.approx(0.125)
+
+
+def test_run_over_poisson_trace_completes_all():
+    cfg, eng = _engine(batch=3)
+    pol = SLOPolicy(cfg, eng.ctrl, batch_size=3, cache_capacity=32)
+    trace = poisson_trace(10, rate_per_s=5000.0, seed=2, vocab=cfg.vocab_size)
+    summary = eng.run(trace, budget_fn=lambda t: 10.0, policy=pol)
+    assert summary["completed"] == 10
+    assert summary["compiles"] == eng.compiles_after_warmup
+    assert summary["generated_tokens"] == sum(r.max_new_tokens for r in eng.completed)
+    assert summary["sustained_tokens_per_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# per-slot decode state (the layer under the engine)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-370m"])
+def test_per_slot_decode_isolation(arch):
+    """A slot admitted mid-stream must not perturb its neighbour: slot 0's
+    logits match a batch-1 decode of the same sequence exactly."""
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks_a = [3, 7, 11, 2, 9, 4]
+
+    cache1 = init_decode_cache(cfg, 1, 16)
+    ref = []
+    for t in toks_a:
+        lg, cache1 = decode_step(params, cache1, jnp.full((1, 1), t, jnp.int32), cfg)
+        ref.append(np.asarray(lg[0]))
+
+    cache2 = init_decode_cache(cfg, 2, 16, per_slot=True)
+    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+    reset = jax.jit(reset_cache_slot)
+    got = []
+    toks_b = [5, 1, 8, 6]
+    for i, t in enumerate(toks_a):
+        if i == 2:  # admit a second request mid-stream
+            cache2 = reset(cache2, jnp.int32(1))
+        tb = toks_b[i - 2] if i >= 2 else 0
+        lg, cache2 = step(params, cache2, jnp.array([[t], [tb]], jnp.int32))
+        got.append(np.asarray(lg[0]))
+    for i, (a, b) in enumerate(zip(ref, got)):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5, err_msg=str(i))
+    assert np.asarray(cache2["pos"]).tolist() == [6, 4]
+
+
+def test_reset_slot_hides_previous_occupant():
+    """After a slot is reset and re-admitted, the new request's output equals
+    a fresh-cache decode — the previous occupant's KV/state is invisible."""
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+    reset = jax.jit(reset_cache_slot)
+
+    cache = init_decode_cache(cfg, 1, 16, per_slot=True)
+    for t in [9, 13, 5]:  # first occupant
+        _, cache = step(params, cache, jnp.full((1, 1), t, jnp.int32))
+    cache = reset(cache, jnp.int32(0))
+    got = []
+    for t in [4, 2]:  # second occupant
+        lg, cache = step(params, cache, jnp.full((1, 1), t, jnp.int32))
+        got.append(np.asarray(lg[0]))
+
+    fresh = init_decode_cache(cfg, 1, 16, per_slot=True)
+    for i, t in enumerate([4, 2]):
+        lg, fresh = step(params, fresh, jnp.full((1, 1), t, jnp.int32))
+        np.testing.assert_allclose(got[i], np.asarray(lg[0]), atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# telemetry + analytical hw threading
+# ---------------------------------------------------------------------------
+
+
+def test_mode_telemetry_percentiles():
+    t = ModeTelemetry(window=100)
+    for v in [0.010, 0.020, 0.030, 0.040, 0.100]:
+        t.record(v, tokens=10)
+    assert t.p50_s == pytest.approx(0.030)
+    assert t.p95_s == pytest.approx(0.100)
+    assert t.tokens_per_s == pytest.approx(50 / 0.2)
+    s = t.summary()
+    assert s["steps"] == 5 and s["tokens"] == 50
+
+
+def test_mode_telemetry_window_evicts_oldest():
+    t = ModeTelemetry(window=3)
+    for v in [1.0, 2.0, 3.0, 0.001, 0.002, 0.003]:
+        t.record(v)
+    assert t.p95_s <= 0.003  # the big early outliers fell out of the window
+    assert t.steps == 6  # aggregate counters keep full history
+
+
+def test_cost_report_threads_hw_spec():
+    """estimate() must carry the HardwareSpec it was called with (the old
+    code hardcoded V5E inside roofline_fraction)."""
+    cfg = smoke_config("tinyllama-1.1b")
+    cell = ShapeCell("serve_step", seq_len=32, global_batch=4, kind="decode")
+    pt = DesignPoint(dp=1, tp=1, microbatches=1, remat="none",
+                     param_dtype="bfloat16", moment_dtype="float32",
+                     grad_comm="allreduce", kv_quant=False, attn_chunk=1024,
+                     capacity_factor=1.25, width=1.0)
+    slow = HardwareSpec(name="slow", peak_flops=V5E.peak_flops / 4,
+                        hbm_bw=V5E.hbm_bw / 4, hbm_bytes=V5E.hbm_bytes,
+                        ici_bw=V5E.ici_bw)
+    r_fast = estimate(cfg, cell, pt, hw=V5E)
+    r_slow = estimate(cfg, cell, pt, hw=slow)
+    assert r_fast.hw is V5E and r_slow.hw is slow
+    assert r_slow.latency_s > r_fast.latency_s
+    for r in (r_fast, r_slow):
+        assert 0 < r.roofline_fraction <= 1.0 + 1e-9
