@@ -35,13 +35,14 @@ def run(arch: str = "tinyllama-1.1b", train_steps: int = 6) -> None:
     ctrl = make_serve_controller(params, cfg)
     B = 4
     tok = jnp.zeros((B, 1), jnp.int32)
+    active = elastic.active_widths_batch(cfg, [1.0] * B)
     base_t = None
     for d in depths:
         mode = MorphMode(depth=d, width=1.0)
-        cfg_m = elastic.morph_config(cfg, mode)
-        cache = init_decode_cache(cfg_m, B, 16)
+        cache = init_decode_cache(cfg, B, 16, per_slot=True)
         step = ctrl.step_for(mode)
-        t = time_decode(step, params, cache, tok)
+        t = time_decode(lambda p, c, tk: step(p, c, tk, active),
+                        params, cache, tok)
         base_t = base_t or t
         frac = elastic.flops_fraction(cfg, mode)
         emit(f"depth_morph/{arch}/d{d}", t * 1e6, {

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.kernels import flash_attention_bshd, morph_matmul, ssd_scan_bshn
+from repro.kernels.morph_matmul import trace_count
 
 
 def run() -> None:
@@ -15,12 +16,26 @@ def run() -> None:
 
     x = jax.random.normal(ks[0], (256, 256), jnp.float32)
     w = jax.random.normal(ks[1], (256, 256), jnp.float32)
+    traces0 = trace_count()
     for an in (256, 128, 64):
         t = time_fn(lambda: morph_matmul(x, w, jnp.int32(an), None,
                                          block=(64, 64, 64), interpret=True))
         n_tiles = (256 // 64) * (max(an, 1) + 63) // 64 * (256 // 64)
+        # compile count measured, not asserted: the whole width sweep must
+        # ride a single trace of the jitted kernel core
         emit(f"kernel/morph_matmul/an{an}", t * 1e6,
-             {"active_tiles": n_tiles, "total_tiles": 4 * 4 * 4})
+             {"active_tiles": n_tiles, "total_tiles": 4 * 4 * 4,
+              "compiles_this_sweep": trace_count() - traces0})
+
+    # batched mixed-width: three rows at three widths, one launch, one trace
+    xb = jax.random.normal(ks[7], (3, 64, 256), jnp.float32)
+    an_b = jnp.array([256, 128, 64], jnp.int32)
+    traces1 = trace_count()
+    t = time_fn(lambda: morph_matmul(xb, w, an_b, None,
+                                     block=(64, 64, 64), interpret=True))
+    emit("kernel/morph_matmul/mixed_batch", t * 1e6,
+         {"active_cols_per_row": [256, 128, 64],
+          "compiles": trace_count() - traces1})
 
     q = jax.random.normal(ks[2], (2, 256, 4, 64), jnp.float32)
     k2 = jax.random.normal(ks[3], (2, 256, 2, 64), jnp.float32)

@@ -32,6 +32,8 @@ def main() -> None:
         width_morph,
     )
 
+    from repro.kernels.morph_matmul import trace_count
+
     only = sys.argv[1] if len(sys.argv) > 1 else ""
     suites = {
         "pareto_front": pareto_front.run,
@@ -49,11 +51,16 @@ def main() -> None:
         if only and name != only:
             continue
         print(f"# === {name} ===", flush=True)
+        t0 = trace_count()
         try:
             fn()
         except Exception:  # noqa: BLE001 — a failing suite must not kill the run
             print(f"{name}/SUITE_ERROR,0.0,{{}}")
             traceback.print_exc()
+        # single-executable accounting: morph kernel compiles this suite
+        # triggered (width sweeps should add shapes, never widths)
+        print(f"# {name}: morph_matmul_compiles={trace_count() - t0}",
+              flush=True)
 
 
 if __name__ == "__main__":

@@ -6,10 +6,12 @@ Phases:
   1. generous budget  -> policy holds the widest mode
   2. tightening budget -> policy downshifts to narrower modes mid-traffic
   3. generous again    -> policy recovers the widest mode
+  4. mixed-width churn -> slots of different widths share per-DEPTH decode
+     launches; reports actual launches vs the per-(depth, width) baseline
 
-Reports sustained tokens/s per phase, mode switch counts, and verifies the
-zero-recompiles-after-warmup invariant. Smoke-scale by default so it runs in
-CI; pass an arch name for the full config.
+Reports sustained tokens/s per phase, mode switch counts, decode launches
+per tick, and verifies the zero-recompiles-after-warmup invariant. Smoke-
+scale by default so it runs in CI; pass an arch name for the full config.
 
   PYTHONPATH=src python benchmarks/serve_continuous.py [arch] [n_requests]
 """
@@ -76,11 +78,51 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
                  "completed": summary["completed"],
                  "generated_tokens": summary["generated_tokens"],
                  "mode_switches": summary["mode_switches"],
+                 "decode_launches": summary["decode_launches"],
+                 "launches_per_tick": round(summary["launches_per_tick"], 2),
                  "recompiles_after_warmup":
                      summary["compiles"] - engine.compiles_after_warmup,
              })
 
-    n_switches = len(engine.admission_switch_log) - total_switches0
+    # mixed-width traffic: alternate admission width at full depth so slots
+    # of BOTH widths are in flight together. With per-depth groups they share
+    # one launch per tick; the per-mode baseline would have issued one launch
+    # per (depth, width) — the measured single-executable win.
+    slo_switches = list(engine.admission_switch_log)[total_switches0:]
+    full_depth = engine.ctrl.modes[-1].depth
+    width_modes = [m for m in engine.ctrl.modes if m.depth == full_depth]
+    mix = poisson_trace(n_requests, rate_per_s=rate, seed=23,
+                        prompt_len=(1, 3), new_tokens=(4, 10),
+                        vocab=cfg.vocab_size)
+    for r in mix:
+        engine.submit(r)
+    launches0 = engine.decode_launches
+    permode0 = engine.per_mode_launch_equiv
+    ticks0 = engine.ticks_with_work
+    gen0 = sum(len(r.generated) for r in engine.completed)
+    i = 0
+    while engine.queue or engine.n_active:
+        engine.set_admission_mode(width_modes[i % len(width_modes)])
+        engine.step()
+        i += 1
+    launches = engine.decode_launches - launches0
+    permode = engine.per_mode_launch_equiv - permode0
+    ticks = max(engine.ticks_with_work - ticks0, 1)
+    generated = sum(len(r.generated) for r in engine.completed) - gen0
+    assert launches < permode, \
+        f"mixed widths must share launches: {launches} vs per-mode {permode}"
+    assert generated == sum(r.max_new_tokens for r in mix), \
+        "mixed-width batching must not change generated token counts"
+    emit(f"serve_continuous/{cfg.name}/mixed_width", 0.0, {
+        "decode_launches": launches,
+        "per_mode_launch_equiv": permode,
+        "launches_per_tick": round(launches / ticks, 2),
+        "per_mode_launches_per_tick": round(permode / ticks, 2),
+        "generated_tokens": generated,
+        "widths_in_flight": [m.name for m in width_modes],
+    })
+
+    n_switches = len(slo_switches)
     assert engine.ctrl.stats["compiles"] == engine.compiles_after_warmup, \
         "mode churn must not recompile"
     assert n_switches >= 2, f"expected >= 2 admission mode switches, got {n_switches}"
@@ -88,11 +130,11 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         "tight budget must select a narrower mode"
     emit(f"serve_continuous/{cfg.name}/summary", 0.0, {
         "admission_switches": n_switches,
-        # only the measured phases — calibration cycling is excluded, keeping
-        # this consistent with the admission_switches count above
-        "switch_log": [f"{a}->{b}@{s}" for s, a, b in
-                       list(engine.admission_switch_log)[total_switches0:]],
+        # only the SLO-driven phases — calibration and forced mixed-width
+        # cycling are excluded, consistent with the count above
+        "switch_log": [f"{a}->{b}@{s}" for s, a, b in slo_switches],
         "recompiles_after_warmup": 0,
+        "executables": engine.ctrl.stats["compiles"],
         "telemetry": {k: {kk: round(vv, 2) for kk, vv in v.items()}
                       for k, v in engine.ctrl.telemetry_summary().items()},
     })

@@ -1,6 +1,12 @@
 """Paper Fig. 12 analogue: width-wise morphing latency / compute / accuracy,
 plus the morph_matmul kernel's tile-skip scaling (the clock-gating analogue:
-one executable, latency proportional to active width)."""
+one executable, latency proportional to active width).
+
+Width is a *runtime operand* end-to-end: every width mode below runs through
+the SAME per-depth decode executable (warmup compiles ``len(depths)``
+executables, not ``len(modes)``), and the kernel sweep reports the measured
+jit trace count across the width sweep — the single-executable claim as a
+number, not an assertion."""
 from __future__ import annotations
 
 import jax
@@ -14,6 +20,7 @@ from repro.core.distillcycle import DistillCycle, DistillCycleConfig
 from repro.core.morph import make_serve_controller
 from repro.data import DataConfig
 from repro.kernels import morph_matmul
+from repro.kernels.morph_matmul import trace_count
 from repro.models import init_decode_cache, init_params
 from repro.optim import OptimizerConfig
 
@@ -30,24 +37,34 @@ def run(arch: str = "tinyllama-1.1b", train_steps: int = 6) -> None:
     ce = cyc.eval_modes(params)
 
     ctrl = make_serve_controller(params, cfg)
+    ctrl.warmup()  # compiles one executable per DEPTH; widths share them
     B = 4
     tok = jnp.zeros((B, 1), jnp.int32)
+    n_depths = len({m.depth for m in ctrl.modes})
     for w in sorted(cfg.elastic.width_fractions):
         mode = MorphMode(depth=cfg.n_groups, width=w)
-        cfg_m = elastic.morph_config(cfg, mode)
-        cache = init_decode_cache(cfg_m, B, 16)
+        # full-width cache + runtime active widths: same executable every w
+        cache = init_decode_cache(cfg, B, 16, per_slot=True)
         step = ctrl.step_for(mode)
-        t = time_decode(step, params, cache, tok)
+        active = elastic.active_widths_batch(cfg, [w] * B)
+        t = time_decode(lambda p, c, tk: step(p, c, tk, active),
+                        params, cache, tok)
         emit(f"width_morph/{arch}/w{int(w * 100)}", t * 1e6, {
             "active_flops_frac": round(elastic.flops_fraction(cfg, mode), 3),
             "eval_ce": round(ce.get(mode.name, float("nan")), 4),
+            "compiles": ctrl.stats["compiles"],
+            "compiles_expected": n_depths,
         })
+    assert ctrl.stats["compiles"] == n_depths, \
+        f"width sweep compiled {ctrl.stats['compiles']} executables, " \
+        f"expected {n_depths} (one per depth)"
 
     # kernel-level clock-gating: ONE executable, dynamic width scalar
     M = K = N = 256
     x = jax.random.normal(jax.random.PRNGKey(1), (M, K), jnp.float32)
     wmat = jax.random.normal(jax.random.PRNGKey(2), (K, N), jnp.float32)
     full = None
+    traces0 = trace_count()
     for frac in (1.0, 0.5, 0.25):
         an = int(N * frac)
         t = time_fn(lambda: morph_matmul(x, wmat, jnp.int32(an), jnp.int32(K),
@@ -55,8 +72,20 @@ def run(arch: str = "tinyllama-1.1b", train_steps: int = 6) -> None:
         full = full or t
         emit(f"width_morph/kernel_tile_skip/w{int(frac * 100)}", t * 1e6, {
             "active_cols": an, "latency_vs_full": round(t / full, 3),
+            "kernel_traces_this_sweep": trace_count() - traces0,
             "note": "interpret-mode timing: tile-skip count is the TPU signal",
         })
+
+    # per-batch width mixing: 3 widths in one launch, still one trace
+    xb = jax.random.normal(jax.random.PRNGKey(3), (3, 64, K), jnp.float32)
+    an_b = jnp.array([N, N // 2, N // 4], jnp.int32)
+    traces1 = trace_count()
+    t = time_fn(lambda: morph_matmul(xb, wmat, an_b, jnp.int32(K),
+                                     block=(64, 64, 64), interpret=True))
+    emit("width_morph/kernel_mixed_width_batch", t * 1e6, {
+        "active_cols_per_row": [int(a) for a in an_b],
+        "kernel_traces": trace_count() - traces1,
+    })
 
 
 if __name__ == "__main__":

@@ -20,21 +20,25 @@ def main():
     cfg = smoke_config("mixtral-8x22b")  # MoE: width morph reduces top_k
     params = init_params(jax.random.PRNGKey(0), cfg)
     ctrl = make_serve_controller(params, cfg)
-    caches = {m.name: init_decode_cache(elastic.morph_config(cfg, m), 2, 64)
-              for m in ctrl.modes}
+    # ONE full-width cache per depth: width modes share cache and executable
+    caches = {d: init_decode_cache(cfg, 2, 64, per_slot=True)
+              for d in {m.depth for m in ctrl.modes}}
     tok = jnp.zeros((2, 1), jnp.int32)
     ctrl.warmup()
+
+    def actives(m):
+        return elastic.active_widths_batch(cfg, [m.width] * 2)
 
     # measure each mode (jit compile on first call; time the warm median)
     lat = {}
     for m in ctrl.modes:
         step = ctrl.step_for(m)
-        out, caches[m.name] = step(params, caches[m.name], tok)  # compile
+        out, caches[m.depth] = step(params, caches[m.depth], tok, actives(m))
         jax.block_until_ready(out)
         times = []
         for _ in range(3):
             t0 = time.perf_counter()
-            out, caches[m.name] = step(params, caches[m.name], tok)
+            out, caches[m.depth] = step(params, caches[m.depth], tok, actives(m))
             jax.block_until_ready(out)
             times.append(time.perf_counter() - t0)
         lat[m.name] = sorted(times)[1]
@@ -47,10 +51,12 @@ def main():
     for budget in budgets:
         mode = policy_for_budget(cfg, ctrl, budget, lambda m: lat[m.name])
         ctrl.set_mode(mode)
-        logits, caches[mode.name] = ctrl(params, caches[mode.name], tok)
+        logits, caches[mode.depth] = ctrl(params, caches[mode.depth], tok,
+                                          actives(mode))
         print(f"budget {budget * 1e3:7.2f} ms -> mode {mode.name:8s} "
               f"(active FLOPs {elastic.flops_fraction(cfg, mode) * 100:5.1f}%)")
-    print(f"switches: {ctrl.stats['switches']}, recompiles after warmup: 0")
+    print(f"switches: {ctrl.stats['switches']}, recompiles after warmup: 0, "
+          f"executables: {ctrl.stats['compiles']} (per depth)")
 
 
 if __name__ == "__main__":

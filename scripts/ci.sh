@@ -4,8 +4,11 @@
 # error at repo seed). Exits non-zero on any failure/error or if passes
 # regress below the baseline.
 #
-#   scripts/ci.sh            # default 1800s timeout
+#   scripts/ci.sh                # default 1800s timeout
 #   CI_TIMEOUT=600 scripts/ci.sh
+#   scripts/ci.sh --bench-smoke  # additionally run the morph/serving
+#                                # benchmarks in tiny configs so the
+#                                # benchmark scripts can't silently rot
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,6 +16,29 @@ SEED_PASSED=124
 SEED_FAILED=5
 SEED_ERRORS=1
 TIMEOUT="${CI_TIMEOUT:-1800}"
+BENCH_SMOKE=0
+for arg in "$@"; do
+    case "$arg" in
+        --bench-smoke) BENCH_SMOKE=1 ;;
+        *) echo "ci.sh: unknown argument '$arg'" >&2; exit 2 ;;
+    esac
+done
+
+if [ "$BENCH_SMOKE" -eq 1 ]; then
+    echo "CI: bench-smoke stage (tiny configs)"
+    BENCH_TIMEOUT="${CI_BENCH_TIMEOUT:-900}"
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$BENCH_TIMEOUT" \
+        python -c "from benchmarks import width_morph; width_morph.run(train_steps=1)"; then
+        echo "CI: FAIL (width_morph bench-smoke)"
+        exit 1
+    fi
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$BENCH_TIMEOUT" \
+        python -c "from benchmarks import serve_continuous; serve_continuous.run(n_requests=6)"; then
+        echo "CI: FAIL (serve_continuous bench-smoke)"
+        exit 1
+    fi
+    echo "CI: bench-smoke OK"
+fi
 
 out=$(PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TIMEOUT" \
       python -m pytest -q 2>&1)

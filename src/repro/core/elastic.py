@@ -167,6 +167,54 @@ def morph_decode_step(params, cache, tokens, cfg: ModelConfig, mode: MorphMode):
     return decode_step(p, cache, tokens, cfg_m, depth=mode.depth)
 
 
+# ---------------------------------------------------------------------------
+# runtime-scalar width morphing (single executable per depth)
+# ---------------------------------------------------------------------------
+
+
+def active_widths(cfg: ModelConfig, width: float) -> Dict[str, int]:
+    """Active inner-dimension sizes for a width fraction — the runtime clock
+    gates. These integers feed ``models.model.decode_step(..., active=...)``
+    as *dynamic* operands (scalars or per-slot vectors): the executable is
+    compiled once per depth, and a width switch is just a different operand
+    value, never a recompile."""
+    check_width(cfg, width)
+    cfg_m = morph_config(cfg, MorphMode(depth=cfg.n_groups, width=width))
+    out: Dict[str, int] = {}
+    if cfg.n_heads:
+        out["q_dim"] = cfg_m.q_dim
+        out["kv_dim"] = cfg_m.kv_dim
+    if cfg.d_ff:
+        out["d_ff"] = cfg_m.d_ff
+    if cfg.n_experts:
+        out["top_k"] = cfg_m.top_k
+    if cfg.ssm_state:
+        out["d_inner"] = cfg_m.ssm_d_inner
+        out["ssm_heads"] = cfg_m.ssm_nheads
+    return out
+
+
+def active_widths_batch(cfg: ModelConfig, widths) -> Dict[str, jnp.ndarray]:
+    """Per-slot active dims: one (B,) int32 vector per gated dimension.
+
+    ``widths`` is a sequence of width fractions, one per batch slot — slots
+    of *different* widths share a single decode launch (the kernel reads each
+    row's active widths from scalar prefetch)."""
+    per = [active_widths(cfg, w) for w in widths]
+    return {k: jnp.asarray([p[k] for p in per], jnp.int32) for k in per[0]}
+
+
+def morph_decode_step_dynamic(params, cache, tokens, cfg: ModelConfig,
+                              width: float, *, depth: Optional[int] = None):
+    """Decode step with width applied as a runtime operand over FULL params
+    and a full-width cache (the single-executable path; contrast with
+    ``morph_decode_step``, which specializes shapes per mode)."""
+    from repro.models.model import decode_step
+
+    active = active_widths_batch(cfg, [width] * tokens.shape[0])
+    return decode_step(params, cache, tokens, cfg, depth=depth, active=active)
+
+
 def flops_fraction(cfg: ModelConfig, mode: MorphMode) -> float:
     """Active-FLOPs fraction of a mode vs the full model (paper Fig. 11/12)."""
     full = cfg.n_active_params()

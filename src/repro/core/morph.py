@@ -2,25 +2,39 @@
 
 On the FPGA, NeuroMorph toggles clock gates to activate a subnetwork; the
 weights stay in place, nothing is reprogrammed. The TPU analogue implemented
-here: every morph mode is a specialized executable *over the same donated
-weight buffers*. Executables are compiled once (at deploy time / first use),
-and a mode switch is a dispatch-table lookup — zero weight movement, zero
-recompilation, zero host round-trips for parameters.
+here mirrors that split along the two morph axes:
 
-``MorphController`` also records switch telemetry (compile count, dispatch
-count) so tests can assert the no-copy/no-recompile invariants.
+* **Width is a runtime operand, not a compile-time shape.** The serving
+  controller (``make_serve_controller``) compiles ONE decode executable per
+  *depth*, taking the full parameter pytree, a full-width cache, and an
+  ``active`` dict of per-slot active inner-dim sizes (see
+  ``elastic.active_widths_batch``). Those integers flow into
+  ``kernels.morph_matmul`` where out-of-width tiles issue no MXU work — a
+  width switch is literally a different scalar operand, the clock-gate flip.
+  Slots of *different* widths share a single launch.
+
+* **Depth stays compile-time.** Depth changes the layer-group scan's trip
+  count, so each distinct depth is its own executable over the same donated
+  weight buffers (``compile_key`` groups modes by depth). After warmup,
+  ``stats["compiles"] == len(distinct depths)``, not ``len(modes)``.
+
+``MorphController`` records switch telemetry (compile count, dispatch count,
+per-mode latency percentiles) so tests can assert the no-copy/no-recompile
+invariants, and the serve controller carries a ``trace_counter`` incremented
+only when jax actually traces — the measured single-executable claim.
 """
 from __future__ import annotations
 
 import bisect
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, Hashable, List, Optional, Tuple
 
 import jax
 
 from repro.configs.base import ModelConfig, MorphMode
 from repro.core import elastic
+from repro.models.model import decode_step
 
 
 class ModeTelemetry:
@@ -75,15 +89,23 @@ class ModeTelemetry:
 
 
 class MorphController:
-    """Dispatches train/serve steps to per-mode specialized executables."""
+    """Dispatches train/serve steps to specialized executables.
+
+    ``compile_key`` maps a mode to its executable's cache key: the default
+    (mode name) specializes per mode; the serving controller passes
+    ``lambda m: m.depth`` so all width modes of a depth share one executable
+    (width arrives as a runtime operand instead).
+    """
 
     def __init__(self, cfg: ModelConfig, step_factory: Callable[[MorphMode], Callable],
-                 modes: Optional[Tuple[MorphMode, ...]] = None):
+                 modes: Optional[Tuple[MorphMode, ...]] = None,
+                 compile_key: Callable[[MorphMode], Hashable] = lambda m: m.name):
         self.cfg = cfg
         self.modes = tuple(modes or cfg.elastic.modes(cfg.n_groups))
         self.mode_by_name = {m.name: m for m in self.modes}
         self._factory = step_factory
-        self._compiled: Dict[str, Callable] = {}
+        self._compile_key = compile_key
+        self._compiled: Dict[Hashable, Callable] = {}
         self.stats = {"compiles": 0, "dispatches": 0, "switches": 0}
         self.telemetry: Dict[str, ModeTelemetry] = {m.name: ModeTelemetry()
                                                    for m in self.modes}
@@ -106,15 +128,17 @@ class MorphController:
         self._mode = mode
 
     def _get(self, mode: MorphMode) -> Callable:
-        fn = self._compiled.get(mode.name)
+        key = self._compile_key(mode)
+        fn = self._compiled.get(key)
         if fn is None:
             fn = self._factory(mode)
-            self._compiled[mode.name] = fn
+            self._compiled[key] = fn
             self.stats["compiles"] += 1
         return fn
 
     def warmup(self) -> None:
-        """Pre-compile every mode (the deploy-time 'single bitstream')."""
+        """Pre-compile every distinct executable (the deploy-time 'single
+        bitstream'); modes sharing a compile key share one compile."""
         for m in self.modes:
             self._get(m)
 
@@ -154,19 +178,30 @@ class MorphController:
 
 def make_serve_controller(params, cfg: ModelConfig,
                           modes: Optional[Tuple[MorphMode, ...]] = None) -> MorphController:
-    """Serving controller: per-mode jitted decode steps over shared params.
+    """Serving controller: ONE jitted decode executable per *depth*.
 
-    Slicing happens inside jit (see ``elastic.slice_params``), so the full
-    param pytree is the only device-resident weight copy.
+    Each executable's signature is ``step(params, cache, tokens, active)``:
+    full params (the only device-resident weight copy), a FULL-width per-slot
+    cache (donated — the update is in place), and ``active`` per-slot width
+    operands from ``elastic.active_widths_batch``. Width morphing never
+    recompiles: the same executable serves every width, and a single launch
+    may mix widths across batch slots. ``ctrl.trace_counter["n"]`` advances
+    only when jax traces a step — the measured zero-recompile invariant.
     """
+    trace_counter = {"n": 0}
 
     def factory(mode: MorphMode):
-        def step(p, cache, tokens):
-            return elastic.morph_decode_step(p, cache, tokens, cfg, mode)
+        depth = mode.depth
+
+        def step(p, cache, tokens, active):
+            trace_counter["n"] += 1  # executes at trace time only
+            return decode_step(p, cache, tokens, cfg, depth=depth, active=active)
 
         return jax.jit(step, donate_argnums=(1,))
 
-    return MorphController(cfg, factory, modes)
+    ctrl = MorphController(cfg, factory, modes, compile_key=lambda m: m.depth)
+    ctrl.trace_counter = trace_counter
+    return ctrl
 
 
 def policy_for_budget(cfg: ModelConfig, controller: MorphController,

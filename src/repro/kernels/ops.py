@@ -22,9 +22,10 @@ def default_interpret() -> bool:
 
 
 def morph_matmul(x, w, active_n=None, active_k=None, *, block=(128, 128, 128),
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, impl: str = "pallas"):
     itp = default_interpret() if interpret is None else interpret
-    return _morph_matmul(x, w, active_n, active_k, block=block, interpret=itp)
+    return _morph_matmul(x, w, active_n, active_k, block=block, interpret=itp,
+                         impl=impl)
 
 
 def flash_attention_bshd(q, k, v, *, causal=True, window: int = 0,

@@ -8,10 +8,27 @@ import jax
 import jax.numpy as jnp
 
 
-def morph_matmul_ref(x, w, active_n: Optional[int] = None, active_k: Optional[int] = None):
-    """Zero-filled beyond active_n; contraction truncated at active_k."""
-    M, K = x.shape[-2:]
+def morph_matmul_ref(x, w, active_n=None, active_k=None):
+    """Zero-filled beyond active_n; contraction truncated at active_k.
+
+    ``active_n`` / ``active_k`` may be per-batch sequences (len B) when x is
+    (B, M, K) — each batch row is sliced at its own active widths, mirroring
+    the kernel's per-batch scalar prefetch."""
+    K = x.shape[-1]
     N = w.shape[-1]
+
+    def _per_batch(a):
+        # sized sequence or >=1-d array (0-d arrays report __len__ but are
+        # unsized scalars — treat them like python ints)
+        return a is not None and (isinstance(a, (list, tuple))
+                                  or getattr(a, "ndim", 0) >= 1)
+
+    if x.ndim == 3 and (_per_batch(active_n) or _per_batch(active_k)):
+        B = x.shape[0]
+        ans = list(active_n) if _per_batch(active_n) else [active_n] * B
+        aks = list(active_k) if _per_batch(active_k) else [active_k] * B
+        return jnp.stack([morph_matmul_ref(x[b], w, ans[b], aks[b])
+                          for b in range(B)])
     an = N if active_n is None else int(active_n)
     ak = K if active_k is None else int(active_k)
     y = jnp.einsum("...mk,kn->...mn", x[..., :, :ak].astype(jnp.float32),

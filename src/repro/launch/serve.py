@@ -1,9 +1,10 @@
 """Serving driver: continuous-batching engine with NeuroMorph reconfiguration.
 
 Drives ``repro.runtime.serving.ServingEngine`` — request queue, per-step slot
-admission, per-mode slot groups — while switching morph modes on the fly.
-Modes switch via the MorphController dispatch table: no weight movement, no
-recompilation after warmup (asserted and reported).
+admission, per-DEPTH slot groups with per-slot runtime widths — while
+switching morph modes on the fly. Width switches are a scalar-operand change
+inside one executable; only distinct depths compile separately: no weight
+movement, no recompilation after warmup (asserted and reported).
 
 Two traffic shapes:
   * default: a fixed round of ``--batch`` x enough requests to generate
@@ -87,6 +88,9 @@ def main(argv=None):
           f"switches={ctrl.stats['switches']} "
           f"admission_switches={len(engine.admission_switch_log)} "
           f"recompiles_after_warmup=0 dispatches={ctrl.stats['dispatches']} "
+          f"executables={ctrl.stats['compiles']} (per depth) "
+          f"decode_launches={engine.decode_launches} "
+          f"(per-mode baseline {engine.per_mode_launch_equiv}) "
           f"tokens/s={generated / busy if busy else 0.0:.1f}")
     for name, t in ctrl.telemetry_summary().items():
         mode = ctrl.mode_by_name[name]

@@ -41,6 +41,23 @@ def matmul(x, w, dtype):
     ).astype(dtype)
 
 
+def morph_proj(x, w, active_n=None, active_k=None):
+    """Width-gated projection on the decode hot path (NeuroMorph clock gate).
+
+    Routes through ``kernels.morph_matmul`` (impl="auto": tile-skipping
+    Pallas on TPU, fused masked dot elsewhere). Output columns >= active_n
+    are exactly zero; contraction rows >= active_k contribute nothing.
+    ``active_n`` / ``active_k`` may be per-batch ``(B,)`` vectors — batch
+    slots running *different* width modes share this single projection.
+    x: (B, S, d); w: (d, N).
+    """
+    from repro.kernels import morph_matmul as _mm  # local: keep layers import-light
+
+    if active_n is None and active_k is None:
+        return matmul(x, w, x.dtype)
+    return _mm(x, w.astype(x.dtype), active_n, active_k, impl="auto")
+
+
 # --- bf16-cotangent matmul (beyond-paper §Perf lever) -----------------------
 #
 # The default transpose rule leaves dW in f32 and GSPMD reduces it over the
@@ -111,6 +128,24 @@ def apply_norm(params, x, cfg: ModelConfig, eps: float = 1e-6):
     return y.astype(dt)
 
 
+def apply_norm_masked(params, x, cfg: ModelConfig, n_active, eps: float = 1e-6):
+    """RMSNorm whose mean-square spans only the first ``n_active`` channels.
+
+    The runtime-width morph path guarantees x is exactly zero beyond
+    ``n_active``, so the full-width sum-of-squares equals the active-prefix
+    sum; only the divisor changes. ``n_active``: scalar or per-batch (B,).
+    """
+    assert "bias" not in params, "masked norm is rmsnorm-only"
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    n = jnp.asarray(n_active, jnp.float32)
+    if n.ndim:
+        n = n.reshape(n.shape + (1,) * (x.ndim - n.ndim))
+    var = jnp.sum(jnp.square(xf), axis=-1, keepdims=True) / jnp.maximum(n, 1.0)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
 # ---------------------------------------------------------------------------
 # positions
 # ---------------------------------------------------------------------------
@@ -152,17 +187,21 @@ def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
     return p
 
 
-def apply_mlp(params, x, cfg: ModelConfig):
+def apply_mlp(params, x, cfg: ModelConfig, active_ff=None):
+    """Dense MLP. ``active_ff`` (scalar or per-batch (B,)) runtime-gates the
+    hidden columns: columns >= active_ff are exactly zero after the up
+    projection (so every activation maps 0 -> 0 across them) and are skipped
+    by the down projection's contraction."""
     dt = x.dtype
-    h = matmul(x, params["wi"], dt)
+    h = morph_proj(x, params["wi"], active_n=active_ff)
     if cfg.activation == "swiglu":
-        g = matmul(x, params["wg"], dt)
+        g = morph_proj(x, params["wg"], active_n=active_ff)
         h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * h
     elif cfg.activation == "squared_relu":
         h = jnp.square(jax.nn.relu(h))
     else:  # gelu
         h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
-    return matmul(h, params["wo"], dt)
+    return morph_proj(h, params["wo"], active_k=active_ff)
 
 
 # ---------------------------------------------------------------------------
@@ -331,20 +370,30 @@ def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, dtype):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False):
+def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False,
+               active=None):
     """One-token decode. x: (B,1,d); cache dict; pos: scalar int32 or (B,)
     per-slot positions (continuous batching: each batch slot is an independent
     request at its own sequence offset).
+
+    ``active`` (dict with "q_dim"/"kv_dim", scalars or per-batch (B,))
+    runtime-gates the projections: q/k/v columns beyond each slot's active
+    width are exactly zero, so inactive heads score uniformly over zero
+    values and contribute nothing, and the output projection's contraction
+    skips inactive head columns — one executable serves every width.
 
     Returns (out, new_cache). For cross-attention the cache holds precomputed
     encoder K/V and is returned unchanged.
     """
     dt = x.dtype
     B = x.shape[0]
+    a_q = active.get("q_dim") if active else None
+    a_kv = active.get("kv_dim") if active else None
     pos = jnp.asarray(pos, jnp.int32)
     per_slot = pos.ndim == 1
     qpos = pos[:, None] if per_slot else jnp.full((1,), pos, jnp.int32)
-    q = _split_heads(matmul(x, params["wq"], dt), cfg.n_heads, cfg.head_dim)
+    q = _split_heads(morph_proj(x, params["wq"], active_n=a_q),
+                     cfg.n_heads, cfg.head_dim)
     if cfg.use_rope and not cross:
         q = rope(q, qpos, cfg.rope_theta)
 
@@ -356,11 +405,16 @@ def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False):
         S = k.shape[1]
         kpos = jnp.arange(S)
         out = attention_full(q, k, v, cfg, qpos, kpos, causal=False)
-        out = matmul(out.reshape(B, 1, cfg.q_dim), params["wo"], dt)
+        # cross K/V is full-width encoder output, so inactive q heads attend
+        # to NON-zero values — the active_k contraction gate on wo is what
+        # excludes them, not zero propagation.
+        out = morph_proj(out.reshape(B, 1, cfg.q_dim), params["wo"], active_k=a_q)
         return out, cache
 
-    k_new = _split_heads(matmul(x, params["wk"], dt), cfg.n_kv_heads, cfg.head_dim)
-    v_new = _split_heads(matmul(x, params["wv"], dt), cfg.n_kv_heads, cfg.head_dim)
+    k_new = _split_heads(morph_proj(x, params["wk"], active_n=a_kv),
+                         cfg.n_kv_heads, cfg.head_dim)
+    v_new = _split_heads(morph_proj(x, params["wv"], active_n=a_kv),
+                         cfg.n_kv_heads, cfg.head_dim)
     if cfg.use_rope:
         k_new = rope(k_new, qpos, cfg.rope_theta)
 
@@ -407,5 +461,5 @@ def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False):
     else:
         kpos = jnp.where(idx <= pos_b, idx, -10**9)
     out = attention_full(q, k, v, cfg, qpos, kpos, causal=True)
-    out = matmul(out.reshape(B, 1, cfg.q_dim), params["wo"], dt)
+    out = morph_proj(out.reshape(B, 1, cfg.q_dim), params["wo"], active_k=a_q)
     return out, new_cache

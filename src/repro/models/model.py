@@ -350,7 +350,8 @@ def reset_cache_slot(cache: Cache, slot) -> Cache:
     return {"pos": cache["pos"].at[slot].set(0), "stack": stack}
 
 
-def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig):
+def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig,
+                  active=None):
     new_cache = {}
     for p in range(cfg.period):
         lp = group_params[f"pos{p}"]
@@ -360,33 +361,46 @@ def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig):
         nc = dict(cp)
         if kind == "attn":
             self_keys = {k: v for k, v in cp.items() if not k.startswith("cross_")}
-            mix, upd = L.mha_decode(lp["attn"], hn, self_keys, pos, cfg)
+            mix, upd = L.mha_decode(lp["attn"], hn, self_keys, pos, cfg,
+                                    active=active)
             nc.update(upd)
         else:
             self_keys = {k: cp[k] for k in ("conv_x", "conv_bc", "state")}
-            mix, upd = SSM.ssm_decode_step(lp["ssm"], hn, self_keys, cfg)
+            mix, upd = SSM.ssm_decode_step(lp["ssm"], hn, self_keys, cfg,
+                                           active=active)
             nc.update(upd)
         h = h + mix
         if cfg.is_encdec:
             hn = L.apply_norm(lp["norm_cross"], h, cfg)
             mix, _ = L.mha_decode(lp["cross"], hn,
                                   {"k": cp["cross_k"], "v": cp["cross_v"]}, pos, cfg,
-                                  cross=True)
+                                  cross=True, active=active)
             h = h + mix
         if cfg.layer_is_moe(p):
             # decode always uses the exact dropless path (see apply_moe_dense)
             hn = L.apply_norm(lp["norm2"], h, cfg)
-            y, _ = MOE.apply_moe_dense(lp["moe"], hn, cfg)
+            y, _ = MOE.apply_moe_dense(
+                lp["moe"], hn, cfg,
+                active_topk=active.get("top_k") if active else None)
             h = h + y
         elif cfg.d_ff:
             hn = L.apply_norm(lp["norm2"], h, cfg)
-            h = h + L.apply_mlp(lp["mlp"], hn, cfg)
+            h = h + L.apply_mlp(lp["mlp"], hn, cfg,
+                                active_ff=active.get("d_ff") if active else None)
         new_cache[f"pos{p}"] = nc
     return h, new_cache
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int] = None):
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int] = None,
+                active=None):
     """One-token decode. tokens: (B, 1). Returns (logits (B,1,Vp), new_cache).
+
+    ``active`` is the runtime width-morph operand (see
+    ``elastic.active_widths_batch``): a dict of active inner-dim sizes,
+    scalars or per-slot (B,) vectors, applied over FULL params and a
+    full-width cache. Depth stays a compile-time bound (it changes the scan
+    trip count); width is just data — one executable per depth serves every
+    width, and a batch may mix widths across slots.
 
     The cache stack rides through the group scan as a CARRY updated with
     slice-sized dynamic updates (never as stacked scan outputs): stacked ys
@@ -410,7 +424,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int]
         gc = jax.tree_util.tree_map(
             lambda a: jax.lax.dynamic_index_in_dim(a, g_idx, 0, keepdims=False),
             cache_stack)
-        h, nc = _group_decode(gp, gc, h, pos, cfg)
+        h, nc = _group_decode(gp, gc, h, pos, cfg, active=active)
         cache_stack = jax.tree_util.tree_map(
             lambda full, new: jax.lax.dynamic_update_index_in_dim(
                 full, new.astype(full.dtype), g_idx, 0),
@@ -428,11 +442,20 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int]
 
 
 def prefill(params, batch, cfg: ModelConfig, *, remat: str = "none",
-            cache_extra: int = 0):
+            cache_extra: int = 0, per_slot: bool = False,
+            slot: Optional[int] = None, n_slots: Optional[int] = None):
     """Process a full prompt; returns (last-position logits, decode cache).
 
     ``cache_extra`` appends free KV slots so decode can continue past the
     prompt (the prefill_32k dry-run cell uses 0: cache of exactly seq_len).
+
+    ``per_slot=True`` returns the continuous-batching layout (positions are a
+    ``(B,)`` vector, one per batch slot). Passing ``slot`` (with ``n_slots``)
+    additionally scatters a *batch-1* prompt's state into slot ``slot`` of an
+    ``n_slots``-wide zeroed cache — the result is layout-identical to
+    ``init_decode_cache(cfg, n_slots, S + cache_extra, per_slot=True)``, so a
+    serving engine can adopt a prefilled prompt directly into one of its
+    slots instead of feeding it token by token.
     """
     h, positions, enc_out, enc_pos = _embed_inputs(params, batch, cfg)
     S = h.shape[1]
@@ -441,5 +464,19 @@ def prefill(params, batch, cfg: ModelConfig, *, remat: str = "none",
                                   enc_positions=enc_pos, want_cache=True,
                                   cache_extra=cache_extra)
     logits = _logits(params, h[:, -1:], cfg, params["final_norm"])
-    cache = {"pos": jnp.full((), S, jnp.int32), "stack": caches}
-    return logits, cache
+    B = h.shape[0]
+    if not per_slot:
+        if slot is not None:
+            raise ValueError("slot requires per_slot=True")
+        return logits, {"pos": jnp.full((), S, jnp.int32), "stack": caches}
+    if slot is None:
+        return logits, {"pos": jnp.full((B,), S, jnp.int32), "stack": caches}
+    if B != 1:
+        raise ValueError(f"slot scatter needs a batch-1 prompt, got B={B}")
+    ns = n_slots or 1
+    # cache leaves are (n_groups, B, ...): widen axis 1 to the slot count
+    stack = jax.tree_util.tree_map(
+        lambda a: jnp.zeros((a.shape[0], ns) + a.shape[2:], a.dtype)
+        .at[:, slot].set(a[:, 0]), caches)
+    pos = jnp.zeros((ns,), jnp.int32).at[slot].set(S)
+    return logits, {"pos": pos, "stack": stack}

@@ -95,12 +95,18 @@ def apply_moe(params, x, cfg: ModelConfig, top_k: Optional[int] = None) -> Tuple
     return y.reshape(B, S, d), aux
 
 
-def apply_moe_dense(params, x, cfg: ModelConfig, top_k: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def apply_moe_dense(params, x, cfg: ModelConfig, top_k: Optional[int] = None,
+                    active_topk=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Exact dropless top-k MoE: compute every expert, combine sparse gates.
 
     Used on the decode path (token counts are tiny and every expert's weights
     are streamed from HBM regardless — the FLOP inflation is roofline-free)
     and as the no-drop oracle for capacity-dispatch tests.
+
+    ``active_topk`` (scalar or per-batch (B,) int32) is the runtime width
+    gate: the router still takes the full static top-k (shapes are fixed),
+    but choices >= active_topk get zero gate weight *before* renormalization
+    — identical math to slicing top_k, since top_k is sorted descending.
     """
     dt = x.dtype
     B, S, d = x.shape
@@ -109,6 +115,11 @@ def apply_moe_dense(params, x, cfg: ModelConfig, top_k: Optional[int] = None) ->
     logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, idx = jax.lax.top_k(probs, k)
+    if active_topk is not None:
+        at = jnp.asarray(active_topk, jnp.int32)
+        choice = jnp.arange(k)
+        keep = choice < (at[:, None, None] if at.ndim else at)
+        gate_vals = jnp.where(keep, gate_vals, 0.0)
     gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
     gates = jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32) * gate_vals[..., None], axis=-2)
 

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import apply_norm, dense_init, matmul
+from repro.models.layers import (apply_norm, apply_norm_masked, dense_init,
+                                 matmul, morph_proj)
 
 
 def init_ssm(key, cfg: ModelConfig):
@@ -208,16 +209,27 @@ def init_ssm_cache(cfg: ModelConfig, batch: int, nh: Optional[int] = None, dtype
     }
 
 
-def ssm_decode_step(params, x, cache, cfg: ModelConfig):
-    """One-token decode. x: (B,1,d). Returns (y, new_cache)."""
+def ssm_decode_step(params, x, cache, cfg: ModelConfig, active=None):
+    """One-token decode. x: (B,1,d). Returns (y, new_cache).
+
+    ``active`` (dict with "d_inner"/"ssm_heads", scalars or per-batch (B,))
+    runtime-gates the head dimension: the x/z/dt projections zero columns
+    beyond each slot's active width, the z-gate multiplies inactive channels
+    (which pick up conv bias) back to exact zero, the gated RMSNorm divides
+    by the *active* channel count, and the output projection's contraction
+    skips inactive channels. Inactive heads still carry (bounded) garbage in
+    ``state`` — it is unread, and slot re-admission zeroes it.
+    """
     dt_ = x.dtype
     nh = params["A_log"].shape[0]
     hp = cfg.ssm_head_dim
     g, n = cfg.ssm_ngroups, cfg.ssm_state
-    xs = matmul(x, params["w_x"], dt_)
-    z = matmul(x, params["w_z"], dt_)
-    bc = matmul(x, params["w_bc"], dt_)
-    dt_raw = matmul(x, params["w_dt"], dt_)
+    a_in = active.get("d_inner") if active else None
+    xs = morph_proj(x, params["w_x"], active_n=a_in)
+    z = morph_proj(x, params["w_z"], active_n=a_in)
+    bc = matmul(x, params["w_bc"], dt_)  # B/C groups are never width-gated
+    dt_raw = morph_proj(x, params["w_dt"],
+                        active_n=active.get("ssm_heads") if active else None)
 
     xs, x_tail = _causal_conv(xs, params["conv_x_w"][: nh * hp], params["conv_x_b"][: nh * hp],
                               cache["conv_x"])
@@ -235,6 +247,10 @@ def ssm_decode_step(params, x, cache, cfg: ModelConfig):
     state = cache["state"] * decay[..., None, None] + upd
     y = jnp.einsum("bhpn,bhn->bhp", state, C_) + params["D"].astype(jnp.float32)[:, None] * xh
     y = (y.reshape(-1, 1, nh * hp) * jax.nn.silu(z.astype(jnp.float32)))
-    y = apply_norm({"scale": params["ssm_norm"]["scale"][: nh * hp]}, y.astype(dt_), cfg)
-    out = matmul(y, params["out_proj"], dt_)
+    norm = {"scale": params["ssm_norm"]["scale"][: nh * hp]}
+    if a_in is None:
+        y = apply_norm(norm, y.astype(dt_), cfg)
+    else:
+        y = apply_norm_masked(norm, y.astype(dt_), cfg, a_in)
+    out = morph_proj(y, params["out_proj"], active_k=a_in)
     return out, {"conv_x": x_tail, "conv_bc": bc_tail, "state": state}

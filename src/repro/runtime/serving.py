@@ -1,23 +1,28 @@
-"""Continuous-batching NeuroMorph serving engine.
+"""Continuous-batching NeuroMorph serving engine — single-executable width.
 
 The paper's runtime story is on-the-fly reconfiguration under live traffic:
-NeuroMorph flips clock gates while inference requests keep arriving. The
-original ``launch/serve.py`` demo was a single blocking decode loop; this
-module is the real serving subsystem:
+NeuroMorph flips clock gates while inference requests keep arriving, and a
+mode switch costs nothing because nothing is reprogrammed. This engine is
+the TPU analogue of that story end-to-end:
 
 * **Request queue + slot admission.** Requests arrive (e.g. from a Poisson
   trace), wait in a FIFO, and are admitted into free batch slots *every
   step* — no waiting for the whole batch to drain (continuous batching).
   Each slot is an independent request at its own sequence offset, carried by
-  the per-slot decode state added in ``models.model`` (``per_slot`` caches +
+  the per-slot decode state in ``models.model`` (``per_slot`` caches +
   ``reset_cache_slot``).
 
-* **Per-mode slot groups.** A morph mode switch applies to *newly admitted*
-  requests; in-flight requests finish in the mode they started in (their KV
-  history lives in that mode's cache — the analogue of the paper's
-  per-subnetwork output heads). Each engine tick runs one decode step per
-  mode group that has active slots, through the ``MorphController`` dispatch
-  table: zero weight copies, zero recompiles after warmup.
+* **Per-DEPTH slot groups; width is per-slot data.** Depth changes the
+  decode scan's trip count, so each distinct depth is one compiled
+  executable and one slot group with one full-width cache. Width does NOT
+  fragment slots: every slot carries its own width fraction, lowered each
+  tick to per-slot active-dim vectors (``elastic.active_widths_batch``) that
+  ``kernels.morph_matmul`` reads from scalar prefetch — out-of-width tiles
+  issue no MXU work. A tick with three widths in flight at one depth issues
+  ONE decode launch, not three; warmup compiles ``len(depths)`` executables,
+  not ``len(modes)``. A mode switch still only applies to *newly admitted*
+  requests — in-flight slots keep the width they started with, now simply a
+  different lane of the same launch.
 
 * **SLO-driven morph policy.** ``SLOPolicy`` picks the widest/deepest mode
   whose predicted step latency fits the current latency budget. The
@@ -28,7 +33,10 @@ module is the real serving subsystem:
 
 Slot re-admission relies on position masking (attention) and explicit state
 zeroing (SSM) via ``reset_cache_slot``; both are jitted once per cache
-structure, so sustained mixed traffic triggers no compilation at all.
+structure, so sustained mixed traffic — including arbitrary width churn —
+triggers no compilation at all (``ctrl.trace_counter`` measures this).
+``decode_launches`` vs ``per_mode_launch_equiv`` quantifies the win over the
+old per-(depth, width) grouping.
 """
 from __future__ import annotations
 
@@ -165,10 +173,14 @@ class SLOPolicy:
 
 
 @dataclass
-class _ModeGroup:
-    mode: MorphMode
+class _DepthGroup:
+    """One compiled executable's slots: a depth, its full-width cache, and
+    the per-slot width fraction each occupant was admitted at."""
+
+    depth: int
     cache: Dict
     slots: List[Optional[Request]]
+    widths: List[float]  # admission width per slot (stale for free slots)
 
     @property
     def n_active(self) -> int:
@@ -179,13 +191,14 @@ class _ModeGroup:
 
 
 class ServingEngine:
-    """Continuous-batching decode engine over a MorphController.
+    """Continuous-batching decode engine over a per-depth MorphController.
 
-    One engine tick = admit queued requests into the current admission
-    mode's free slots, then run one decode step per mode group with active
-    slots. The host round-trip per tick (argmax + slot bookkeeping) is the
-    simplicity tradeoff of this reference engine; the device work itself is
-    the same per-mode jitted executable every tick.
+    One engine tick = admit queued requests into the admission mode's depth
+    group, then run ONE decode launch per depth group with active slots —
+    slots of different widths ride the same launch via per-slot active-dim
+    operands. The host round-trip per tick (argmax + slot bookkeeping) is
+    the simplicity tradeoff of this reference engine; the device work itself
+    is the same per-depth jitted executable every tick.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, batch_size: int = 4,
@@ -197,12 +210,13 @@ class ServingEngine:
         self.batch_size = batch_size
         self.cache_capacity = cache_capacity
         self.ctrl = controller or make_serve_controller(params, cfg, modes)
-        self.groups: Dict[str, _ModeGroup] = {}
-        for m in self.ctrl.modes:
-            cfg_m = elastic.morph_config(cfg, m)
-            cache = init_decode_cache(cfg_m, batch_size, cache_capacity,
+        self._mode_by_dw = {(m.depth, m.width): m for m in self.ctrl.modes}
+        self.groups: Dict[int, _DepthGroup] = {}
+        for d in sorted({m.depth for m in self.ctrl.modes}):
+            cache = init_decode_cache(cfg, batch_size, cache_capacity,
                                       per_slot=True)
-            self.groups[m.name] = _ModeGroup(m, cache, [None] * batch_size)
+            self.groups[d] = _DepthGroup(d, cache, [None] * batch_size,
+                                         [1.0] * batch_size)
         # donate the cache: slot reset must be an in-place write, not a
         # full cache copy, on the admission hot path
         self._reset = jax.jit(reset_cache_slot, donate_argnums=(0,))
@@ -214,27 +228,51 @@ class ServingEngine:
         self.admission_switch_log: Deque[Tuple[int, str, str]] = deque(maxlen=4096)
         self.step_count = 0
         self.compiles_after_warmup: Optional[int] = None
+        # launch accounting: actual launches (per depth group) vs what the
+        # old per-(depth, width) grouping would have issued for the same
+        # in-flight population
+        self.decode_launches = 0
+        self.per_mode_launch_equiv = 0
+        self.ticks_with_work = 0
+        # per-slot active-dim vectors memoized by widths tuple: widths only
+        # change on admission, and the mode table bounds the distinct values
+        # — no per-tick morph_config calls or host-to-device puts
+        self._active_cache: Dict[Tuple[float, ...], Dict] = {}
+
+    def _active_for(self, widths: List[float]) -> Dict:
+        key = tuple(widths)
+        active = self._active_cache.get(key)
+        if active is None:
+            if len(self._active_cache) > 1024:  # oscillation backstop
+                self._active_cache.clear()
+            active = elastic.active_widths_batch(self.cfg, widths)
+            self._active_cache[key] = active
+        return active
 
     # -- lifecycle ----------------------------------------------------------
 
     def warmup(self) -> None:
-        """Compile every mode's step + the slot-reset, then rewind state.
+        """Compile every depth's step + the slot-reset, then rewind state.
 
-        After this returns, ``self.ctrl.stats['compiles']`` is frozen: mixed
-        traffic with arbitrary mode churn re-dispatches these executables.
+        After this returns, ``self.ctrl.stats['compiles']`` is frozen at
+        ``len(depths)`` (NOT ``len(modes)``): traffic with arbitrary width
+        and depth churn re-dispatches these executables.
         """
         self.ctrl.warmup()
         tok = jnp.zeros((self.batch_size, 1), jnp.int32)
-        for g in self.groups.values():
-            step = self.ctrl.step_for(g.mode)
-            _, cache = step(self.params, g.cache, tok)
+        active = elastic.active_widths_batch(self.cfg, [1.0] * self.batch_size)
+        for d, g in self.groups.items():
+            step = self.ctrl.step_for(self._any_mode_at(d))
+            _, cache = step(self.params, g.cache, tok, active)
             cache = self._reset(cache, jnp.int32(0))
             jax.block_until_ready(cache)
             # rewind: warmup wrote garbage at pos 0 of every slot
-            cfg_m = elastic.morph_config(self.cfg, g.mode)
-            g.cache = init_decode_cache(cfg_m, self.batch_size,
+            g.cache = init_decode_cache(self.cfg, self.batch_size,
                                         self.cache_capacity, per_slot=True)
         self.compiles_after_warmup = self.ctrl.stats["compiles"]
+
+    def _any_mode_at(self, depth: int) -> MorphMode:
+        return next(m for m in self.ctrl.modes if m.depth == depth)
 
     def submit(self, req: Request) -> None:
         if not req.prompt:
@@ -260,34 +298,45 @@ class ServingEngine:
     # -- one tick -----------------------------------------------------------
 
     def _admit(self) -> None:
-        g = self.groups[self.admission_mode.name]
+        g = self.groups[self.admission_mode.depth]
         for slot in g.free_slots():
             if not self.queue:
                 break
             req = self.queue.popleft()
             g.cache = self._reset(g.cache, jnp.int32(slot))
             g.slots[slot] = req
-            req.mode_name = g.mode.name
+            g.widths[slot] = self.admission_mode.width
+            req.mode_name = self.admission_mode.name
             req.admitted_step = self.step_count
 
     def step(self, now_s: float = 0.0) -> float:
         """One engine tick. Returns device wall-time spent (seconds)."""
         self._admit()
         spent = 0.0
+        ticked = False
         for g in self.groups.values():
-            active = [i for i, r in enumerate(g.slots) if r is not None]
-            if not active:
+            active_ix = [i for i, r in enumerate(g.slots) if r is not None]
+            if not active_ix:
                 continue
+            ticked = True
             toks = np.zeros((self.batch_size, 1), np.int32)
-            for i in active:
+            for i in active_ix:
                 toks[i, 0] = g.slots[i].next_input()
+            active = self._active_for(g.widths)
+            # telemetry attribution: the widest width in flight bounds this
+            # launch's active compute
+            w_max = max(g.widths[i] for i in active_ix)
+            mode = self._mode_by_dw[(g.depth, w_max)]
             logits, g.cache = self.ctrl.timed_step(
-                self.params, g.cache, jnp.asarray(toks),
-                mode=g.mode, tokens=len(active))
+                self.params, g.cache, jnp.asarray(toks), active,
+                mode=mode, tokens=len(active_ix))
             spent += self.ctrl.last_step_s
+            self.decode_launches += 1
+            self.per_mode_launch_equiv += len(
+                {(g.depth, g.widths[i]) for i in active_ix})
             nxt = np.asarray(
                 jnp.argmax(logits[:, 0, : self.cfg.vocab_size], axis=-1))
-            for i in active:
+            for i in active_ix:
                 req = g.slots[i]
                 req.fed += 1
                 # once the prompt is consumed, each step's argmax is a fresh
@@ -299,6 +348,7 @@ class ServingEngine:
                     req.finished_s = now_s
                     self.completed.append(req)
                     g.slots[i] = None
+        self.ticks_with_work += ticked
         self.step_count += 1
         return spent
 
@@ -307,6 +357,12 @@ class ServingEngine:
     @property
     def n_active(self) -> int:
         return sum(g.n_active for g in self.groups.values())
+
+    def _generated_total(self) -> int:
+        """Tokens generated so far by completed AND in-flight requests."""
+        live = sum(len(r.generated) for g in self.groups.values()
+                   for r in g.slots if r is not None)
+        return sum(len(r.generated) for r in self.completed) + live
 
     def run(self, trace: Sequence[Request], *,
             budget_fn: Optional[Callable[[float], float]] = None,
@@ -330,10 +386,16 @@ class ServingEngine:
         # only "compiles" stays absolute, for comparison against
         # ``compiles_after_warmup``.
         completed0 = len(self.completed)
-        generated0 = sum(len(r.generated) for r in self.completed)
+        # include in-flight requests: a request admitted by manual step()
+        # calls before run() must not attribute its pre-run tokens to this
+        # run, and one still in flight at max_steps keeps its in-run tokens
+        generated0 = self._generated_total()
         adm_switches0 = len(self.admission_switch_log)
         mode_switches0 = self.ctrl.stats["switches"]
         steps0 = self.step_count
+        launches0 = self.decode_launches
+        permode0 = self.per_mode_launch_equiv
+        ticks0 = self.ticks_with_work
         while (pending or self.queue or self.n_active) \
                 and self.step_count - steps0 < max_steps:
             while pending and pending[0].arrival_s <= clock:
@@ -346,7 +408,9 @@ class ServingEngine:
             dt = self.step(now_s=clock)
             busy += dt
             clock += dt
-        total_generated = sum(len(r.generated) for r in self.completed) - generated0
+        total_generated = self._generated_total() - generated0
+        launches = self.decode_launches - launches0
+        ticks = self.ticks_with_work - ticks0
         return {
             "completed": len(self.completed) - completed0,
             "generated_tokens": total_generated,
@@ -356,4 +420,9 @@ class ServingEngine:
             "admission_switches": len(self.admission_switch_log) - adm_switches0,
             "mode_switches": self.ctrl.stats["switches"] - mode_switches0,
             "compiles": self.ctrl.stats["compiles"],
+            # launches actually issued (per depth group) vs what per-(depth,
+            # width) grouping would have issued for the same slot population
+            "decode_launches": launches,
+            "per_mode_launch_equiv": self.per_mode_launch_equiv - permode0,
+            "launches_per_tick": launches / ticks if ticks else 0.0,
         }

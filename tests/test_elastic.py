@@ -92,21 +92,31 @@ def test_moe_width_reduces_topk():
 
 
 def test_morph_controller_no_recompile_switching():
+    """Depth groups the executables; width is a runtime operand — switching
+    through every mode twice never compiles beyond the per-depth warmup."""
     cfg = smoke_config("mamba2-370m")
     params = init_params(jax.random.PRNGKey(0), cfg)
     ctrl = make_serve_controller(params, cfg)
-    caches = {}
-    for m in ctrl.modes:
-        cfg_m = elastic.morph_config(cfg, m)
-        caches[m.name] = init_decode_cache(cfg_m, 2, 8)
+    # ONE full-width cache per depth — width modes share it
+    caches = {d: init_decode_cache(cfg, 2, 8, per_slot=True)
+              for d in {m.depth for m in ctrl.modes}}
     ctrl.warmup()
     n_compiles = ctrl.stats["compiles"]
+    assert n_compiles == len({m.depth for m in ctrl.modes}), \
+        "one executable per depth, not per mode"
     tok = jnp.zeros((2, 1), jnp.int32)
-    for m in list(ctrl.modes) * 2:  # switch through all modes twice
-        ctrl.set_mode(m)
-        lg, caches[m.name] = ctrl(params, caches[m.name], tok)
-        assert bool(jnp.isfinite(lg).all())
+    traces = None
+    for round_ in range(2):
+        for m in ctrl.modes:  # switch through all modes twice
+            ctrl.set_mode(m)
+            active = elastic.active_widths_batch(cfg, [m.width] * 2)
+            lg, caches[m.depth] = ctrl(params, caches[m.depth], tok, active)
+            assert bool(jnp.isfinite(lg).all())
+        if round_ == 0:  # first pass traced each depth executable once
+            traces = ctrl.trace_counter["n"]
     assert ctrl.stats["compiles"] == n_compiles, "switch must not recompile"
+    assert ctrl.trace_counter["n"] == traces == n_compiles, \
+        "width churn must not retrace"
 
 
 def test_invalid_width_rejected():

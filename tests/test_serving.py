@@ -49,9 +49,17 @@ def test_queue_drains_with_exact_token_counts():
 
 def test_no_recompile_under_mixed_traffic():
     """Arbitrary admission-mode churn + slot reuse after warmup must never
-    trigger a new compile."""
+    trigger a new compile — measured with jax trace counters, not just the
+    controller's compile stat: neither the per-depth decode executables nor
+    the jitted morph_matmul core may re-trace on a width switch."""
+    from repro.kernels.morph_matmul import trace_count
+
     cfg, eng = _engine(batch=2)
     frozen = eng.compiles_after_warmup
+    assert frozen == len({m.depth for m in eng.ctrl.modes}), \
+        "warmup compiles one executable per depth, not per mode"
+    step_traces = eng.ctrl.trace_counter["n"]
+    kernel_traces = trace_count()
     modes = eng.ctrl.modes
     rid = 0
     for round_ in range(3):
@@ -64,10 +72,38 @@ def test_no_recompile_under_mixed_traffic():
     while eng.queue or eng.n_active:
         eng.step()
     assert eng.ctrl.stats["compiles"] == frozen, "mode churn recompiled"
+    assert eng.ctrl.trace_counter["n"] == step_traces, \
+        "width/depth churn re-traced a decode executable"
+    assert trace_count() == kernel_traces, \
+        "width churn re-traced the morph_matmul core"
     assert eng.ctrl.stats["switches"] > 0
     assert len(eng.completed) == rid
     # in-flight requests finish in their admission mode
     assert len({r.mode_name for r in eng.completed}) > 1
+
+
+def test_mixed_widths_share_one_launch_per_depth():
+    """Two widths in flight at one depth ride a single decode launch; the
+    per-(depth, width) baseline would have issued two."""
+    cfg, eng = _engine(batch=2)
+    full = eng.ctrl.modes[-1]
+    widths = [m for m in eng.ctrl.modes if m.depth == full.depth]
+    assert len(widths) >= 2
+    eng.set_admission_mode(widths[0])  # narrow
+    eng.submit(Request(rid=0, prompt=(3,), max_new_tokens=4))
+    eng.step()
+    eng.set_admission_mode(widths[-1])  # wide, same depth
+    eng.submit(Request(rid=1, prompt=(5,), max_new_tokens=4))
+    launches0 = eng.decode_launches
+    permode0 = eng.per_mode_launch_equiv
+    eng.step()  # both slots active, different widths
+    assert eng.decode_launches - launches0 == 1
+    assert eng.per_mode_launch_equiv - permode0 == 2
+    while eng.queue or eng.n_active:
+        eng.step()
+    by_rid = {r.rid: r for r in eng.completed}
+    assert len(by_rid[0].generated) == 4 and len(by_rid[1].generated) == 4
+    assert by_rid[0].mode_name != by_rid[1].mode_name
 
 
 def test_slo_policy_budget_tightening():
@@ -163,6 +199,48 @@ def test_reset_slot_hides_previous_occupant():
     for i, t in enumerate([4, 2]):
         lg, fresh = step(params, fresh, jnp.full((1, 1), t, jnp.int32))
         np.testing.assert_allclose(got[i], np.asarray(lg[0]), atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# prefill -> per-slot cache adoption
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-370m"])
+def test_prefill_per_slot_layout_and_continuation(arch):
+    """prefill(per_slot=True, slot=s, n_slots=n) returns a cache that is
+    layout-identical to the engine's per-slot caches, and decode continues
+    from the adopted slot exactly as token-by-token prompt feeding would."""
+    from repro.models import prefill
+
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = [3, 7, 11, 2]
+    cap, n_slots, slot = 16, 3, 1
+    batch = {"tokens": jnp.array([prompt], jnp.int32)}
+    lg, cache = prefill(params, batch, cfg, cache_extra=cap - len(prompt),
+                        per_slot=True, slot=slot, n_slots=n_slots)
+    ref_cache = init_decode_cache(cfg, n_slots, cap, per_slot=True)
+    assert (jax.tree_util.tree_structure(cache)
+            == jax.tree_util.tree_structure(ref_cache))
+    for a, b in zip(jax.tree_util.tree_leaves(cache),
+                    jax.tree_util.tree_leaves(ref_cache)):
+        assert a.shape == b.shape and a.dtype == b.dtype, (a.shape, b.shape)
+    assert np.asarray(cache["pos"]).tolist() == [0, len(prompt), 0]
+
+    # reference: token-by-token feed in a per-slot batch-1 cache
+    ref = init_decode_cache(cfg, 1, cap, per_slot=True)
+    for t in prompt:
+        lr, ref = decode_step(params, ref, jnp.full((1, 1), t, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(lg[0]), np.asarray(lr[0]),
+                               atol=2e-5, rtol=1e-5)
+    nxt = int(jnp.argmax(lg[0, 0, : cfg.vocab_size]))
+    toks = np.zeros((n_slots, 1), np.int32)
+    toks[slot, 0] = nxt
+    l2, _ = decode_step(params, cache, jnp.asarray(toks), cfg)
+    l2r, _ = decode_step(params, ref, jnp.full((1, 1), nxt, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(l2[slot]), np.asarray(l2r[0]),
+                               atol=2e-5, rtol=1e-5)
 
 
 # ---------------------------------------------------------------------------
