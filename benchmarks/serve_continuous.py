@@ -8,31 +8,47 @@ Phases:
   3. generous again    -> policy recovers the widest mode
   4. mixed-width churn -> slots of different widths share per-DEPTH decode
      launches; reports actual launches vs the per-(depth, width) baseline
+  5. prefill admission -> long prompts are consumed by one prefill launch
+     each; reports prompt-consume latency per token
 
 Reports sustained tokens/s per phase, mode switch counts, decode launches
 per tick, and verifies the zero-recompiles-after-warmup invariant. Smoke-
 scale by default so it runs in CI; pass an arch name for the full config.
 
+``--mesh`` adds the sharded axis: the same engine + trace at dp x tp in
+{1x1, 2x4, 8x1} (1x1 = the host-local executor baseline; the others run
+under a (data, model) mesh via MeshExecutor), reporting tokens/s and
+launches-per-tick per mesh. On CPU the 8 devices are forced via XLA_FLAGS,
+which must happen before jax initializes — hence the import-time check.
+
   PYTHONPATH=src python benchmarks/serve_continuous.py [arch] [n_requests]
+  PYTHONPATH=src python benchmarks/serve_continuous.py --mesh [arch] [n_requests]
 """
 from __future__ import annotations
 
 import sys
+
+if "--mesh" in sys.argv:  # before jax initializes its backend
+    from repro.xla_flags import force_host_device_count
+    force_host_device_count(8)
 
 import jax
 
 from benchmarks.common import emit
 from repro.configs import smoke_config
 from repro.core import elastic
+from repro.launch.mesh import make_serve_mesh
 from repro.models.model import init_params
-from repro.runtime.serving import ServingEngine, SLOPolicy, poisson_trace
+from repro.runtime.serving import (MeshExecutor, ServingEngine, SLOPolicy,
+                                   poisson_trace)
 
 
 def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         batch: int = 4, capacity: int = 32) -> None:
     cfg = smoke_config(arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(params, cfg, batch_size=batch, cache_capacity=capacity)
+    engine = ServingEngine(params, cfg, batch_size=batch,
+                           cache_capacity=capacity, prefill_threshold=8)
     engine.warmup()
     policy = SLOPolicy(cfg, engine.ctrl, batch_size=batch, cache_capacity=capacity)
 
@@ -65,7 +81,7 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
 
         trace = poisson_trace(n_requests, rate_per_s=rate, seed=seeds[pname],
                               prompt_len=(1, 3), new_tokens=(4, 10),
-                              vocab=cfg.vocab_size)
+                              vocab=cfg.vocab_size, interactive_frac=0.3)
         summary = engine.run(trace, budget_fn=budget_fn, policy=policy)
         budget = budget_fn(0.0)
         chosen = policy.choose(budget)
@@ -122,6 +138,25 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         "widths_in_flight": [m.name for m in width_modes],
     })
 
+    # prefill admission: long prompts are consumed whole by one prefill
+    # launch each (threshold 8 with prompt_len >= 8 below), instead of
+    # len(prompt) decode-path ticks — prompt-consume latency, measured
+    engine.set_admission_mode(engine.ctrl.modes[-1])
+    long_trace = poisson_trace(max(4, n_requests // 3), rate_per_s=rate,
+                               seed=29, prompt_len=(8, 12), new_tokens=(4, 8),
+                               vocab=cfg.vocab_size, interactive_frac=0.5)
+    summary = engine.run(long_trace, budget_fn=None, policy=None)
+    assert summary["prefills"] == len(long_trace), \
+        f"every long prompt must prefill: {summary['prefills']} vs {len(long_trace)}"
+    emit(f"serve_continuous/{cfg.name}/prefill_admission", 0.0, {
+        "prefills": summary["prefills"],
+        "prefill_prompt_tokens": summary["prefill_prompt_tokens"],
+        "prompt_consume_ms_per_token":
+            round(summary["prompt_consume_ms_per_token"], 3),
+        "sustained_tokens_per_s": round(summary["sustained_tokens_per_s"], 1),
+        "completed": summary["completed"],
+    })
+
     n_switches = len(slo_switches)
     assert engine.ctrl.stats["compiles"] == engine.compiles_after_warmup, \
         "mode churn must not recompile"
@@ -132,7 +167,8 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         "admission_switches": n_switches,
         # only the SLO-driven phases — calibration and forced mixed-width
         # cycling are excluded, consistent with the count above
-        "switch_log": [f"{a}->{b}@{s}" for s, a, b in slo_switches],
+        "switch_log": [f"{a}->{b}@{s}(q:i{qi}/b{qb})"
+                       for s, a, b, qi, qb in slo_switches],
         "recompiles_after_warmup": 0,
         "executables": engine.ctrl.stats["compiles"],
         "telemetry": {k: {kk: round(vv, 2) for kk, vv in v.items()}
@@ -140,7 +176,62 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
     })
 
 
+def run_mesh(arch: str = "tinyllama-1.1b", n_requests: int = 12,
+             batch: int = 4, capacity: int = 32) -> None:
+    """Sharded axis: one trace, served at dp x tp in {1x1, 2x4, 8x1}.
+
+    1x1 is the host-local executor (the unsharded baseline); the other
+    points run the same per-depth executables SPMD under a (data, model)
+    mesh. Generated tokens must be identical across all three — sharded
+    logits match local to float tolerance, so every argmax agrees — and no
+    executable may re-trace after warmup.
+    """
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ref_tokens = None
+    for dp, tp in [(1, 1), (2, 4), (8, 1)]:
+        executor = None if (dp, tp) == (1, 1) else MeshExecutor(make_serve_mesh(dp, tp))
+        engine = ServingEngine(params, cfg, batch_size=batch,
+                               cache_capacity=capacity, executor=executor,
+                               prefill_threshold=6)
+        engine.warmup()
+        traces0 = engine.ctrl.trace_counter["n"]
+        policy = SLOPolicy(cfg, engine.ctrl, batch_size=batch,
+                           cache_capacity=capacity, dp=dp, tp=tp)
+        trace = poisson_trace(n_requests, rate_per_s=1e4, seed=31,
+                              prompt_len=(1, 8), new_tokens=(4, 8),
+                              vocab=cfg.vocab_size, interactive_frac=0.3)
+        summary = engine.run(trace, budget_fn=lambda t: 10.0, policy=policy)
+        gen = {r.rid: tuple(r.generated) for r in engine.completed}
+        if ref_tokens is None:
+            ref_tokens = gen
+        else:
+            assert gen == ref_tokens, \
+                f"dp{dp}xtp{tp} generated different tokens than the 1x1 baseline"
+        assert engine.ctrl.trace_counter["n"] == traces0, \
+            f"dp{dp}xtp{tp}: decode executable re-traced after warmup"
+        emit(f"serve_continuous/{cfg.name}/mesh_dp{dp}tp{tp}",
+             1e6 / max(summary["sustained_tokens_per_s"], 1e-9), {
+                 "policy": getattr(engine.executor, "policy", "local"),
+                 "sustained_tokens_per_s":
+                     round(summary["sustained_tokens_per_s"], 1),
+                 "launches_per_tick": round(summary["launches_per_tick"], 2),
+                 "decode_launches": summary["decode_launches"],
+                 "completed": summary["completed"],
+                 "prefills": summary["prefills"],
+                 "prompt_consume_ms_per_token":
+                     round(summary["prompt_consume_ms_per_token"], 3),
+                 "recompiles_after_warmup":
+                     summary["compiles"] - engine.compiles_after_warmup,
+                 "matches_unsharded": True,
+             })
+
+
 if __name__ == "__main__":
-    arch = sys.argv[1] if len(sys.argv) > 1 else "tinyllama-1.1b"
-    n = int(sys.argv[2]) if len(sys.argv) > 2 else 24
-    run(arch, n)
+    argv = [a for a in sys.argv[1:] if a != "--mesh"]
+    arch = argv[0] if argv else "tinyllama-1.1b"
+    n = int(argv[1]) if len(argv) > 1 else 24
+    if "--mesh" in sys.argv:
+        run_mesh(arch, max(6, n // 2))
+    else:
+        run(arch, n)

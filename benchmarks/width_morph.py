@@ -6,8 +6,19 @@ Width is a *runtime operand* end-to-end: every width mode below runs through
 the SAME per-depth decode executable (warmup compiles ``len(depths)``
 executables, not ``len(modes)``), and the kernel sweep reports the measured
 jit trace count across the width sweep — the single-executable claim as a
-number, not an assertion."""
+number, not an assertion.
+
+``--mesh`` adds the sharded axis: the width sweep's per-depth executables
+compiled SPMD at dp x tp in {1x1, 2x4, 8x1} (MeshExecutor), reporting decode
+latency and tokens/s per width per mesh — still one executable per depth
+under sharding. CPU runs force 8 host devices via XLA_FLAGS at import."""
 from __future__ import annotations
+
+import sys
+
+if "--mesh" in sys.argv:  # before jax initializes its backend
+    from repro.xla_flags import force_host_device_count
+    force_host_device_count(8)
 
 import jax
 import jax.numpy as jnp
@@ -88,5 +99,47 @@ def run(arch: str = "tinyllama-1.1b", train_steps: int = 6) -> None:
     })
 
 
+def run_mesh(arch: str = "tinyllama-1.1b", batch: int = 4,
+             capacity: int = 16) -> None:
+    """Width sweep under TP/DP sharding: same per-depth executables, compiled
+    SPMD; width remains a replicated runtime operand at every mesh point."""
+    from repro.launch.mesh import make_serve_mesh
+    from repro.runtime.serving import LocalExecutor, MeshExecutor
+
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_depths = len({m.depth for m in cfg.elastic.modes(cfg.n_groups)})
+    for dp, tp in [(1, 1), (2, 4), (8, 1)]:
+        ex = (LocalExecutor() if (dp, tp) == (1, 1)
+              else MeshExecutor(make_serve_mesh(dp, tp)))
+        ex = ex.bind(cfg, batch, capacity)
+        params_d = ex.place_params(params)
+        ctrl = ex.make_controller(params_d, cfg, None)
+        ctrl.warmup()
+        tok = ex.put(jnp.zeros((batch, 1), jnp.int32))
+        for w in sorted(cfg.elastic.width_fractions):
+            mode = MorphMode(depth=cfg.n_groups, width=w)
+            cache = ex.init_cache()
+            step = ctrl.step_for(mode)
+            active = jax.tree_util.tree_map(
+                ex.put, elastic.active_widths_batch(cfg, [w] * batch))
+            t = time_decode(lambda p, c, tk: step(p, c, tk, active),
+                            params_d, cache, tok)
+            emit(f"width_morph/{arch}/mesh_dp{dp}tp{tp}/w{int(w * 100)}",
+                 t * 1e6, {
+                     "policy": getattr(ex, "policy", "local"),
+                     "tokens_per_s": round(batch / t, 1),
+                     "compiles": ctrl.stats["compiles"],
+                     "compiles_expected": n_depths,
+                 })
+        assert ctrl.stats["compiles"] == n_depths, \
+            f"dp{dp}xtp{tp}: width sweep compiled {ctrl.stats['compiles']} " \
+            f"executables, expected {n_depths} (one per depth)"
+
+
 if __name__ == "__main__":
-    run()
+    if "--mesh" in sys.argv:
+        argv = [a for a in sys.argv[1:] if a != "--mesh"]
+        run_mesh(argv[0] if argv else "tinyllama-1.1b")
+    else:
+        run()

@@ -9,6 +9,9 @@
 #   scripts/ci.sh --bench-smoke  # additionally run the morph/serving
 #                                # benchmarks in tiny configs so the
 #                                # benchmark scripts can't silently rot
+#   scripts/ci.sh --mesh-smoke   # additionally run the sharded-serving
+#                                # shard (8-device CPU host platform) +
+#                                # the --mesh benchmark axes
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,12 +20,38 @@ SEED_FAILED=5
 SEED_ERRORS=1
 TIMEOUT="${CI_TIMEOUT:-1800}"
 BENCH_SMOKE=0
+MESH_SMOKE=0
 for arg in "$@"; do
     case "$arg" in
         --bench-smoke) BENCH_SMOKE=1 ;;
+        --mesh-smoke) MESH_SMOKE=1 ;;
         *) echo "ci.sh: unknown argument '$arg'" >&2; exit 2 ;;
     esac
 done
+
+if [ "$MESH_SMOKE" -eq 1 ]; then
+    echo "CI: mesh-smoke shard (8-device CPU host platform)"
+    MESH_TIMEOUT="${CI_MESH_TIMEOUT:-900}"
+    # the tests spawn their own 8-device subprocesses; the env var also
+    # covers anything collected in-process
+    if ! XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$MESH_TIMEOUT" \
+        python -m pytest -q tests/test_serving_mesh.py; then
+        echo "CI: FAIL (sharded-serving tests)"
+        exit 1
+    fi
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$MESH_TIMEOUT" \
+        python -m benchmarks.serve_continuous --mesh; then
+        echo "CI: FAIL (serve_continuous --mesh)"
+        exit 1
+    fi
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$MESH_TIMEOUT" \
+        python -m benchmarks.width_morph --mesh; then
+        echo "CI: FAIL (width_morph --mesh)"
+        exit 1
+    fi
+    echo "CI: mesh-smoke OK"
+fi
 
 if [ "$BENCH_SMOKE" -eq 1 ]; then
     echo "CI: bench-smoke stage (tiny configs)"

@@ -16,16 +16,20 @@ from __future__ import annotations
 import jax
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, devices=None):
     """``jax.make_mesh`` pinning Auto axis types where the concept exists.
 
     We rely on GSPMD propagation; jax 0.9 flips the default axis type, so pin
     Auto explicitly whenever the installed jax knows about axis types.
+    ``devices`` restricts the mesh to a subset (e.g. a dp*tp serving slice of
+    a larger host platform); default is all of ``jax.devices()``.
     """
+    kw = {} if devices is None else {"devices": devices}
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is None:
-        return jax.make_mesh(shape, axes)
-    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+        return jax.make_mesh(shape, axes, **kw)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes), **kw)
 
 
 def set_mesh(mesh):

@@ -22,6 +22,14 @@ here mirrors that split along the two morph axes:
 per-mode latency percentiles) so tests can assert the no-copy/no-recompile
 invariants, and the serve controller carries a ``trace_counter`` incremented
 only when jax actually traces — the measured single-executable claim.
+
+Both morph axes survive sharding: with a mesh, ``make_serve_controller``
+compiles each per-depth executable SPMD (``NamedSharding``-annotated jit over
+placed params, a sharded donated cache, replicated width operands, and
+activation constraints from ``sharding.decode_specs``) with the same
+``compile_key`` — depth picks the executable, width stays runtime data, and
+the sharded step is token-identical to the local one (logits match to float
+tolerance; collective reduction order moves the last bits).
 """
 from __future__ import annotations
 
@@ -31,10 +39,12 @@ from collections import deque
 from typing import Callable, Deque, Dict, Hashable, List, Optional, Tuple
 
 import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, MorphMode
 from repro.core import elastic
 from repro.models.model import decode_step
+from repro.parallel import sharding as _sh
 
 
 class ModeTelemetry:
@@ -177,7 +187,10 @@ class MorphController:
 
 
 def make_serve_controller(params, cfg: ModelConfig,
-                          modes: Optional[Tuple[MorphMode, ...]] = None) -> MorphController:
+                          modes: Optional[Tuple[MorphMode, ...]] = None, *,
+                          mesh=None, policy: str = "serve_tp",
+                          param_shardings=None, cache_shardings=None,
+                          activation_specs=None) -> MorphController:
     """Serving controller: ONE jitted decode executable per *depth*.
 
     Each executable's signature is ``step(params, cache, tokens, active)``:
@@ -187,17 +200,50 @@ def make_serve_controller(params, cfg: ModelConfig,
     recompiles: the same executable serves every width, and a single launch
     may mix widths across batch slots. ``ctrl.trace_counter["n"]`` advances
     only when jax traces a step — the measured zero-recompile invariant.
+
+    With ``mesh``, each per-depth executable is compiled SPMD under
+    ``NamedSharding`` annotations instead: params arrive pre-placed by the
+    ``policy`` specs (pass ``param_shardings`` to reuse the executor's
+    placement), the donated cache keeps the serving-cache layout
+    (``cache_shardings``, from ``sharding.serve_cache_specs``), tokens and
+    the runtime-width ``active`` scalars are replicated operands, and decode
+    activations are constrained inside the step via ``activation_specs``
+    (``sharding.decode_specs``). ``compile_key`` is unchanged — one sharded
+    executable per depth, width still a runtime operand.
     """
     trace_counter = {"n": 0}
+    if mesh is not None:
+        if cache_shardings is None:
+            raise ValueError("mesh compile path needs cache_shardings "
+                             "(sharding.serve_cache_specs of the engine cache)")
+        if param_shardings is None:
+            param_shardings = _sh.shardings_for(
+                _sh.param_specs(params, cfg, mesh, policy), mesh)
+        rep = NamedSharding(mesh, P())
+        active_sh = {k: rep for k in elastic.active_widths(cfg, 1.0)}
+        in_sh = (param_shardings, cache_shardings, rep, active_sh)
+        out_sh = (rep, cache_shardings)  # logits land replicated (host argmax)
+        aspecs = (activation_specs if activation_specs is not None
+                  else _sh.decode_specs(cfg, mesh, policy))
 
     def factory(mode: MorphMode):
         depth = mode.depth
 
         def step(p, cache, tokens, active):
             trace_counter["n"] += 1  # executes at trace time only
-            return decode_step(p, cache, tokens, cfg, depth=depth, active=active)
+            if mesh is None:
+                return decode_step(p, cache, tokens, cfg, depth=depth,
+                                   active=active)
+            # the context manager runs at trace time, which is when the
+            # `constrain` calls inside decode_step consult it
+            with _sh.activation_sharding(mesh, aspecs):
+                return decode_step(p, cache, tokens, cfg, depth=depth,
+                                   active=active)
 
-        return jax.jit(step, donate_argnums=(1,))
+        if mesh is None:
+            return jax.jit(step, donate_argnums=(1,))
+        return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=(1,))
 
     ctrl = MorphController(cfg, factory, modes, compile_key=lambda m: m.depth)
     ctrl.trace_counter = trace_counter

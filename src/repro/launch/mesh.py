@@ -1,5 +1,7 @@
-"""Production mesh construction (assignment-mandated shapes)."""
+"""Production mesh construction (assignment-mandated shapes) + serving meshes."""
 from __future__ import annotations
+
+import jax
 
 from repro.compat import make_mesh as _mk
 
@@ -15,3 +17,21 @@ def make_debug_mesh(*, multi_pod: bool = False):
     shape = (2, 2, 2) if multi_pod else (2, 4)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return _mk(shape, axes)
+
+
+def make_serve_mesh(dp: int = 1, tp: int = 1):
+    """Serving mesh: (dp, tp) over ("data", "model"), on the first dp*tp
+    devices — real accelerators, or ``--xla_force_host_platform_device_count``
+    CPU devices for CI. A 1x1 mesh is valid (single-device SPMD), so one
+    engine construction path serves every scale.
+    """
+    if dp < 1 or tp < 1:
+        raise ValueError(f"mesh degrees must be >= 1, got dp={dp} tp={tp}")
+    n = dp * tp
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(
+            f"serve mesh dp={dp} x tp={tp} needs {n} devices, have "
+            f"{len(devs)} (CPU runs: set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before importing jax)")
+    return _mk((dp, tp), ("data", "model"), devices=devs[:n])

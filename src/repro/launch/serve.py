@@ -6,28 +6,63 @@ switching morph modes on the fly. Width switches are a scalar-operand change
 inside one executable; only distinct depths compile separately: no weight
 movement, no recompilation after warmup (asserted and reported).
 
+``--mesh dpxtp`` runs the same engine SPMD-sharded: a (data, model) mesh from
+``launch.mesh.make_serve_mesh``, params placed by ``serve_policy`` specs,
+sharded per-slot caches, replicated width operands (``MeshExecutor``). On a
+CPU-only host the requested device count is forced via XLA_FLAGS
+automatically (the flag must be set before jax initializes, which is why it
+is handled at module import).
+
 Two traffic shapes:
   * default: a fixed round of ``--batch`` x enough requests to generate
     ``--tokens`` tokens, cycling the admission mode every ``--switch-every``
     engine steps (the original demo's forced mode churn).
   * ``--budget-ms``: SLO-driven — the admission mode is chosen each tick as
-    the widest mode whose predicted step latency (analytical estimate,
-    corrected online by measured telemetry) fits the budget.
+    the widest mode whose predicted step latency (analytical estimate at the
+    mesh's DesignPoint(dp, tp), corrected online by measured telemetry) fits
+    the budget.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
-      --tokens 64 --switch-every 16
+      --tokens 64 --switch-every 16 --mesh 2x4
 """
 from __future__ import annotations
 
 import argparse
+import sys
+
+
+from repro.xla_flags import force_host_device_count, mesh_arg
+
+
+def _parse_mesh(spec: str):
+    try:
+        dp, tp = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh wants DPxTP (e.g. 2x4), got {spec!r}")
+    return dp, tp
+
+
+# --xla_force_host_platform_device_count only takes effect before jax's
+# backend initializes, so the --mesh arg is inspected pre-import; malformed
+# or missing values are left for argparse to report properly.
+_mesh_spec = mesh_arg(sys.argv)
+if _mesh_spec is not None:
+    try:
+        _dp, _tp = _parse_mesh(_mesh_spec)
+    except SystemExit:
+        pass
+    else:
+        force_host_device_count(_dp * _tp)
 
 import jax
 
 from repro.configs import get_config, smoke_config
 from repro.core import elastic
+from repro.launch.mesh import make_serve_mesh
 from repro.models.model import init_params
-from repro.runtime.serving import Request, ServingEngine, SLOPolicy
+from repro.runtime.serving import (MeshExecutor, Request, ServingEngine,
+                                   SLOPolicy)
 
 
 def main(argv=None):
@@ -41,6 +76,12 @@ def main(argv=None):
                     help="cycle admission mode every N engine steps")
     ap.add_argument("--budget-ms", type=float, default=0.0,
                     help="if > 0, use the SLO policy with this latency budget")
+    ap.add_argument("--mesh", default="",
+                    help="DPxTP (e.g. 2x4): shard the engine over a "
+                         "(data, model) mesh")
+    ap.add_argument("--prefill-threshold", type=int, default=8,
+                    help="prompts at least this long are consumed by one "
+                         "prefill launch instead of token-by-token")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -55,20 +96,31 @@ def main(argv=None):
     n_requests = max(args.batch, (args.tokens + per_req - 1) // per_req)
     capacity = per_req + 8
 
+    executor = None
+    dp = tp = 1
+    if args.mesh:
+        dp, tp = _parse_mesh(args.mesh)
+        executor = MeshExecutor(make_serve_mesh(dp, tp))
     engine = ServingEngine(params, cfg, batch_size=args.batch,
-                           cache_capacity=capacity, modes=modes)
+                           cache_capacity=capacity, modes=modes,
+                           executor=executor,
+                           prefill_threshold=args.prefill_threshold)
+    mesh_note = (f" mesh=dp{dp}xtp{tp} policy={engine.executor.policy}"
+                 if args.mesh else "")
     print(f"[serve] {cfg.name}: modes = {[m.name for m in modes]} "
-          f"requests={n_requests} x {per_req} tokens, batch={args.batch}")
+          f"requests={n_requests} x {per_req} tokens, batch={args.batch}"
+          f"{mesh_note}")
     engine.warmup()
 
     for i in range(n_requests):
         engine.submit(Request(rid=i, prompt=(1 + i % (cfg.vocab_size - 1),),
-                              max_new_tokens=per_req))
+                              max_new_tokens=per_req,
+                              slo_class="interactive" if i % 3 == 0 else "batch"))
 
     policy = None
     if args.budget_ms > 0:
         policy = SLOPolicy(cfg, engine.ctrl, batch_size=args.batch,
-                           cache_capacity=capacity)
+                           cache_capacity=capacity, dp=dp, tp=tp)
 
     mode_idx = len(modes) - 1
     busy = 0.0
@@ -91,6 +143,7 @@ def main(argv=None):
           f"executables={ctrl.stats['compiles']} (per depth) "
           f"decode_launches={engine.decode_launches} "
           f"(per-mode baseline {engine.per_mode_launch_equiv}) "
+          f"prefills={engine.prefills} "
           f"tokens/s={generated / busy if busy else 0.0:.1f}")
     for name, t in ctrl.telemetry_summary().items():
         mode = ctrl.mode_by_name[name]

@@ -8,6 +8,8 @@ from repro.models.model import (
     pos_kind,
     prefill,
     reset_cache_slot,
+    reset_cache_slots,
+    adopt_cache_slot,
 )
 
 __all__ = [
@@ -20,4 +22,6 @@ __all__ = [
     "pos_kind",
     "prefill",
     "reset_cache_slot",
+    "reset_cache_slots",
+    "adopt_cache_slot",
 ]

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
 
 # ---------------------------------------------------------------------------
 # helpers
@@ -331,6 +332,11 @@ def mha(params, x, cfg: ModelConfig, positions, *, kv_x=None, kv_positions=None,
     if cfg.use_rope:
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, kpos, cfg.rope_theta)
+    # serving prefill under a mesh: same by-head pinning as the decode path
+    # (no-ops outside an activation_sharding context, e.g. in training)
+    q = constrain(q, "decode_q")
+    k = constrain(k, "decode_kv")
+    v = constrain(v, "decode_kv")
     Sk = k.shape[1]
     impl = cfg.attn_impl
     if impl == "auto":
@@ -396,6 +402,10 @@ def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False,
                      cfg.n_heads, cfg.head_dim)
     if cfg.use_rope and not cross:
         q = rope(q, qpos, cfg.rope_theta)
+    # under a mesh, pin the post-projection layout to by-head sharding (or
+    # replication): attention math must never be split through head_dim,
+    # which is what the fused projection's column sharding would propagate
+    q = constrain(q, "decode_q")
 
     if cross:
         k, v = cache["k"], cache["v"]
@@ -417,6 +427,8 @@ def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False,
                          cfg.n_kv_heads, cfg.head_dim)
     if cfg.use_rope:
         k_new = rope(k_new, qpos, cfg.rope_theta)
+    k_new = constrain(k_new, "decode_kv")
+    v_new = constrain(v_new, "decode_kv")
 
     S = cache["k"].shape[1]
     window = cfg.sliding_window

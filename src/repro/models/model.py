@@ -350,6 +350,44 @@ def reset_cache_slot(cache: Cache, slot) -> Cache:
     return {"pos": cache["pos"].at[slot].set(0), "stack": stack}
 
 
+def reset_cache_slots(cache: Cache, mask) -> Cache:
+    """Batched ``reset_cache_slot``: rewind every slot where ``mask`` is True.
+
+    ``mask`` is a (n_slots,) bool vector, so one jitted call (with the cache
+    donated) covers an entire admission burst — admission cost no longer
+    scales with burst size, and under a mesh the whole rewind is a single
+    device-side launch with no gathers. Same semantics as the scalar version:
+    recurrent state is zeroed, attention KV is left in place (position
+    masking hides it), position counters rewind to 0.
+    """
+    mask = jnp.asarray(mask)
+
+    def leaf(k, a):
+        if k not in _RECURRENT_CACHE_KEYS:
+            return a
+        m = mask.reshape((1, mask.shape[0]) + (1,) * (a.ndim - 2))
+        return jnp.where(m, jnp.zeros((), a.dtype), a)
+
+    stack = {pname: {k: leaf(k, a) for k, a in layer.items()}
+             for pname, layer in cache["stack"].items()}
+    return {"pos": jnp.where(mask, 0, cache["pos"]), "stack": stack}
+
+
+def adopt_cache_slot(cache: Cache, pre: Cache, slot) -> Cache:
+    """Copy slot ``slot`` of a prefilled engine-layout cache into ``cache``.
+
+    ``pre`` comes from ``prefill(per_slot=True, slot=..., n_slots=...)`` and
+    is layout-identical to ``cache``; only the prefilled slot's lane (all
+    keys — KV, recurrent state, position) is taken, so the adoption is one
+    jitted scatter per cache structure with ``slot`` traced. The remaining
+    slots of ``cache`` are untouched.
+    """
+    stack = jax.tree_util.tree_map(
+        lambda full, new: full.at[:, slot].set(new[:, slot].astype(full.dtype)),
+        cache["stack"], pre["stack"])
+    return {"pos": cache["pos"].at[slot].set(pre["pos"][slot]), "stack": stack}
+
+
 def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig,
                   active=None):
     new_cache = {}
@@ -425,6 +463,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int]
             lambda a: jax.lax.dynamic_index_in_dim(a, g_idx, 0, keepdims=False),
             cache_stack)
         h, nc = _group_decode(gp, gc, h, pos, cfg, active=active)
+        h = _sh.constrain(h, "residual")  # mesh serving: pin the decode stream
         cache_stack = jax.tree_util.tree_map(
             lambda full, new: jax.lax.dynamic_update_index_in_dim(
                 full, new.astype(full.dtype), g_idx, 0),
@@ -443,7 +482,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int]
 
 def prefill(params, batch, cfg: ModelConfig, *, remat: str = "none",
             cache_extra: int = 0, per_slot: bool = False,
-            slot: Optional[int] = None, n_slots: Optional[int] = None):
+            slot: Optional[int] = None, n_slots: Optional[int] = None,
+            depth: Optional[int] = None):
     """Process a full prompt; returns (last-position logits, decode cache).
 
     ``cache_extra`` appends free KV slots so decode can continue past the
@@ -455,15 +495,29 @@ def prefill(params, batch, cfg: ModelConfig, *, remat: str = "none",
     ``n_slots``-wide zeroed cache — the result is layout-identical to
     ``init_decode_cache(cfg, n_slots, S + cache_extra, per_slot=True)``, so a
     serving engine can adopt a prefilled prompt directly into one of its
-    slots instead of feeding it token by token.
+    slots instead of feeding it token by token. ``slot`` may be a traced
+    scalar: one compiled prefill per prompt length serves every slot.
+
+    ``depth`` truncates the prompt pass at a depth-morph boundary, matching
+    ``decode_step(depth=...)``: logits come from the exit head, cache groups
+    beyond ``depth`` are zero (never scanned by that depth's executable).
     """
+    depth = depth if depth is not None else cfg.n_groups
     h, positions, enc_out, enc_pos = _embed_inputs(params, batch, cfg)
     S = h.shape[1]
     h, aux, caches = _scan_groups(params["stack"], h, cfg, positions, start=0,
-                                  stop=cfg.n_groups, remat=remat, enc_out=enc_out,
+                                  stop=depth, remat=remat, enc_out=enc_out,
                                   enc_positions=enc_pos, want_cache=True,
                                   cache_extra=cache_extra)
-    logits = _logits(params, h[:, -1:], cfg, params["final_norm"])
+    if depth < cfg.n_groups:  # pad the group stack back to engine layout
+        caches = jax.tree_util.tree_map(
+            lambda a: jnp.concatenate(
+                [a, jnp.zeros((cfg.n_groups - depth,) + a.shape[1:], a.dtype)]),
+            caches)
+    norm_p = params["final_norm"]
+    if depth < cfg.n_groups:
+        norm_p = params.get("exit_norms", {}).get(f"g{depth}", norm_p)
+    logits = _logits(params, h[:, -1:], cfg, norm_p)
     B = h.shape[0]
     if not per_slot:
         if slot is not None:

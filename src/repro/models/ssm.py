@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.layers import (apply_norm, apply_norm_masked, dense_init,
                                  matmul, morph_proj)
+from repro.parallel.sharding import constrain
 
 
 def init_ssm(key, cfg: ModelConfig):
@@ -225,8 +226,10 @@ def ssm_decode_step(params, x, cache, cfg: ModelConfig, active=None):
     hp = cfg.ssm_head_dim
     g, n = cfg.ssm_ngroups, cfg.ssm_state
     a_in = active.get("d_inner") if active else None
-    xs = morph_proj(x, params["w_x"], active_n=a_in)
-    z = morph_proj(x, params["w_z"], active_n=a_in)
+    # pin the channel layout under a mesh (see decode_specs): the scan math
+    # below must see whole heads per shard, not the projection's column split
+    xs = constrain(morph_proj(x, params["w_x"], active_n=a_in), "decode_ssm")
+    z = constrain(morph_proj(x, params["w_z"], active_n=a_in), "decode_ssm")
     bc = matmul(x, params["w_bc"], dt_)  # B/C groups are never width-gated
     dt_raw = morph_proj(x, params["w_dt"],
                         active_n=active.get("ssm_heads") if active else None)

@@ -14,6 +14,28 @@ Policies (see DESIGN.md §Sharding):
 
 MoE experts: EP (experts -> model) when divisible, else expert-TP
 (per-expert d_ff -> model).
+
+Serving-cache sharding policy (the elastic morph cache, used by the
+continuous-batching engine through its executor seam):
+
+The engine keeps one FULL-width per-slot cache per compiled depth —
+``{"pos": (n_slots,), "stack": {... (n_groups, n_slots, ...)}}`` — and width
+morphs at runtime via ``active`` operands, so the cache layout (and its
+sharding) is identical for every width. ``serve_cache_specs`` maps that
+layout: the leading dim of every stack leaf is the layer-group stack
+(replicated — the decode scan indexes it), ``n_slots`` goes to the data axes
+when divisible (``serve_tp``) or stays replicated (``serve_2d``), KV sequence
+goes to ``model``, SSM state heads go to ``model``, and per-slot ``pos``
+counters are replicated (host-visible slot bookkeeping). ``decode_specs``
+complements it with the activation constraints the decode step applies via
+``constrain``: the residual stream plus the post-projection q/kv head tensors
+and SSM channel tensors, pinned to head-sharded (divisible) or replicated
+layouts so the partitioner never splits attention/SSM math through a head.
+
+The executor seam itself lives in ``runtime.serving``: ``LocalExecutor``
+compiles host-local executables, ``MeshExecutor`` compiles the same step /
+reset / adopt / prefill ops with ``NamedSharding``-annotated jit using the
+specs from this module — engine code never branches on mesh-ness.
 """
 from __future__ import annotations
 
@@ -232,6 +254,47 @@ def cache_specs(cache_shape, cfg: ModelConfig, mesh: Mesh, policy: str) -> Any:
         return P(*([None] * nd))
 
     return _spec_like(cache_shape, leaf)
+
+
+def serve_cache_specs(cache_shape, cfg: ModelConfig, mesh: Mesh, policy: str) -> Any:
+    """Specs for the engine's per-slot morph cache (see module docstring).
+
+    ``cache_shape`` is the full engine cache dict — ``pos`` (n_slots,) plus
+    the per-group ``stack`` — as a ShapeDtypeStruct pytree or real cache.
+    Stack leaves reuse ``cache_specs`` (n_slots is their batch dim); ``pos``
+    stays replicated: it is read on the host every admission tick.
+    """
+    return {"pos": P(None), "stack": cache_specs(cache_shape["stack"], cfg,
+                                                 mesh, policy)}
+
+
+def decode_specs(cfg: ModelConfig, mesh: Mesh, policy: str,
+                 batch: Optional[int] = None) -> Dict[str, P]:
+    """Activation constraints for the one-token decode path.
+
+    ``residual`` covers the (B, 1, d_model) stream between layer groups.
+    ``decode_q`` / ``decode_kv`` pin the post-projection (B, 1, heads, hd)
+    tensors to a by-head layout (model axis when it divides the head count,
+    else replicated), and ``decode_ssm`` pins the (B, 1, d_inner) SSM channel
+    tensors likewise. Without these the partitioner inherits the fused
+    projection's column sharding, which splits head_dim across shards —
+    wasteful on TPU and miscompiled by some XLA CPU versions. ``batch``
+    enables batch-dim sharding over the data axes only when it divides.
+    """
+    m = model_axis(mesh)
+    d: Any = data_axes(mesh) or None
+    if policy == "serve_2d":
+        d = None  # decode activations replicated over data axes
+    b = d if batch and d is not None and batch % _axes_size(mesh, d) == 0 else None
+    tp = mesh.shape.get("model", 1) if m else 1
+    specs: Dict[str, P] = {"residual": P(b, None, None)}
+    if cfg.n_heads:
+        specs["decode_q"] = P(b, None, m if cfg.n_heads % tp == 0 else None, None)
+        specs["decode_kv"] = P(b, None, m if cfg.n_kv_heads % tp == 0 else None, None)
+    if cfg.ssm_state:
+        d_in = cfg.ssm_d_inner
+        specs["decode_ssm"] = P(b, None, m if d_in % tp == 0 else None)
+    return specs
 
 
 def opt_specs(opt_shape, pspecs) -> Any:

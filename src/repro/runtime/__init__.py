@@ -13,6 +13,8 @@ from repro.runtime.fault_tolerance import (
     elastic_reshard,
 )
 from repro.runtime.serving import (
+    LocalExecutor,
+    MeshExecutor,
     Request,
     ServingEngine,
     SLOPolicy,
@@ -20,6 +22,8 @@ from repro.runtime.serving import (
 )
 
 __all__ = [
+    "LocalExecutor",
+    "MeshExecutor",
     "Request",
     "ServingEngine",
     "SLOPolicy",

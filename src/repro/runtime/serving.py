@@ -1,4 +1,4 @@
-"""Continuous-batching NeuroMorph serving engine — single-executable width.
+"""Continuous-batching NeuroMorph serving engine — sharded, single-executable.
 
 The paper's runtime story is on-the-fly reconfiguration under live traffic:
 NeuroMorph flips clock gates while inference requests keep arriving, and a
@@ -6,11 +6,13 @@ mode switch costs nothing because nothing is reprogrammed. This engine is
 the TPU analogue of that story end-to-end:
 
 * **Request queue + slot admission.** Requests arrive (e.g. from a Poisson
-  trace), wait in a FIFO, and are admitted into free batch slots *every
-  step* — no waiting for the whole batch to drain (continuous batching).
-  Each slot is an independent request at its own sequence offset, carried by
-  the per-slot decode state in ``models.model`` (``per_slot`` caches +
-  ``reset_cache_slot``).
+  trace), wait in a two-level priority queue (``interactive`` before
+  ``batch`` — ``Request.slo_class``), and are admitted into free batch slots
+  *every step* — no waiting for the whole batch to drain (continuous
+  batching). Each slot is an independent request at its own sequence offset,
+  carried by the per-slot decode state in ``models.model``. A whole
+  admission burst is rewound with ONE jitted ``reset_cache_slots`` call (a
+  (n_slots,) bool mask), so admission cost does not scale with burst size.
 
 * **Per-DEPTH slot groups; width is per-slot data.** Depth changes the
   decode scan's trip count, so each distinct depth is one compiled
@@ -21,18 +23,40 @@ the TPU analogue of that story end-to-end:
   issue no MXU work. A tick with three widths in flight at one depth issues
   ONE decode launch, not three; warmup compiles ``len(depths)`` executables,
   not ``len(modes)``. A mode switch still only applies to *newly admitted*
-  requests — in-flight slots keep the width they started with, now simply a
-  different lane of the same launch.
+  requests — in-flight slots keep the width they started with.
+
+* **Executor seam: host-local or mesh-sharded, same engine.** All device
+  decisions go through an executor. ``LocalExecutor`` is the host-local
+  reference; ``MeshExecutor`` compiles the same per-depth executables SPMD
+  under a TP/DP mesh (``launch.mesh.make_serve_mesh``): params placed once
+  by ``sharding.param_specs`` under a ``serve_tp``/``serve_2d`` policy,
+  per-slot caches sharded by ``sharding.serve_cache_specs``, decode
+  activations constrained via ``sharding.decode_specs``, and tokens /
+  runtime-width ``active`` scalars broadcast as replicated operands. Slot
+  resets and prefill adoption stay device-side (donated, sharded in and
+  out) — no gathers on the admission path. Sharded decode generates
+  token-identical output to the local path (logits match to float tolerance
+  — collective reduction order moves the last bits) and re-traces nothing
+  after warmup.
+
+* **Prefill admission.** Prompts at least ``prefill_threshold`` tokens long
+  are consumed in ONE ``models.model.prefill(per_slot=True, slot=...,
+  n_slots=...)`` call (compiled per (prompt_len, depth), ``slot`` traced)
+  whose engine-layout cache is adopted into the slot device-side
+  (``adopt_cache_slot``) — instead of feeding the prompt token by token
+  through the decode path. Prompt-consume latency is tracked separately
+  (``prefill_s`` / ``prefill_prompt_tokens``).
 
 * **SLO-driven morph policy.** ``SLOPolicy`` picks the widest/deepest mode
   whose predicted step latency fits the current latency budget. The
-  prediction starts from ``core.neuroforge.analytical.estimate`` (the
-  paper's Eq. 4/10-style pre-deployment model) and is corrected online by
-  the controller's measured per-mode telemetry — analytical ordering,
-  measured magnitude.
+  prediction starts from ``core.neuroforge.analytical.estimate`` at the
+  executor's actual ``DesignPoint(dp, tp)`` (the paper's Eq. 4/10-style
+  pre-deployment model, multi-chip aware) and is corrected online by the
+  controller's measured per-mode telemetry — analytical ordering, measured
+  magnitude, sharded where the engine is sharded.
 
 Slot re-admission relies on position masking (attention) and explicit state
-zeroing (SSM) via ``reset_cache_slot``; both are jitted once per cache
+zeroing (SSM) via ``reset_cache_slots``; both are jitted once per cache
 structure, so sustained mixed traffic — including arbitrary width churn —
 triggers no compilation at all (``ctrl.trace_counter`` measures this).
 ``decode_launches`` vs ``per_mode_launch_equiv`` quantifies the win over the
@@ -41,6 +65,7 @@ old per-(depth, width) grouping.
 from __future__ import annotations
 
 import statistics
+import time
 from collections import deque
 from dataclasses import dataclass, field, replace
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
@@ -48,6 +73,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, MorphMode, ShapeCell
 from repro.core import elastic
@@ -55,7 +81,12 @@ from repro.core.morph import MorphController, make_serve_controller, policy_for_
 from repro.core.neuroforge.analytical import estimate
 from repro.core.neuroforge.hw import V5E, HardwareSpec
 from repro.core.neuroforge.space import DesignPoint
-from repro.models.model import init_decode_cache, reset_cache_slot
+from repro.models.model import (adopt_cache_slot, init_decode_cache, prefill,
+                                reset_cache_slots)
+from repro.parallel import sharding as SH
+
+
+SLO_CLASSES = ("interactive", "batch")
 
 
 # ---------------------------------------------------------------------------
@@ -71,6 +102,7 @@ class Request:
     prompt: Tuple[int, ...]
     max_new_tokens: int
     arrival_s: float = 0.0
+    slo_class: str = "batch"  # "interactive" admits ahead of "batch"
     # runtime state (engine-owned)
     generated: List[int] = field(default_factory=list)
     fed: int = 0  # tokens fed so far (prompt + generated)
@@ -92,8 +124,13 @@ class Request:
 def poisson_trace(n_requests: int, rate_per_s: float, *, seed: int = 0,
                   prompt_len: Tuple[int, int] = (1, 4),
                   new_tokens: Tuple[int, int] = (4, 12),
-                  vocab: int = 256) -> List[Request]:
-    """Poisson arrivals with uniform prompt/output lengths (open-loop trace)."""
+                  vocab: int = 256,
+                  interactive_frac: float = 0.0) -> List[Request]:
+    """Poisson arrivals with uniform prompt/output lengths (open-loop trace).
+
+    ``interactive_frac`` of the requests (chosen i.i.d.) carry the
+    ``interactive`` SLO class; the rest are ``batch``.
+    """
     rng = np.random.default_rng(seed)
     t = 0.0
     out = []
@@ -105,6 +142,8 @@ def poisson_trace(n_requests: int, rate_per_s: float, *, seed: int = 0,
             prompt=tuple(int(x) for x in rng.integers(1, vocab, plen)),
             max_new_tokens=int(rng.integers(new_tokens[0], new_tokens[1] + 1)),
             arrival_s=t,
+            slo_class=("interactive" if rng.random() < interactive_frac
+                       else "batch"),
         ))
     return out
 
@@ -117,29 +156,35 @@ def poisson_trace(n_requests: int, rate_per_s: float, *, seed: int = 0,
 class SLOPolicy:
     """Pick the widest mode whose predicted step latency fits the budget.
 
-    Prediction = analytical roofline estimate (``neuroforge.analytical``)
-    scaled by an online correction learned from the controller's per-mode
-    telemetry. Before any traffic the analytical model alone ranks the modes
-    (it is exact in *ordering*: narrower/shallower modes do strictly less
-    work); once a mode has ``min_samples`` measured steps its own p50 is
-    used directly, and the measured/analytical ratio of observed modes
-    corrects the still-unobserved ones.
+    Prediction = analytical roofline estimate (``neuroforge.analytical``) at
+    the serving deployment's actual parallel degrees (``DesignPoint(dp,
+    tp)`` — multi-chip latencies, not single-chip fiction) scaled by an
+    online correction learned from the controller's per-mode telemetry.
+    Before any traffic the analytical model alone ranks the modes (it is
+    exact in *ordering*: narrower/shallower modes do strictly less work);
+    once a mode has ``min_samples`` measured steps its own p50 is used
+    directly, and the measured/analytical ratio of observed modes corrects
+    the still-unobserved ones — under a mesh the measurements are of the
+    sharded executables, so the correction absorbs real collective costs the
+    estimate only approximates.
     """
 
     def __init__(self, cfg: ModelConfig, controller: MorphController, *,
                  batch_size: int, cache_capacity: int,
-                 hw: HardwareSpec = V5E, min_samples: int = 3):
+                 hw: HardwareSpec = V5E, min_samples: int = 3,
+                 dp: int = 1, tp: int = 1):
         self.cfg = cfg
         self.controller = controller
         self.min_samples = min_samples
         cell = ShapeCell("serve_step", seq_len=cache_capacity,
                          global_batch=batch_size, kind="decode")
-        pt = DesignPoint(dp=1, tp=1, microbatches=1, remat="none",
+        pt = DesignPoint(dp=dp, tp=tp, microbatches=1, remat="none",
                          param_dtype=cfg.param_dtype
                          if cfg.param_dtype in ("bfloat16", "float32") else "bfloat16",
                          moment_dtype="float32", grad_comm="allreduce",
                          kv_quant=cfg.kv_quant, attn_chunk=cfg.attn_chunk,
                          capacity_factor=cfg.capacity_factor, width=1.0)
+        self.design_point = pt
         self.analytical: Dict[str, float] = {}
         for m in controller.modes:
             # width-morph the config, then truncate to the mode's depth; the
@@ -165,6 +210,155 @@ class SLOPolicy:
     def choose(self, budget_s: float) -> MorphMode:
         return policy_for_budget(self.cfg, self.controller, budget_s,
                                  self.est_latency)
+
+
+# ---------------------------------------------------------------------------
+# executor seam — where device placement and compilation decisions live
+# ---------------------------------------------------------------------------
+
+
+class LocalExecutor:
+    """Host-local execution backend (single default device).
+
+    The engine delegates every device decision to its executor: parameter
+    placement, per-depth controller compilation, cache allocation, and the
+    jitted cache-side ops (batched slot reset, prefill, prefill adoption).
+    ``MeshExecutor`` overrides each with NamedSharding-annotated variants —
+    engine code never branches on mesh-ness.
+    """
+
+    mesh = None
+    policy = "local"
+    dp = 1
+    tp = 1
+
+    def bind(self, cfg: ModelConfig, batch_size: int,
+             cache_capacity: int) -> "LocalExecutor":
+        self._cfg = cfg
+        self._batch = batch_size
+        self._cap = cache_capacity
+        return self
+
+    # -- placement ----------------------------------------------------------
+
+    def place_params(self, params):
+        return params
+
+    def put(self, x):
+        """Small replicated operand (tokens / active widths / reset masks)."""
+        return jnp.asarray(x)
+
+    # -- compiled ops -------------------------------------------------------
+
+    def make_controller(self, params, cfg: ModelConfig, modes) -> MorphController:
+        return make_serve_controller(params, cfg, modes)
+
+    def init_cache(self):
+        return init_decode_cache(self._cfg, self._batch, self._cap,
+                                 per_slot=True)
+
+    def reset_fn(self):
+        # donate the cache: a burst reset must be an in-place write, not a
+        # full cache copy, on the admission hot path
+        return jax.jit(reset_cache_slots, donate_argnums=(0,))
+
+    def adopt_fn(self):
+        return jax.jit(adopt_cache_slot, donate_argnums=(0,))
+
+    def prefill_fn(self, prompt_len: int, depth: int):
+        """Compiled whole-prompt consume: (params, (1, L) tokens, slot) ->
+        (last-token logits, engine-layout cache with only ``slot`` live)."""
+        cfg, cap, n_slots = self._cfg, self._cap, self._batch
+
+        def pf(params, tokens, slot):
+            return prefill(params, {"tokens": tokens}, cfg,
+                           cache_extra=cap - prompt_len, per_slot=True,
+                           slot=slot, n_slots=n_slots, depth=depth)
+
+        return jax.jit(pf)
+
+
+class MeshExecutor(LocalExecutor):
+    """SPMD execution backend: the same ops, compiled under a TP/DP mesh.
+
+    ``policy`` defaults to ``sharding.serve_policy(cfg, tp)`` (weight
+    footprint decides ``serve_tp`` vs ``serve_2d``). Params are placed once
+    (``param_specs``), per-slot caches live sharded (``serve_cache_specs``)
+    and are donated through step/reset/adopt so slot churn never gathers,
+    and decode activations are pinned by ``decode_specs`` inside the
+    compiled step.
+    """
+
+    def __init__(self, mesh, policy: Optional[str] = None):
+        self.mesh = mesh
+        self._policy_arg = policy
+        self.tp = dict(mesh.shape).get("model", 1)
+        self.dp = 1
+        for a in SH.data_axes(mesh):
+            self.dp *= mesh.shape[a]
+        self._rep = NamedSharding(mesh, P())
+
+    def bind(self, cfg: ModelConfig, batch_size: int,
+             cache_capacity: int) -> "MeshExecutor":
+        super().bind(cfg, batch_size, cache_capacity)
+        self.policy = self._policy_arg or SH.serve_policy(cfg, self.tp)
+        cstruct = jax.eval_shape(
+            lambda: init_decode_cache(cfg, batch_size, cache_capacity,
+                                      per_slot=True))
+        cspecs = SH.serve_cache_specs(cstruct, cfg, self.mesh, self.policy)
+        self._cache_sh = SH.shardings_for(cspecs, self.mesh)
+        self._aspecs = SH.decode_specs(cfg, self.mesh, self.policy, batch_size)
+        self._param_sh = None
+        return self
+
+    def place_params(self, params):
+        self._param_sh = SH.shardings_for(
+            SH.param_specs(params, self._cfg, self.mesh, self.policy),
+            self.mesh)
+        return jax.device_put(params, self._param_sh)
+
+    def put(self, x):
+        return jax.device_put(jnp.asarray(x), self._rep)
+
+    def make_controller(self, params, cfg: ModelConfig, modes) -> MorphController:
+        return make_serve_controller(
+            params, cfg, modes, mesh=self.mesh, policy=self.policy,
+            param_shardings=self._param_sh, cache_shardings=self._cache_sh,
+            activation_specs=self._aspecs)
+
+    def init_cache(self):
+        cfg, batch, cap = self._cfg, self._batch, self._cap
+        # born sharded: no host round-trip for multi-GB caches
+        return jax.jit(
+            lambda: init_decode_cache(cfg, batch, cap, per_slot=True),
+            out_shardings=self._cache_sh)()
+
+    def reset_fn(self):
+        return jax.jit(reset_cache_slots,
+                       in_shardings=(self._cache_sh, self._rep),
+                       out_shardings=self._cache_sh, donate_argnums=(0,))
+
+    def adopt_fn(self):
+        return jax.jit(adopt_cache_slot,
+                       in_shardings=(self._cache_sh, self._cache_sh, self._rep),
+                       out_shardings=self._cache_sh, donate_argnums=(0,))
+
+    def prefill_fn(self, prompt_len: int, depth: int):
+        cfg, cap, n_slots = self._cfg, self._cap, self._batch
+        mesh = self.mesh
+        # the prompt pass runs batch-1: same by-head/channel pinning as the
+        # decode step, but never sharded over the batch dim (batch=None)
+        aspecs = SH.decode_specs(cfg, mesh, self.policy)
+
+        def pf(params, tokens, slot):
+            with SH.activation_sharding(mesh, aspecs):
+                return prefill(params, {"tokens": tokens}, cfg,
+                               cache_extra=cap - prompt_len, per_slot=True,
+                               slot=slot, n_slots=n_slots, depth=depth)
+
+        return jax.jit(pf,
+                       in_shardings=(self._param_sh, self._rep, self._rep),
+                       out_shardings=(self._rep, self._cache_sh))
 
 
 # ---------------------------------------------------------------------------
@@ -194,38 +388,54 @@ class ServingEngine:
     """Continuous-batching decode engine over a per-depth MorphController.
 
     One engine tick = admit queued requests into the admission mode's depth
-    group, then run ONE decode launch per depth group with active slots —
-    slots of different widths ride the same launch via per-slot active-dim
-    operands. The host round-trip per tick (argmax + slot bookkeeping) is
-    the simplicity tradeoff of this reference engine; the device work itself
-    is the same per-depth jitted executable every tick.
+    group (interactive class first; long prompts via one prefill launch,
+    short ones via one batched slot-reset launch), then run ONE decode
+    launch per depth group with active slots — slots of different widths
+    ride the same launch via per-slot active-dim operands. The host
+    round-trip per tick (argmax + slot bookkeeping) is the simplicity
+    tradeoff of this reference engine; the device work itself is the same
+    per-depth executable every tick, host-local or mesh-sharded depending on
+    the executor.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, batch_size: int = 4,
                  cache_capacity: int = 64,
                  modes: Optional[Tuple[MorphMode, ...]] = None,
-                 controller: Optional[MorphController] = None):
-        self.params = params
+                 controller: Optional[MorphController] = None,
+                 executor: Optional[LocalExecutor] = None,
+                 prefill_threshold: int = 8):
         self.cfg = cfg
         self.batch_size = batch_size
         self.cache_capacity = cache_capacity
-        self.ctrl = controller or make_serve_controller(params, cfg, modes)
+        self.executor = (executor or LocalExecutor()).bind(
+            cfg, batch_size, cache_capacity)
+        self.params = self.executor.place_params(params)
+        self.ctrl = controller or self.executor.make_controller(
+            self.params, cfg, modes)
         self._mode_by_dw = {(m.depth, m.width): m for m in self.ctrl.modes}
         self.groups: Dict[int, _DepthGroup] = {}
         for d in sorted({m.depth for m in self.ctrl.modes}):
-            cache = init_decode_cache(cfg, batch_size, cache_capacity,
-                                      per_slot=True)
-            self.groups[d] = _DepthGroup(d, cache, [None] * batch_size,
+            self.groups[d] = _DepthGroup(d, self.executor.init_cache(),
+                                         [None] * batch_size,
                                          [1.0] * batch_size)
-        # donate the cache: slot reset must be an in-place write, not a
-        # full cache copy, on the admission hot path
-        self._reset = jax.jit(reset_cache_slot, donate_argnums=(0,))
-        self.queue: Deque[Request] = deque()
+        self._reset = self.executor.reset_fn()
+        self._adopt = self.executor.adopt_fn()
+        # compiled prefills, keyed by (prompt_len, depth); ``slot`` is traced
+        self._prefills: Dict[Tuple[int, int], Callable] = {}
+        self.prefill_threshold = prefill_threshold
+        self.prefills = 0
+        self.prefill_s = 0.0
+        self.prefill_prompt_tokens = 0
+        # two-level priority queue: interactive requests admit before batch
+        self._queues: Dict[str, Deque[Request]] = {c: deque()
+                                                   for c in SLO_CLASSES}
         self.completed: List[Request] = []
         self.admission_mode: MorphMode = self.ctrl.modes[-1]
-        # (step#, from, to); bounded like the controller's switch_log so an
-        # oscillating SLO budget can't grow it forever
-        self.admission_switch_log: Deque[Tuple[int, str, str]] = deque(maxlen=4096)
+        # (step#, from, to, queued interactive, queued batch) per switch;
+        # bounded like the controller's switch_log so an oscillating SLO
+        # budget can't grow it forever
+        self.admission_switch_log: Deque[Tuple[int, str, str, int, int]] = \
+            deque(maxlen=4096)
         self.step_count = 0
         self.compiles_after_warmup: Optional[int] = None
         # launch accounting: actual launches (per depth group) vs what the
@@ -245,50 +455,66 @@ class ServingEngine:
         if active is None:
             if len(self._active_cache) > 1024:  # oscillation backstop
                 self._active_cache.clear()
-            active = elastic.active_widths_batch(self.cfg, widths)
+            active = jax.tree_util.tree_map(
+                self.executor.put, elastic.active_widths_batch(self.cfg, widths))
             self._active_cache[key] = active
         return active
 
     # -- lifecycle ----------------------------------------------------------
 
     def warmup(self) -> None:
-        """Compile every depth's step + the slot-reset, then rewind state.
+        """Compile every depth's step + the batched slot-reset, then rewind.
 
         After this returns, ``self.ctrl.stats['compiles']`` is frozen at
         ``len(depths)`` (NOT ``len(modes)``): traffic with arbitrary width
         and depth churn re-dispatches these executables.
         """
         self.ctrl.warmup()
-        tok = jnp.zeros((self.batch_size, 1), jnp.int32)
-        active = elastic.active_widths_batch(self.cfg, [1.0] * self.batch_size)
+        tok = self.executor.put(np.zeros((self.batch_size, 1), np.int32))
+        active = self._active_for([1.0] * self.batch_size)
+        mask = self.executor.put(np.ones((self.batch_size,), bool))
         for d, g in self.groups.items():
             step = self.ctrl.step_for(self._any_mode_at(d))
             _, cache = step(self.params, g.cache, tok, active)
-            cache = self._reset(cache, jnp.int32(0))
+            cache = self._reset(cache, mask)
             jax.block_until_ready(cache)
             # rewind: warmup wrote garbage at pos 0 of every slot
-            g.cache = init_decode_cache(self.cfg, self.batch_size,
-                                        self.cache_capacity, per_slot=True)
+            g.cache = self.executor.init_cache()
         self.compiles_after_warmup = self.ctrl.stats["compiles"]
 
     def _any_mode_at(self, depth: int) -> MorphMode:
         return next(m for m in self.ctrl.modes if m.depth == depth)
 
+    @property
+    def queue(self) -> Tuple[Request, ...]:
+        """Waiting requests in admission order (interactive before batch)."""
+        return tuple(self._queues["interactive"]) + tuple(self._queues["batch"])
+
     def submit(self, req: Request) -> None:
         if not req.prompt:
             raise ValueError(f"request {req.rid} has an empty prompt")
+        if req.slo_class not in SLO_CLASSES:
+            raise ValueError(f"request {req.rid}: unknown slo_class "
+                             f"{req.slo_class!r} (want one of {SLO_CLASSES})")
         # the last generated token is never fed back, so the highest cache
         # position written is prompt + new - 2
         need = len(req.prompt) + req.max_new_tokens - 1
         if need > self.cache_capacity:
             raise ValueError(f"request {req.rid} needs {need} cache slots, "
                              f"capacity is {self.cache_capacity}")
-        self.queue.append(req)
+        self._queues[req.slo_class].append(req)
+
+    def _pop_next(self) -> Optional[Request]:
+        for cls in SLO_CLASSES:
+            if self._queues[cls]:
+                return self._queues[cls].popleft()
+        return None
 
     def set_admission_mode(self, mode: MorphMode) -> None:
         if mode.name != self.admission_mode.name:
             self.admission_switch_log.append(
-                (self.step_count, self.admission_mode.name, mode.name))
+                (self.step_count, self.admission_mode.name, mode.name,
+                 len(self._queues["interactive"]), len(self._queues["batch"])))
             # the policy decision is the real "mode switch" — route it
             # through the controller so its switch stats/log record it
             # (group-drain dispatches in step() deliberately don't)
@@ -297,21 +523,72 @@ class ServingEngine:
 
     # -- one tick -----------------------------------------------------------
 
-    def _admit(self) -> None:
+    def _use_prefill(self, req: Request) -> bool:
+        # enc-dec / frontend archs need non-token inputs at prompt time; the
+        # engine only carries token prompts, so they stay on the token feed
+        return (len(req.prompt) >= self.prefill_threshold
+                and not self.cfg.is_encdec and not self.cfg.frontend)
+
+    def _admit(self, now_s: float = 0.0) -> None:
         g = self.groups[self.admission_mode.depth]
+        mask = np.zeros(self.batch_size, bool)
+        prefills = []
         for slot in g.free_slots():
-            if not self.queue:
+            req = self._pop_next()
+            if req is None:
                 break
-            req = self.queue.popleft()
-            g.cache = self._reset(g.cache, jnp.int32(slot))
             g.slots[slot] = req
             g.widths[slot] = self.admission_mode.width
             req.mode_name = self.admission_mode.name
             req.admitted_step = self.step_count
+            if self._use_prefill(req):
+                prefills.append((slot, req))
+            else:
+                mask[slot] = True
+        if mask.any():
+            # ONE batched reset per tick, however large the admission burst
+            g.cache = self._reset(g.cache, self.executor.put(mask))
+        for slot, req in prefills:
+            self._admit_prefill(g, slot, req, now_s)
+
+    def _admit_prefill(self, g: _DepthGroup, slot: int, req: Request,
+                       now_s: float) -> None:
+        """Consume the whole prompt in one compiled prefill + adoption."""
+        plen = len(req.prompt)
+        key = (plen, g.depth)
+        fn = self._prefills.get(key)
+        if fn is None:
+            # backstop for unbounded prompt-length churn (cf. _active_cache):
+            # a long-lived engine must not retain one executable per distinct
+            # prompt length forever. Length bucketing would cap compiles at
+            # O(log capacity) but needs padding-safe prefill (SSM state sees
+            # every padded token), so the simple bound stands in for now.
+            if len(self._prefills) > 256:
+                self._prefills.clear()
+            fn = self.executor.prefill_fn(plen, g.depth)
+            self._prefills[key] = fn
+        t0 = time.perf_counter()
+        toks = self.executor.put(np.asarray([req.prompt], np.int32))
+        slot_op = self.executor.put(np.int32(slot))
+        logits, pre = fn(self.params, toks, slot_op)
+        g.cache = self._adopt(g.cache, pre, slot_op)
+        # the prefill's last-position logits yield the first generated token
+        # (same contract as the decode step that eats the last prompt token)
+        nxt = int(np.asarray(jnp.argmax(logits[0, 0, : self.cfg.vocab_size])))
+        jax.block_until_ready(g.cache)
+        self.prefill_s += time.perf_counter() - t0
+        self.prefills += 1
+        self.prefill_prompt_tokens += plen
+        req.fed = plen
+        req.generated.append(nxt)
+        if req.done:
+            req.finished_s = now_s
+            self.completed.append(req)
+            g.slots[slot] = None
 
     def step(self, now_s: float = 0.0) -> float:
         """One engine tick. Returns device wall-time spent (seconds)."""
-        self._admit()
+        self._admit(now_s)
         spent = 0.0
         ticked = False
         for g in self.groups.values():
@@ -328,7 +605,7 @@ class ServingEngine:
             w_max = max(g.widths[i] for i in active_ix)
             mode = self._mode_by_dw[(g.depth, w_max)]
             logits, g.cache = self.ctrl.timed_step(
-                self.params, g.cache, jnp.asarray(toks), active,
+                self.params, g.cache, self.executor.put(toks), active,
                 mode=mode, tokens=len(active_ix))
             spent += self.ctrl.last_step_s
             self.decode_launches += 1
@@ -396,6 +673,9 @@ class ServingEngine:
         launches0 = self.decode_launches
         permode0 = self.per_mode_launch_equiv
         ticks0 = self.ticks_with_work
+        prefills0 = self.prefills
+        prefill_s0 = self.prefill_s
+        prefill_toks0 = self.prefill_prompt_tokens
         while (pending or self.queue or self.n_active) \
                 and self.step_count - steps0 < max_steps:
             while pending and pending[0].arrival_s <= clock:
@@ -411,6 +691,9 @@ class ServingEngine:
         total_generated = self._generated_total() - generated0
         launches = self.decode_launches - launches0
         ticks = self.ticks_with_work - ticks0
+        prefills = self.prefills - prefills0
+        prefill_s = self.prefill_s - prefill_s0
+        prefill_toks = self.prefill_prompt_tokens - prefill_toks0
         return {
             "completed": len(self.completed) - completed0,
             "generated_tokens": total_generated,
@@ -425,4 +708,9 @@ class ServingEngine:
             "decode_launches": launches,
             "per_mode_launch_equiv": self.per_mode_launch_equiv - permode0,
             "launches_per_tick": launches / ticks if ticks else 0.0,
+            # prefill admission: whole-prompt consumes and their latency
+            "prefills": prefills,
+            "prefill_prompt_tokens": prefill_toks,
+            "prompt_consume_ms_per_token":
+                prefill_s / prefill_toks * 1e3 if prefill_toks else 0.0,
         }

@@ -1,0 +1,44 @@
+"""XLA_FLAGS helpers that must run before jax initializes its backend.
+
+``--xla_force_host_platform_device_count`` is only read when the CPU backend
+initializes, so mesh-capable CLI entry points (``launch.serve``,
+``benchmarks.serve_continuous``, ``benchmarks.width_morph``) call these from
+an import preamble. This module is deliberately free of jax imports (and
+``repro/__init__`` is empty), so the preamble cannot trigger backend
+initialization itself.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
+
+
+def force_host_device_count(n: int) -> None:
+    """Ensure XLA's CPU host platform exposes >= ``n`` devices.
+
+    No-op when any ``xla_force_host_platform_device_count`` is already set
+    (an operator's explicit choice wins) or when ``n`` <= 1. Real
+    accelerator backends ignore the flag entirely.
+    """
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = \
+        f"{flags} --xla_force_host_platform_device_count={n}".strip()
+
+
+def mesh_arg(argv: Sequence[str]) -> Optional[str]:
+    """The value of ``--mesh VALUE`` / ``--mesh=VALUE`` in ``argv``, if any.
+
+    Returns None for an absent flag AND for a dangling ``--mesh`` with no
+    value — the caller's argparse produces the proper error message for the
+    latter; this sniff must never crash before argparse runs.
+    """
+    for i, a in enumerate(argv):
+        if a == "--mesh":
+            return argv[i + 1] if i + 1 < len(argv) else None
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+    return None

@@ -285,3 +285,122 @@ def test_cost_report_threads_hw_spec():
     assert r_slow.latency_s > r_fast.latency_s
     for r in (r_fast, r_slow):
         assert 0 < r.roofline_fraction <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# batched slot resets, priority admission, prefill admission
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-370m"])
+def test_batched_reset_matches_sequential(arch):
+    """reset_cache_slots(mask) must equal chained reset_cache_slot calls."""
+    from repro.models import reset_cache_slots
+
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cache = init_decode_cache(cfg, 4, 16, per_slot=True)
+    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+    for t in [3, 9, 5]:  # occupy every slot with some state
+        _, cache = step(params, cache, jnp.full((4, 1), t, jnp.int32))
+
+    seq = cache
+    for s in (0, 2):
+        seq = reset_cache_slot(seq, jnp.int32(s))
+    batched = reset_cache_slots(cache, jnp.array([True, False, True, False]))
+    for a, b in zip(jax.tree_util.tree_leaves(seq),
+                    jax.tree_util.tree_leaves(batched)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_interactive_requests_admit_before_batch():
+    """Two-level queue: interactive requests jump ahead of earlier-submitted
+    batch requests; FIFO order is preserved within a class."""
+    cfg, eng = _engine(batch=2)
+    for rid in range(4):
+        eng.submit(Request(rid=rid, prompt=(1 + rid,), max_new_tokens=2,
+                           slo_class="batch"))
+    eng.submit(Request(rid=10, prompt=(7,), max_new_tokens=2,
+                       slo_class="interactive"))
+    eng.submit(Request(rid=11, prompt=(8,), max_new_tokens=2,
+                       slo_class="interactive"))
+    assert [r.rid for r in eng.queue] == [10, 11, 0, 1, 2, 3]
+    eng.step()  # 2 slots -> both interactive requests admitted first
+    admitted = sorted(r.rid for g in eng.groups.values()
+                      for r in g.slots if r is not None)
+    assert admitted == [10, 11]
+    while eng.queue or eng.n_active:
+        eng.step()
+    assert len(eng.completed) == 6
+    # interactive finished no later than any batch request started
+    by_rid = {r.rid: r for r in eng.completed}
+    assert by_rid[10].admitted_step < by_rid[0].admitted_step
+
+
+def test_unknown_slo_class_rejected():
+    cfg, eng = _engine(batch=2)
+    with pytest.raises(ValueError, match="slo_class"):
+        eng.submit(Request(rid=0, prompt=(1,), max_new_tokens=2,
+                           slo_class="bulk"))
+
+
+def test_admission_switch_log_records_class_mix():
+    cfg, eng = _engine(batch=2)
+    eng.submit(Request(rid=0, prompt=(1,), max_new_tokens=2,
+                       slo_class="interactive"))
+    eng.submit(Request(rid=1, prompt=(2,), max_new_tokens=2, slo_class="batch"))
+    eng.submit(Request(rid=2, prompt=(3,), max_new_tokens=2, slo_class="batch"))
+    narrow = eng.ctrl.modes[0]
+    eng.set_admission_mode(narrow)
+    step, frm, to, n_int, n_batch = eng.admission_switch_log[-1]
+    assert (frm, to) == (eng.ctrl.modes[-1].name, narrow.name)
+    assert (n_int, n_batch) == (1, 2)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-370m"])
+def test_prefill_admission_matches_token_feed(arch):
+    """Long prompts admitted via one prefill launch generate exactly the
+    same tokens (and token accounting) as token-by-token prompt feeding."""
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    specs = [(5, 4), (8, 3), (2, 5), (6, 1)]  # (prompt_len, new_tokens)
+
+    def run_engine(threshold):
+        eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32,
+                            prefill_threshold=threshold)
+        eng.warmup()
+        for rid, (plen, n_new) in enumerate(specs):
+            eng.submit(Request(rid=rid, prompt=tuple(range(2, 2 + plen)),
+                               max_new_tokens=n_new))
+        while eng.queue or eng.n_active:
+            eng.step()
+        return eng
+
+    fed = run_engine(threshold=100)  # token-by-token baseline
+    pre = run_engine(threshold=5)  # prompts >= 5 tokens prefill
+    assert fed.prefills == 0
+    assert pre.prefills == 3  # 5, 8 and 6-token prompts
+    assert pre.prefill_prompt_tokens == 5 + 8 + 6
+    assert pre.prefill_s > 0
+    a = {r.rid: tuple(r.generated) for r in fed.completed}
+    b = {r.rid: tuple(r.generated) for r in pre.completed}
+    assert a == b
+    for rid, (plen, n_new) in enumerate(specs):
+        r = {x.rid: x for x in pre.completed}[rid]
+        assert len(r.generated) == n_new
+        assert r.fed == plen + n_new - 1  # same accounting as the fed path
+
+
+def test_prefill_admission_completes_single_token_request():
+    """max_new_tokens=1 with a long prompt: the prefill itself yields the
+    only generated token and the slot frees immediately."""
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32,
+                        prefill_threshold=4)
+    eng.warmup()
+    eng.submit(Request(rid=0, prompt=(3, 7, 11, 2, 9), max_new_tokens=1))
+    eng.step()
+    assert len(eng.completed) == 1 and eng.n_active == 0
+    assert len(eng.completed[0].generated) == 1
+    assert eng.prefills == 1
