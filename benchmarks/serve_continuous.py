@@ -10,6 +10,9 @@ Phases:
      launches; reports actual launches vs the per-(depth, width) baseline
   5. prefill admission -> long prompts are consumed by one prefill launch
      each; reports prompt-consume latency per token
+  6. speculative      -> a fresh engine drafts at the shallow exit and
+     verifies K+1 positions per launch; token-identical to phase-style
+     plain greedy serving of the same trace, with acceptance-rate telemetry
 
 Reports sustained tokens/s per phase, mode switch counts, decode launches
 per tick, and verifies the zero-recompiles-after-warmup invariant. Smoke-
@@ -39,8 +42,9 @@ from repro.configs import smoke_config
 from repro.core import elastic
 from repro.launch.mesh import make_serve_mesh
 from repro.models.model import init_params
-from repro.runtime.serving import (MeshExecutor, ServingEngine, SLOPolicy,
-                                   poisson_trace)
+from repro.runtime.serving import (MeshExecutor, Request, ServingEngine,
+                                   SLOPolicy, poisson_trace)
+from repro.runtime.speculative import SpecConfig
 
 
 def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
@@ -155,6 +159,49 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
             round(summary["prompt_consume_ms_per_token"], 3),
         "sustained_tokens_per_s": round(summary["sustained_tokens_per_s"], 1),
         "completed": summary["completed"],
+    })
+
+    # speculative phase: a fresh engine pair over one trace — plain greedy
+    # vs draft-at-shallow-exit + one-verify-launch. Outputs must be token-
+    # identical; acceptance-rate telemetry is the new reporting surface.
+    # (Random-init smoke weights draft poorly — benchmarks/spec_decode.py
+    # measures the trained-acceptance story — but the mechanism, telemetry,
+    # and identity claims hold at any acceptance rate.)
+    spec_trace = poisson_trace(max(6, n_requests // 2), rate_per_s=rate,
+                               seed=37, prompt_len=(1, 3), new_tokens=(4, 8),
+                               vocab=cfg.vocab_size)
+
+    def run_spec(speculative):
+        eng = ServingEngine(params, cfg, batch_size=batch,
+                            cache_capacity=capacity, prefill_threshold=8,
+                            speculative=speculative)
+        eng.warmup()
+        for r in spec_trace:
+            eng.submit(Request(rid=r.rid, prompt=r.prompt,
+                               max_new_tokens=r.max_new_tokens))
+        busy = 0.0
+        while eng.queue or eng.n_active:
+            busy += eng.step()
+        assert eng.ctrl.stats["compiles"] == eng.compiles_after_warmup
+        return eng, busy
+
+    plain_eng, plain_busy = run_spec(None)
+    spec_eng, spec_busy = run_spec(SpecConfig(ks=(3,)))
+    plain_out = {r.rid: tuple(r.generated) for r in plain_eng.completed}
+    spec_out = {r.rid: tuple(r.generated) for r in spec_eng.completed}
+    assert spec_out == plain_out, \
+        "speculative greedy serving must be token-identical to plain serving"
+    assert spec_eng.spec_verify_launches > 0, \
+        "speculative phase must exercise the verify path"
+    emit(f"serve_continuous/{cfg.name}/speculative", 0.0, {
+        "token_identical": True,
+        "spec_verify_launches": spec_eng.spec_verify_launches,
+        "spec_generated_tokens": spec_eng.spec_generated_tokens,
+        "plain_decode_launches": plain_eng.decode_launches,
+        "speedup_vs_plain": round(plain_busy / spec_busy, 2)
+        if spec_busy > 0 else 0.0,
+        "acceptance": spec_eng.spec_telemetry_summary(),
+        "fallbacks": len(spec_eng.spec_fallback_log),
     })
 
     n_switches = len(slo_switches)

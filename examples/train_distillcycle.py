@@ -52,12 +52,17 @@ def main():
     cyc = DistillCycle(cfg, ocfg, dc, dcfg=dcfg)
     params, _ = cyc.run(state["params"], state["opt"])
 
-    # phase 3: per-path report (paper Figs. 11/12 table)
-    ev = cyc.eval_modes(params)
-    print(f"{'mode':10s} {'eval CE':>8s} {'active FLOPs':>13s}")
+    # phase 3: per-path report (paper Figs. 11/12 table). "agree@1" is each
+    # subnet's top-1 agreement with the full model — the offline predictor of
+    # the acceptance rate that path would sustain drafting for speculative
+    # decoding (runtime.speculative).
+    ev = cyc.eval_modes(params, with_agreement=True)
+    print(f"{'mode':10s} {'eval CE':>8s} {'active FLOPs':>13s} {'agree@1':>8s}")
     for mode in cyc.schedule:
         frac = elastic.flops_fraction(cfg, mode)
-        print(f"{mode.name:10s} {ev[mode.name]:8.3f} {frac * 100:12.1f}%")
+        e = ev[mode.name]
+        print(f"{mode.name:10s} {e['ce']:8.3f} {frac * 100:12.1f}% "
+              f"{e['agreement'] * 100:7.1f}%")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,9 @@
 #   scripts/ci.sh --mesh-smoke   # additionally run the sharded-serving
 #                                # shard (8-device CPU host platform) +
 #                                # the --mesh benchmark axes
+#   scripts/ci.sh --spec-smoke   # additionally run the speculative-decoding
+#                                # tests + the spec_decode benchmark (tiny
+#                                # DistillCycle train -> acceptance > 0)
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,13 +24,31 @@ SEED_ERRORS=1
 TIMEOUT="${CI_TIMEOUT:-1800}"
 BENCH_SMOKE=0
 MESH_SMOKE=0
+SPEC_SMOKE=0
 for arg in "$@"; do
     case "$arg" in
         --bench-smoke) BENCH_SMOKE=1 ;;
         --mesh-smoke) MESH_SMOKE=1 ;;
+        --spec-smoke) SPEC_SMOKE=1 ;;
         *) echo "ci.sh: unknown argument '$arg'" >&2; exit 2 ;;
     esac
 done
+
+if [ "$SPEC_SMOKE" -eq 1 ]; then
+    echo "CI: spec-smoke shard (speculative decoding)"
+    SPEC_TIMEOUT="${CI_SPEC_TIMEOUT:-900}"
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$SPEC_TIMEOUT" \
+        python -m pytest -q tests/test_speculative.py; then
+        echo "CI: FAIL (speculative tests)"
+        exit 1
+    fi
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$SPEC_TIMEOUT" \
+        python -c "from benchmarks import spec_decode; spec_decode.run(n_requests=8, train_steps=8, ks=(2,))"; then
+        echo "CI: FAIL (spec_decode bench-smoke)"
+        exit 1
+    fi
+    echo "CI: spec-smoke OK"
+fi
 
 if [ "$MESH_SMOKE" -eq 1 ]; then
     echo "CI: mesh-smoke shard (8-device CPU host platform)"

@@ -204,11 +204,33 @@ class DistillCycle:
         return params, opt
 
     # -- evaluation ----------------------------------------------------------
-    def eval_modes(self, params, n_batches: int = 4, seed_offset: int = 10_000):
-        """Eval CE for every trained path (paper Figs. 11/12 accuracy axis)."""
+    def eval_modes(self, params, n_batches: int = 4, seed_offset: int = 10_000,
+                   with_agreement: bool = False):
+        """Eval every trained path (paper Figs. 11/12 accuracy axis).
+
+        Default: ``{mode name: eval CE}``. With ``with_agreement=True`` each
+        entry becomes ``{"ce": ..., "agreement": ...}`` where ``agreement``
+        is the subnet's top-1 match rate against the full model on the same
+        batches — the *offline predictor of speculative-draft acceptance*: a
+        greedy verifier accepts a drafted token exactly when draft and full
+        model argmax agree, so a path's agreement rate is the acceptance
+        rate its exit would sustain as a draft model (``runtime.speculative``).
+        """
         out = {}
+        v = self.cfg.vocab_size
+        full_top1 = []  # per-batch full-model argmax, computed ONCE
+        if with_agreement:
+            full_mode = MorphMode(depth=self.cfg.n_groups, width=1.0)
+            for i in range(n_batches):
+                batch = make_batch(self.cfg, self.dc, seed_offset + i)
+                fouts, _ = elastic.morph_forward(params, batch, self.cfg,
+                                                 full_mode)
+                fl = fouts["final"]
+                if self.cfg.frontend == "vision_stub":
+                    fl = fl[:, self.cfg.frontend_seq:]
+                full_top1.append(jnp.argmax(fl[..., :v], -1))
         for mode in self.schedule:
-            tot = 0.0
+            tot, agree, n_tok = 0.0, 0, 0
             for i in range(n_batches):
                 batch = make_batch(self.cfg, self.dc, seed_offset + i)
                 outs, _ = elastic.morph_forward(params, batch, self.cfg, mode)
@@ -216,5 +238,13 @@ class DistillCycle:
                 if self.cfg.frontend == "vision_stub":
                     lg = lg[:, self.cfg.frontend_seq:]
                 tot += float(cross_entropy(lg, batch["targets"], self.cfg))
-            out[mode.name] = tot / n_batches
+                if with_agreement:
+                    m = jnp.argmax(lg[..., :v], -1) == full_top1[i]
+                    agree += int(jnp.sum(m))
+                    n_tok += int(m.size)
+            ce = tot / n_batches
+            if with_agreement:
+                out[mode.name] = {"ce": ce, "agreement": agree / max(n_tok, 1)}
+            else:
+                out[mode.name] = ce
         return out

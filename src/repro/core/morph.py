@@ -116,6 +116,9 @@ class MorphController:
         self._factory = step_factory
         self._compile_key = compile_key
         self._compiled: Dict[Hashable, Callable] = {}
+        # auxiliary executables (e.g. speculative draft/verify steps) share
+        # the compile cache, compile counter and warmup with the mode table
+        self._aux_factories: Dict[Hashable, Callable[[], Callable]] = {}
         self.stats = {"compiles": 0, "dispatches": 0, "switches": 0}
         self.telemetry: Dict[str, ModeTelemetry] = {m.name: ModeTelemetry()
                                                    for m in self.modes}
@@ -146,11 +149,35 @@ class MorphController:
             self.stats["compiles"] += 1
         return fn
 
+    def register_aux(self, key: Hashable, factory: Callable[[], Callable]) -> None:
+        """Register an auxiliary executable (compiled lazily / at warmup).
+
+        Used by the speculative-decoding wiring: one draft executable per
+        (draft_depth, K) and one verify executable per (depth, K), keyed by
+        tuples disjoint from the per-depth decode keys. Registering the same
+        key twice is an error — keys name executables, not variants.
+        """
+        if key in self._aux_factories or key in self._compiled:
+            raise KeyError(f"aux executable {key!r} already registered")
+        self._aux_factories[key] = factory
+
+    def aux_step(self, key: Hashable) -> Callable:
+        """The compiled auxiliary executable for ``key`` (compiling it on
+        first use, counted in ``stats['compiles']`` like any mode step)."""
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = self._aux_factories[key]()
+            self._compiled[key] = fn
+            self.stats["compiles"] += 1
+        return fn
+
     def warmup(self) -> None:
         """Pre-compile every distinct executable (the deploy-time 'single
         bitstream'); modes sharing a compile key share one compile."""
         for m in self.modes:
             self._get(m)
+        for key in self._aux_factories:
+            self.aux_step(key)
 
     def __call__(self, *args, **kw):
         self.stats["dispatches"] += 1
@@ -190,7 +217,8 @@ def make_serve_controller(params, cfg: ModelConfig,
                           modes: Optional[Tuple[MorphMode, ...]] = None, *,
                           mesh=None, policy: str = "serve_tp",
                           param_shardings=None, cache_shardings=None,
-                          activation_specs=None) -> MorphController:
+                          activation_specs=None, verify_activation_specs=None,
+                          speculative=None) -> MorphController:
     """Serving controller: ONE jitted decode executable per *depth*.
 
     Each executable's signature is ``step(params, cache, tokens, active)``:
@@ -210,6 +238,20 @@ def make_serve_controller(params, cfg: ModelConfig,
     activations are constrained inside the step via ``activation_specs``
     (``sharding.decode_specs``). ``compile_key`` is unchanged — one sharded
     executable per depth, width still a runtime operand.
+
+    ``speculative`` (a ``runtime.speculative.SpecConfig``) additionally
+    registers the self-speculative executables: for every serving depth with
+    a shallower exit available, ONE draft executable per (draft_depth, K)
+    — shared by every serving depth drafting at that exit — and ONE fused
+    verify+accept+commit executable per (depth, K). Their compile keys live
+    in the same table as the per-depth decode keys, so ``stats['compiles']``
+    and the shared ``trace_counter`` measure the whole serving surface:
+    after warmup, arbitrary (draft_depth, K) switching, greedy/sampled
+    temperature changes, and acceptance churn re-trace nothing. Under a
+    mesh the draft/verify executables compile SPMD with the same placement
+    as the decode steps (tokens / keys / temperature replicated; the verify
+    cache donated and sharded in and out; the draft cache NOT donated — its
+    in-scan updates are discarded to keep the committed state rollback-safe).
     """
     trace_counter = {"n": 0}
     if mesh is not None:
@@ -247,6 +289,75 @@ def make_serve_controller(params, cfg: ModelConfig,
 
     ctrl = MorphController(cfg, factory, modes, compile_key=lambda m: m.depth)
     ctrl.trace_counter = trace_counter
+    ctrl.spec_plan = {}
+
+    if speculative is not None:
+        # local import: repro.runtime's package init imports the serving
+        # engine, which imports this module — a top-level import would cycle
+        from repro.runtime import speculative as _spec
+
+        plan = _spec.spec_plan([m.depth for m in ctrl.modes], speculative)
+        ctrl.spec_plan = plan
+        top_k = speculative.top_k
+        if mesh is not None:
+            # the multi-position verify pass needs its own (model-axis
+            # replicated) activation pins — by-head propagation at (B, K+1)
+            # shapes triggers the XLA CPU partitioner bug decode_specs
+            # dodges. Pass batch-aware specs (executor knows the slot count)
+            # to keep the batch dim data-sharded like the decode path.
+            vspecs = (verify_activation_specs
+                      if verify_activation_specs is not None
+                      else _sh.verify_specs(cfg, mesh, policy))
+
+        def draft_factory(draft_depth: int, k: int):
+            fn = _spec.make_draft_step(cfg, draft_depth, k, top_k)
+
+            def step(p, cache, tok0, active, keys, temperature, step_ct):
+                trace_counter["n"] += 1  # executes at trace time only
+                if mesh is None:
+                    return fn(p, cache, tok0, active, keys, temperature,
+                              step_ct)
+                with _sh.activation_sharding(mesh, aspecs):
+                    return fn(p, cache, tok0, active, keys, temperature,
+                              step_ct)
+
+            if mesh is None:
+                return lambda: jax.jit(step)
+            d_in = (param_shardings, cache_shardings, rep, active_sh, rep,
+                    rep, rep)
+            return lambda: jax.jit(step, in_shardings=d_in,
+                                   out_shardings=(rep, rep))
+
+        def verify_factory(depth: int, k: int):
+            fn = _spec.make_verify_step(cfg, depth, k, top_k)
+
+            def step(p, cache, toks, dlogits, active, keys, temperature,
+                     step_ct):
+                trace_counter["n"] += 1  # executes at trace time only
+                if mesh is None:
+                    return fn(p, cache, toks, dlogits, active, keys,
+                              temperature, step_ct)
+                with _sh.activation_sharding(mesh, vspecs):
+                    return fn(p, cache, toks, dlogits, active, keys,
+                              temperature, step_ct)
+
+            if mesh is None:
+                return lambda: jax.jit(step, donate_argnums=(1,))
+            v_in = (param_shardings, cache_shardings, rep, rep, active_sh,
+                    rep, rep, rep)
+            v_out = (rep, rep, cache_shardings)
+            return lambda: jax.jit(step, in_shardings=v_in,
+                                   out_shardings=v_out, donate_argnums=(1,))
+
+        draft_keys = sorted({(e.draft_depth, k)
+                             for e in plan.values() for k in e.ks})
+        for dd, k in draft_keys:
+            ctrl.register_aux(_spec.draft_compile_key(dd, k),
+                              draft_factory(dd, k))
+        for e in plan.values():
+            for k in e.ks:
+                ctrl.register_aux(_spec.verify_compile_key(e.depth, k),
+                                  verify_factory(e.depth, k))
     return ctrl
 
 

@@ -63,6 +63,7 @@ from repro.launch.mesh import make_serve_mesh
 from repro.models.model import init_params
 from repro.runtime.serving import (MeshExecutor, Request, ServingEngine,
                                    SLOPolicy)
+from repro.runtime.speculative import SpecConfig
 
 
 def main(argv=None):
@@ -82,6 +83,19 @@ def main(argv=None):
     ap.add_argument("--prefill-threshold", type=int, default=8,
                     help="prompts at least this long are consumed by one "
                          "prefill launch instead of token-by-token")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax); per-slot "
+                         "PRNG keys keep sampled streams reproducible under "
+                         "slot churn")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling truncation (0 = full vocab)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding draft length K (0 = off): "
+                         "shallow DistillCycle exits draft K tokens, one "
+                         "full-depth launch verifies K+1 positions")
+    ap.add_argument("--spec-draft-depth", type=int, default=0,
+                    help="draft exit depth in layer groups (0 = deepest "
+                         "exit shallower than each serving depth)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -94,17 +108,26 @@ def main(argv=None):
 
     per_req = max(4, args.tokens // (2 * args.batch))
     n_requests = max(args.batch, (args.tokens + per_req - 1) // per_req)
-    capacity = per_req + 8
+    capacity = per_req + 8 + args.spec_k  # drafted-window headroom
 
     executor = None
     dp = tp = 1
     if args.mesh:
         dp, tp = _parse_mesh(args.mesh)
         executor = MeshExecutor(make_serve_mesh(dp, tp))
+    speculative = None
+    if args.spec_k > 0:
+        speculative = SpecConfig(
+            ks=(args.spec_k,),
+            draft_depth=args.spec_draft_depth or None,
+            top_k=args.top_k)
     engine = ServingEngine(params, cfg, batch_size=args.batch,
                            cache_capacity=capacity, modes=modes,
                            executor=executor,
-                           prefill_threshold=args.prefill_threshold)
+                           prefill_threshold=args.prefill_threshold,
+                           speculative=speculative,
+                           temperature=args.temperature, top_k=args.top_k,
+                           sample_seed=args.seed)
     mesh_note = (f" mesh=dp{dp}xtp{tp} policy={engine.executor.policy}"
                  if args.mesh else "")
     print(f"[serve] {cfg.name}: modes = {[m.name for m in modes]} "
@@ -150,6 +173,14 @@ def main(argv=None):
         frac = elastic.flops_fraction(cfg, mode)
         print(f"  mode {name:8s} p50 {t['p50_ms']:8.2f} ms  p95 {t['p95_ms']:8.2f} ms  "
               f"{t['tokens_per_s']:8.1f} tok/s  active-FLOPs {frac * 100:5.1f}%")
+    for path, t in engine.spec_telemetry_summary().items():
+        print(f"  spec {path:10s} accept {t['accept_rate'] * 100:5.1f}%  "
+              f"accepted/launch {t['accepted_per_launch']:.2f}  "
+              f"tokens/launch {t['tokens_per_launch']:.2f} "
+              f"(per-slot {t['tokens_per_slot_launch']:.2f})  "
+              f"launches {t['launches']}")
+    if engine.spec_fallback_log:
+        print(f"  spec fallbacks: {list(engine.spec_fallback_log)}")
     return 0
 
 

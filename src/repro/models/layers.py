@@ -475,3 +475,87 @@ def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False,
     out = attention_full(q, k, v, cfg, qpos, kpos, causal=True)
     out = morph_proj(out.reshape(B, 1, cfg.q_dim), params["wo"], active_k=a_q)
     return out, new_cache
+
+
+def _cache_kpos(pos, n_slots: int, window: int):
+    """Absolute position of every cache slot given ``pos`` committed tokens.
+
+    ``pos`` is the (B,) per-slot committed-token count — the cache holds
+    entries for absolute positions < pos only. Returns (B, n_slots) int32
+    with unwritten / stale / rolled-over slots at -1e9 (masked).
+    """
+    idx = jnp.arange(n_slots)[None, :]
+    if window:
+        last = pos[:, None] - 1  # newest committed absolute position (-1: none)
+        wraps = jnp.where(idx <= jnp.mod(last, n_slots), 0, 1)
+        kpos = (jnp.floor_divide(last, n_slots) - wraps) * n_slots + idx
+        return jnp.where(kpos < 0, -10**9, kpos)
+    return jnp.where(idx < pos[:, None], idx, -10**9)
+
+
+def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None):
+    """Speculative verify attention: score S positions in one pass.
+
+    x: (B, S, d) — embeddings of the last committed token followed by S-1
+    draft tokens, occupying absolute positions ``pos .. pos+S-1`` (``pos`` is
+    the (B,) per-slot committed-token count). The cache is READ but never
+    written: new K/V for the S positions are returned as candidates for
+    ``models.model.commit_verify`` to scatter once the acceptance count is
+    known. Attention runs over [cache entries, new K/V] with absolute-position
+    masking, so each query sees exactly the keys a sequential ``mha_decode``
+    stream would have seen — including the rolling sliding-window buffer,
+    where attending BEFORE any write avoids clobbering entries that later
+    (rejected) positions would have rolled over.
+
+    Returns (out (B, S, d), {"k": k_new, "v": v_new} with (B, S, KV, hd)).
+    """
+    dt = x.dtype
+    B, S, _ = x.shape
+    a_q = active.get("q_dim") if active else None
+    a_kv = active.get("kv_dim") if active else None
+    pos = jnp.asarray(pos, jnp.int32)
+    qpos = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B, S)
+    # pin BEFORE rope as well as after: at (B, S>1) decode shapes the XLA CPU
+    # partitioner mis-lowers rope over projection-propagated column sharding
+    # (wrong values, not just slow — same bug class decode_specs documents)
+    q = constrain(_split_heads(morph_proj(x, params["wq"], active_n=a_q),
+                               cfg.n_heads, cfg.head_dim), "decode_q")
+    k_new = constrain(_split_heads(morph_proj(x, params["wk"], active_n=a_kv),
+                                   cfg.n_kv_heads, cfg.head_dim), "decode_kv")
+    v_new = constrain(_split_heads(morph_proj(x, params["wv"], active_n=a_kv),
+                                   cfg.n_kv_heads, cfg.head_dim), "decode_kv")
+    if cfg.use_rope:
+        q = rope(q, qpos, cfg.rope_theta)
+        k_new = rope(k_new, qpos, cfg.rope_theta)
+    q = constrain(q, "decode_q")
+    k_new = constrain(k_new, "decode_kv")
+    v_new = constrain(v_new, "decode_kv")
+
+    kc, vc = cache["k"], cache["v"]
+    if cfg.kv_quant and "k_scale" in cache:
+        kc = dequantize_kv(kc, cache["k_scale"], dt)
+        vc = dequantize_kv(vc, cache["v_scale"], dt)
+        # attend over the quantize->dequantize round trip of the NEW entries
+        # too: that is what sequential mha_decode reads back from the cache,
+        # and what commit_verify will store — raw values would break the
+        # verify-equals-sequential-decode identity. Candidates stay raw
+        # (commit re-quantizes them to the same stored values).
+        kq, ks_ = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        k_att = dequantize_kv(kq, ks_, dt)
+        v_att = dequantize_kv(vq, vs, dt)
+    else:
+        k_att, v_att = k_new, v_new
+    # under a mesh the serving cache keeps KV seq sharded on the model axis;
+    # concatenating it with the replicated new K/V along that axis is one of
+    # the layouts the XLA CPU partitioner gets WRONG (verified: bad logits at
+    # every position) — pin the cache operand to the verify layout first
+    kc = constrain(kc.astype(dt), "decode_kv")
+    vc = constrain(vc.astype(dt), "decode_kv")
+    kpos_c = _cache_kpos(pos, kc.shape[1], cfg.sliding_window)
+    k_ext = jnp.concatenate([kc, k_att], axis=1)
+    v_ext = jnp.concatenate([vc, v_att], axis=1)
+    kpos = jnp.concatenate([kpos_c, qpos], axis=1)
+    out = attention_full(q, k_ext, v_ext, cfg, qpos, kpos, causal=True)
+    out = morph_proj(out.reshape(B, S, cfg.q_dim), params["wo"], active_k=a_q)
+    return out, {"k": k_new, "v": v_new}

@@ -480,6 +480,167 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int]
     return logits, {"pos": pos + 1, "stack": full_stack}
 
 
+def _group_verify(group_params, group_cache, h, pos, cfg: ModelConfig,
+                  active=None):
+    """One period of layers over S speculative positions (read-only cache).
+
+    Mirrors ``_group_decode`` but scores ``h`` (B, S, d) at absolute positions
+    ``pos .. pos+S-1`` without writing the cache; per-layer write candidates
+    (new KV, per-step SSM state/tails) are returned for ``commit_verify``.
+    """
+    cand = {}
+    for p in range(cfg.period):
+        lp = group_params[f"pos{p}"]
+        cp = group_cache[f"pos{p}"]
+        kind = cfg.layer_kind(p)
+        hn = L.apply_norm(lp["norm1"], h, cfg)
+        if kind == "attn":
+            self_keys = {k: v for k, v in cp.items() if not k.startswith("cross_")}
+            mix, c = L.mha_verify(lp["attn"], hn, self_keys, pos, cfg,
+                                  active=active)
+        else:
+            self_keys = {k: cp[k] for k in ("conv_x", "conv_bc", "state")}
+            mix, c = SSM.ssm_verify_step(lp["ssm"], hn, self_keys, cfg,
+                                         active=active)
+        cand[f"pos{p}"] = c
+        h = h + mix
+        if cfg.layer_is_moe(p):
+            hn = L.apply_norm(lp["norm2"], h, cfg)
+            y, _ = MOE.apply_moe_dense(
+                lp["moe"], hn, cfg,
+                active_topk=active.get("top_k") if active else None)
+            h = h + y
+        elif cfg.d_ff:
+            hn = L.apply_norm(lp["norm2"], h, cfg)
+            h = h + L.apply_mlp(lp["mlp"], hn, cfg,
+                                active_ff=active.get("d_ff") if active else None)
+    return h, cand
+
+
+def verify_step(params, cache, tokens, cfg: ModelConfig, *,
+                depth: Optional[int] = None, active=None):
+    """Speculative-decoding verifier: score S = K+1 positions in ONE pass.
+
+    ``tokens`` is (B, S): the last committed token of each slot followed by
+    its K draft tokens. The per-slot ``cache`` (positions ``pos`` (B,)) is
+    read but NEVER written — the pass is side-effect free, so any acceptance
+    count can be committed afterwards. Returns ``(logits, pending)``:
+    ``logits`` (B, S, Vp) scores every position (``logits[:, j]`` is the
+    model's next-token distribution after consuming ``tokens[:, :j+1]``,
+    exactly what ``j+1`` chained ``decode_step`` calls would produce), and
+    ``pending`` is the rollback-safe write set — pass it with a *traced*
+    per-slot ``n_accepted`` to ``commit_verify`` to advance each slot by
+    ``n_accepted + 1`` tokens via ``jnp.where``-masked cache writes: no host
+    round-trip, and one executable serves every acceptance count.
+
+    ``depth`` / ``active`` match ``decode_step``: depth is the compile-time
+    scan bound (exit-head logits for shallow depths), width stays runtime
+    per-slot data. Encoder-decoder / frontend archs are not supported (their
+    decode path needs non-token operands the speculative loop doesn't carry).
+    """
+    if cfg.is_encdec or cfg.frontend:
+        raise NotImplementedError("verify_step supports token-only decoders")
+    depth = depth if depth is not None else cfg.n_groups
+    dt = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]
+    if pos.ndim != 1:
+        raise ValueError("verify_step needs a per-slot cache (pos of shape (B,))")
+    B, S = tokens.shape
+    if cfg.sliding_window and S > cfg.sliding_window:
+        # commit_verify's rolling scatter would map two window positions to
+        # one buffer slot (undefined scatter winner) — bound K at the window
+        raise ValueError(f"verify window of {S} positions exceeds the "
+                         f"sliding window ({cfg.sliding_window}); use a "
+                         f"draft length K <= window - 1")
+    h = params["embed"][tokens].astype(dt)
+    if pos_kind(cfg) == "sinusoidal":
+        qpos = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        h = h + L.sinusoidal_pos(qpos, cfg.d_model).astype(dt)
+
+    stack_p = jax.tree_util.tree_map(lambda a: a[:depth], params["stack"])
+    stack_c = jax.tree_util.tree_map(lambda a: a[:depth], cache["stack"])
+
+    def body(h, xs):
+        gp, gc = xs
+        h, cand = _group_verify(gp, gc, h, pos, cfg, active=active)
+        h = _sh.constrain(h, "residual")
+        return h, cand
+
+    h, cands = jax.lax.scan(body, h, (stack_p, stack_c))
+
+    norm_p = params["final_norm"]
+    if depth < cfg.n_groups:
+        norm_p = params.get("exit_norms", {}).get(f"g{depth}", norm_p)
+    logits = _logits(params, h, cfg, norm_p)
+    return logits, {"stack": cands}
+
+
+def commit_verify(cache, pending, n_accepted, cfg: ModelConfig) -> Cache:
+    """Advance each slot by ``n_accepted + 1`` tokens from a verify pass.
+
+    ``pending`` comes from ``verify_step`` over S positions; ``n_accepted``
+    is a traced (B,) int32 in [0, S-1] — the count of accepted draft tokens
+    per slot. Attention K/V candidates are scattered with a
+    ``jnp.where(j <= n_accepted, new, old)`` mask (rejected positions keep
+    the previous buffer contents, which the advanced position counter then
+    masks — and which sliding-window buffers must not clobber); SSM state
+    and conv tails take the per-step candidate at index ``n_accepted``
+    (exact one-hot selection). Cache groups beyond the verify depth are
+    untouched. Commit is pure jnp over traced operands: one executable
+    serves every acceptance pattern.
+    """
+    pos = cache["pos"]  # (B,) committed-token counts before this launch
+    n_accepted = jnp.asarray(n_accepted, jnp.int32)
+    stack = cache["stack"]
+    pend = pending["stack"]
+    first = jax.tree_util.tree_leaves(pend)[0]
+    d, B, S = first.shape[0], first.shape[1], first.shape[2]
+    j = jnp.arange(S, dtype=jnp.int32)
+    acc = j[None, :] <= n_accepted[:, None]  # (B, S) commit mask
+    onehot = (j[None, :] == n_accepted[:, None]).astype(jnp.float32)  # (B, S)
+    batch_ix = jnp.arange(B)
+
+    def scatter_kv(full, new):
+        """full: (G, B, Sc, ...); new: (d, B, S, ...) — masked scatter at the
+        slots positions pos..pos+S-1 map to (rolling for sliding windows)."""
+        Sc = full.shape[2]
+        tgt = pos[:, None] + j[None, :]
+        slot = jnp.mod(tgt, Sc) if cfg.sliding_window else jnp.minimum(tgt, Sc - 1)
+        sub = full[:d]
+        old = sub[:, batch_ix[:, None], slot]  # (d, B, S, ...)
+        m = acc.reshape((1, B, S) + (1,) * (new.ndim - 3))
+        vals = jnp.where(m, new.astype(full.dtype), old)
+        sub = sub.at[:, batch_ix[:, None], slot].set(vals)
+        return jnp.concatenate([sub, full[d:]], axis=0)
+
+    def select_step(full, new):
+        """full: (G, B, ...); new: (d, B, S, ...) — take candidate n_accepted."""
+        oh = onehot.reshape((1, B, S) + (1,) * (new.ndim - 3))
+        sel = jnp.sum(new.astype(jnp.float32) * oh, axis=2)
+        return jnp.concatenate([sel.astype(full.dtype), full[d:]], axis=0)
+
+    new_stack = {}
+    for pname, layer in stack.items():
+        pc = pend[pname]
+        nl = dict(layer)
+        if "k" in pc:  # attention: candidates are raw K/V
+            if "k_scale" in layer:
+                kq, ks_ = L.quantize_kv(pc["k"])
+                vq, vs = L.quantize_kv(pc["v"])
+                nl["k"] = scatter_kv(layer["k"], kq)
+                nl["v"] = scatter_kv(layer["v"], vq)
+                nl["k_scale"] = scatter_kv(layer["k_scale"], ks_)
+                nl["v_scale"] = scatter_kv(layer["v_scale"], vs)
+            else:
+                nl["k"] = scatter_kv(layer["k"], pc["k"])
+                nl["v"] = scatter_kv(layer["v"], pc["v"])
+        else:  # ssm: per-step recurrent candidates
+            for key in ("conv_x", "conv_bc", "state"):
+                nl[key] = select_step(layer[key], pc[key])
+        new_stack[pname] = nl
+    return {"pos": pos + n_accepted + 1, "stack": new_stack}
+
+
 def prefill(params, batch, cfg: ModelConfig, *, remat: str = "none",
             cache_extra: int = 0, per_slot: bool = False,
             slot: Optional[int] = None, n_slots: Optional[int] = None,

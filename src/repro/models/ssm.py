@@ -257,3 +257,78 @@ def ssm_decode_step(params, x, cache, cfg: ModelConfig, active=None):
         y = apply_norm_masked(norm, y.astype(dt_), cfg, a_in)
     out = morph_proj(y, params["out_proj"], active_k=a_in)
     return out, {"conv_x": x_tail, "conv_bc": bc_tail, "state": state}
+
+
+def _conv_step_tails(tail0, u):
+    """Per-step conv tails: tails[:, j] = last K-1 inputs after consuming
+    u[:, :j+1]. tail0: (B, K-1, C); u: (B, S, C). Returns (B, S, K-1, C)."""
+    S = u.shape[1]
+    xt = jnp.concatenate([tail0, u], axis=1)  # (B, S+K-1, C)
+    return jnp.stack([xt[:, 1 + o : 1 + o + S, :]
+                      for o in range(tail0.shape[1])], axis=2)
+
+
+def ssm_verify_step(params, x, cache, cfg: ModelConfig, active=None):
+    """Speculative verify pass: score S positions in one launch.
+
+    Same math as S chained ``ssm_decode_step`` calls (conv chaining off the
+    cached tails, sequential state recurrence), but the cache is READ only:
+    instead of committing, the per-step recurrent state and conv tails are
+    returned stacked over positions so ``models.model.commit_verify`` can
+    select the state after exactly ``n_accepted + 1`` consumed tokens.
+
+    Returns (y (B, S, d), candidates) with candidates holding per-step
+    ``conv_x`` / ``conv_bc`` tails (B, S, K-1, C) and ``state``
+    (B, S, nh, hp, n) — entry j is the value AFTER consuming token j.
+    """
+    dt_ = x.dtype
+    B, S, _ = x.shape
+    nh = params["A_log"].shape[0]
+    hp = cfg.ssm_head_dim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    a_in = active.get("d_inner") if active else None
+    xs = constrain(morph_proj(x, params["w_x"], active_n=a_in), "decode_ssm")
+    z = constrain(morph_proj(x, params["w_z"], active_n=a_in), "decode_ssm")
+    bc = matmul(x, params["w_bc"], dt_)
+    dt_raw = morph_proj(x, params["w_dt"],
+                        active_n=active.get("ssm_heads") if active else None)
+
+    xs_conv, _ = _causal_conv(xs, params["conv_x_w"][: nh * hp],
+                              params["conv_x_b"][: nh * hp], cache["conv_x"])
+    bc_conv, _ = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"],
+                              cache["conv_bc"])
+    x_tails = _conv_step_tails(cache["conv_x"], xs)
+    bc_tails = _conv_step_tails(cache["conv_bc"], bc)
+
+    xs_f = jax.nn.silu(xs_conv.astype(jnp.float32))  # (B, S, d_in)
+    bc_f = jax.nn.silu(bc_conv.astype(jnp.float32))
+    B_ = jnp.repeat(bc_f[..., : g * n].reshape(B, S, g, n), nh // g, axis=2)
+    C_ = jnp.repeat(bc_f[..., g * n :].reshape(B, S, g, n), nh // g, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B, S, nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs_f.reshape(B, S, nh, hp)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,h,p), (B,h), (B,h,n), (B,h,n)
+        decay = jnp.exp(dt_t * A)
+        upd = jnp.einsum("bhp,bhn->bhpn", x_t * dt_t[..., None], b_t)
+        state = state * decay[..., None, None] + upd
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, (y_t, state)
+
+    xs_seq = (xh.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+              B_.transpose(1, 0, 2, 3), C_.transpose(1, 0, 2, 3))
+    _, (ys, states) = jax.lax.scan(step, cache["state"], xs_seq)
+    ys = ys.transpose(1, 0, 2, 3)  # (B, S, h, p)
+    states = states.transpose(1, 0, 2, 3, 4)  # (B, S, h, p, n)
+
+    y = ys + params["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(B, S, nh * hp) * jax.nn.silu(z.astype(jnp.float32))
+    norm = {"scale": params["ssm_norm"]["scale"][: nh * hp]}
+    if a_in is None:
+        y = apply_norm(norm, y.astype(dt_), cfg)
+    else:
+        y = apply_norm_masked(norm, y.astype(dt_), cfg, a_in)
+    out = morph_proj(y, params["out_proj"], active_k=a_in)
+    return out, {"conv_x": x_tails, "conv_bc": bc_tails, "state": states}

@@ -297,6 +297,32 @@ def decode_specs(cfg: ModelConfig, mesh: Mesh, policy: str,
     return specs
 
 
+def verify_specs(cfg: ModelConfig, mesh: Mesh, policy: str,
+                 batch: Optional[int] = None) -> Dict[str, P]:
+    """Activation constraints for the speculative multi-position verify pass.
+
+    Same constraint names as ``decode_specs`` but pinned REPLICATED over the
+    model axis: the XLA CPU partitioner mis-lowers the extended-KV attention
+    at (B, K+1, ...) shapes when by-head sharding propagates into the group
+    scan (the same bug class ``decode_specs`` works around for one-token
+    decode, observed as wrong logits rather than a crash). Verify activations
+    are K+1 tokens — KB-scale — so replicating their math costs one small
+    all-gather per projection while the weights stay sharded; the cache
+    commit keeps the sharded serving-cache layout via the jit out_shardings.
+    """
+    d: Any = data_axes(mesh) or None
+    if policy == "serve_2d":
+        d = None
+    b = d if batch and d is not None and batch % _axes_size(mesh, d) == 0 else None
+    specs: Dict[str, P] = {"residual": P(b, None, None)}
+    if cfg.n_heads:
+        specs["decode_q"] = P(b, None, None, None)
+        specs["decode_kv"] = P(b, None, None, None)
+    if cfg.ssm_state:
+        specs["decode_ssm"] = P(b, None, None)
+    return specs
+
+
 def opt_specs(opt_shape, pspecs) -> Any:
     """Optimizer state mirrors param sharding; step is replicated."""
     from repro.optim.optimizer import OptState

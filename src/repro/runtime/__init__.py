@@ -20,6 +20,7 @@ from repro.runtime.serving import (
     SLOPolicy,
     poisson_trace,
 )
+from repro.runtime.speculative import SpecConfig, SpecTelemetry
 
 __all__ = [
     "LocalExecutor",
@@ -27,6 +28,8 @@ __all__ = [
     "Request",
     "ServingEngine",
     "SLOPolicy",
+    "SpecConfig",
+    "SpecTelemetry",
     "poisson_trace",
     "compress_with_feedback",
     "compressed_psum",

@@ -1,0 +1,80 @@
+"""Per-slot token sampling for the serving engine.
+
+The continuous-batching engine carries independent requests in batch slots,
+so randomness must be *per slot*: each slot owns a PRNG key derived from
+(seed, slot), folded with a monotone launch counter inside the compiled
+step. Batch composition therefore never changes a slot's sample stream —
+the property the speculative rejection-sampling rule needs to stay
+distribution-identical to the verifier, and what makes sampled serving
+reproducible under slot churn.
+
+Temperature is a *runtime operand*: ``temperature == 0`` selects greedy
+argmax via ``jnp.where`` inside the same executable, so flipping a serving
+deployment between greedy and sampled decoding never recompiles (the same
+clock-gate discipline the width morphs follow). ``top_k`` is a static
+Python int (it changes the masking computation): 0 disables it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def make_slot_keys(seed: int, n_slots: int) -> jnp.ndarray:
+    """One PRNG key per batch slot: (n_slots, 2) uint32, derived from
+    (seed, slot index) so a slot's stream is independent of its neighbours."""
+    root = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda i: jax.random.fold_in(root, i))(
+        jnp.arange(n_slots, dtype=jnp.uint32))
+
+
+def fold_step(keys: jnp.ndarray, step) -> jnp.ndarray:
+    """Fold a launch counter into every slot key (traced; no host RNG)."""
+    step = jnp.asarray(step, jnp.uint32)
+    return jax.vmap(lambda k: jax.random.fold_in(k, step))(keys)
+
+
+def top_k_mask(logits: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Mask all but the k largest logits per row to -inf (k=0: no-op)."""
+    if not k:
+        return logits
+    kth = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits >= kth, logits, -jnp.inf)
+
+
+def token_dist(logits: jnp.ndarray, temperature, vocab: int,
+               top_k: int = 0) -> jnp.ndarray:
+    """Sampling distribution over the REAL vocab for (possibly padded) logits.
+
+    logits: (..., Vp) -> probs (..., vocab). ``temperature`` is a traced
+    scalar; 0 yields the one-hot argmax distribution — which is exactly what
+    makes a single rejection-sampling acceptance rule reduce to the greedy
+    rule (accept iff draft == argmax, replacement = argmax) with no branch.
+    """
+    lg = logits[..., :vocab].astype(jnp.float32)
+    lg = top_k_mask(lg, top_k)
+    t = jnp.maximum(jnp.asarray(temperature, jnp.float32), 1e-6)
+    soft = jax.nn.softmax(lg / t, axis=-1)
+    hard = jax.nn.one_hot(jnp.argmax(lg, axis=-1), vocab, dtype=jnp.float32)
+    return jnp.where(jnp.asarray(temperature, jnp.float32) > 0.0, soft, hard)
+
+
+def sample_tokens(logits: jnp.ndarray, keys: jnp.ndarray, temperature,
+                  vocab: int, top_k: int = 0,
+                  salt: Optional[int] = None) -> jnp.ndarray:
+    """Per-slot categorical sample (greedy at temperature 0).
+
+    logits: (B, Vp); keys: (B, 2) per-slot keys. Returns (B,) int32 in
+    [0, vocab). ``salt`` further folds a static stream id so different uses
+    of the same launch keys (draft position j, bonus sample) stay disjoint.
+    """
+    p = token_dist(logits, temperature, vocab, top_k)  # (B, vocab)
+    if salt is not None:
+        keys = jax.vmap(lambda k: jax.random.fold_in(k, salt))(keys)
+    samp = jax.vmap(lambda k, pr: jax.random.categorical(k, jnp.log(pr)))(
+        keys, jnp.maximum(p, 1e-38))
+    hard = jnp.argmax(logits[..., :vocab], axis=-1)
+    t = jnp.asarray(temperature, jnp.float32)
+    return jnp.where(t > 0.0, samp, hard).astype(jnp.int32)

@@ -47,13 +47,31 @@ the TPU analogue of that story end-to-end:
   through the decode path. Prompt-consume latency is tracked separately
   (``prefill_s`` / ``prefill_prompt_tokens``).
 
+* **Self-speculative decoding.** With ``speculative=SpecConfig(...)`` each
+  depth group that has a shallower DistillCycle exit drafts K tokens at that
+  exit (one cheap launch; the committed cache is read, never written) and
+  verifies all K+1 positions in ONE full-depth launch that also commits the
+  accepted prefix device-side (``runtime.speculative``). The emitted stream
+  is distribution-identical to plain stepping — exactly token-identical
+  under greedy — while accepted drafts turn one verify launch into several
+  tokens. Acceptance telemetry (``spec_telemetry``: accept rate, accepted
+  and tokens per launch) feeds the SLO policy's per-class (draft_depth, K)
+  choice, and a rolling-window acceptance collapse falls the group back to
+  plain stepping for a cooloff (``spec_fallback_log``). Slots still feeding
+  multi-token prompts tick plainly until the group is all-generative;
+  mixed widths ride speculative launches unchanged.
+
 * **SLO-driven morph policy.** ``SLOPolicy`` picks the widest/deepest mode
   whose predicted step latency fits the current latency budget. The
   prediction starts from ``core.neuroforge.analytical.estimate`` at the
   executor's actual ``DesignPoint(dp, tp)`` (the paper's Eq. 4/10-style
   pre-deployment model, multi-chip aware) and is corrected online by the
   controller's measured per-mode telemetry — analytical ordering, measured
-  magnitude, sharded where the engine is sharded.
+  magnitude, sharded where the engine is sharded. ``choose`` additionally
+  weighs per-class queue depth against the estimate: a deep queue squeezes
+  the effective budget, biasing admission toward shallower/narrower modes
+  (and smaller K) that drain backlog — decision inputs are recorded per
+  admission switch (``admission_decision_log``).
 
 Slot re-admission relies on position masking (attention) and explicit state
 zeroing (SSM) via ``reset_cache_slots``; both are jitted once per cache
@@ -84,6 +102,11 @@ from repro.core.neuroforge.space import DesignPoint
 from repro.models.model import (adopt_cache_slot, init_decode_cache, prefill,
                                 reset_cache_slots)
 from repro.parallel import sharding as SH
+from repro.runtime import sampling
+from repro.runtime.speculative import (SpecConfig, SpecTelemetry,
+                                       draft_compile_key,
+                                       expected_tokens_per_launch,
+                                       verify_compile_key)
 
 
 SLO_CLASSES = ("interactive", "batch")
@@ -172,10 +195,19 @@ class SLOPolicy:
     def __init__(self, cfg: ModelConfig, controller: MorphController, *,
                  batch_size: int, cache_capacity: int,
                  hw: HardwareSpec = V5E, min_samples: int = 3,
-                 dp: int = 1, tp: int = 1):
+                 dp: int = 1, tp: int = 1, queue_gamma: float = 0.25,
+                 interactive_weight: float = 2.0):
         self.cfg = cfg
         self.controller = controller
         self.min_samples = min_samples
+        self.batch_size = batch_size
+        # budget-aware admission: how strongly queue depth squeezes the
+        # effective latency budget (0 disables), and how much heavier a
+        # queued interactive request weighs than a batch one
+        self.queue_gamma = queue_gamma
+        self.interactive_weight = interactive_weight
+        # inputs of the most recent choose() call, for admission-switch logs
+        self.last_decision: Dict[str, float] = {}
         cell = ShapeCell("serve_step", seq_len=cache_capacity,
                          global_batch=batch_size, kind="decode")
         pt = DesignPoint(dp=dp, tp=tp, microbatches=1, remat="none",
@@ -207,9 +239,60 @@ class SLOPolicy:
             return t.p50_s
         return self.analytical[mode.name] * self._correction()
 
-    def choose(self, budget_s: float) -> MorphMode:
-        return policy_for_budget(self.cfg, self.controller, budget_s,
+    def _queue_pressure(self, queue_depths: Optional[Dict[str, int]]) -> float:
+        """Weighted queued-request count per batch slot (0 = empty queue)."""
+        if not queue_depths:
+            return 0.0
+        w = sum((self.interactive_weight if c == "interactive" else 1.0) * n
+                for c, n in queue_depths.items())
+        return w / max(self.batch_size, 1)
+
+    def choose(self, budget_s: float,
+               queue_depths: Optional[Dict[str, int]] = None) -> MorphMode:
+        """Pick the admission mode for a latency budget, weighed against the
+        queue. A deep queue means admitted requests also pay queueing delay,
+        so the *effective* per-step budget shrinks —
+        ``budget / (1 + queue_gamma * pressure)`` — biasing admission toward
+        shallower/narrower modes that drain the backlog faster (the paper's
+        latency-vs-throughput dual objective, applied at admission time).
+        The decision inputs land in ``last_decision`` so the engine can log
+        them on every admission switch.
+        """
+        pressure = self._queue_pressure(queue_depths)
+        eff = budget_s / (1.0 + self.queue_gamma * pressure)
+        mode = policy_for_budget(self.cfg, self.controller, eff,
                                  self.est_latency)
+        self.last_decision = {
+            "budget_s": budget_s, "effective_budget_s": eff,
+            "queue_pressure": pressure, "mode": mode.name,
+            "queued_interactive": (queue_depths or {}).get("interactive", 0),
+            "queued_batch": (queue_depths or {}).get("batch", 0),
+        }
+        return mode
+
+    def choose_spec_k(self, ks: Sequence[int], accept_rate: float,
+                      queue_depths: Optional[Dict[str, int]] = None) -> int:
+        """Pick the draft length K from the compiled table.
+
+        Ranks each K by expected tokens per verify launch at the measured
+        acceptance rate (``expected_tokens_per_launch``) per unit of drafted
+        work, then applies queue pressure: a deep queue biases toward smaller
+        K — rejected drafts burn launches that queued requests could have
+        used. With an empty queue the largest K whose marginal token gain is
+        still positive wins.
+        """
+        ks = sorted(set(ks))
+        pressure = self._queue_pressure(queue_depths)
+        # marginal value of draft position j is accept_rate^j; keep positions
+        # whose expected yield beats the pressure-scaled cost of drafting
+        cut = self.queue_gamma * pressure / (1.0 + self.queue_gamma * pressure)
+        best = ks[0]
+        for k in ks:
+            gain = expected_tokens_per_launch(accept_rate, k)
+            prev = expected_tokens_per_launch(accept_rate, best)
+            if gain - prev > cut * (k - best) / max(max(ks), 1):
+                best = k
+        return best
 
 
 # ---------------------------------------------------------------------------
@@ -250,8 +333,10 @@ class LocalExecutor:
 
     # -- compiled ops -------------------------------------------------------
 
-    def make_controller(self, params, cfg: ModelConfig, modes) -> MorphController:
-        return make_serve_controller(params, cfg, modes)
+    def make_controller(self, params, cfg: ModelConfig, modes,
+                        speculative: Optional[SpecConfig] = None) -> MorphController:
+        return make_serve_controller(params, cfg, modes,
+                                     speculative=speculative)
 
     def init_cache(self):
         return init_decode_cache(self._cfg, self._batch, self._cap,
@@ -308,6 +393,7 @@ class MeshExecutor(LocalExecutor):
         cspecs = SH.serve_cache_specs(cstruct, cfg, self.mesh, self.policy)
         self._cache_sh = SH.shardings_for(cspecs, self.mesh)
         self._aspecs = SH.decode_specs(cfg, self.mesh, self.policy, batch_size)
+        self._vspecs = SH.verify_specs(cfg, self.mesh, self.policy, batch_size)
         self._param_sh = None
         return self
 
@@ -320,11 +406,13 @@ class MeshExecutor(LocalExecutor):
     def put(self, x):
         return jax.device_put(jnp.asarray(x), self._rep)
 
-    def make_controller(self, params, cfg: ModelConfig, modes) -> MorphController:
+    def make_controller(self, params, cfg: ModelConfig, modes,
+                        speculative: Optional[SpecConfig] = None) -> MorphController:
         return make_serve_controller(
             params, cfg, modes, mesh=self.mesh, policy=self.policy,
             param_shardings=self._param_sh, cache_shardings=self._cache_sh,
-            activation_specs=self._aspecs)
+            activation_specs=self._aspecs,
+            verify_activation_specs=self._vspecs, speculative=speculative)
 
     def init_cache(self):
         cfg, batch, cap = self._cfg, self._batch, self._cap
@@ -375,6 +463,12 @@ class _DepthGroup:
     cache: Dict
     slots: List[Optional[Request]]
     widths: List[float]  # admission width per slot (stale for free slots)
+    # speculative state (None when this depth has no shallower exit to
+    # draft at, or speculation is disabled engine-wide)
+    keys: Optional[object] = None  # per-slot PRNG keys, device-resident
+    spec_k: int = 0  # active draft length (0 = plain stepping)
+    accept_window: Deque[float] = field(default_factory=lambda: deque(maxlen=32))
+    spec_off_until: int = -1  # tick until which speculation is cooling off
 
     @property
     def n_active(self) -> int:
@@ -403,21 +497,76 @@ class ServingEngine:
                  modes: Optional[Tuple[MorphMode, ...]] = None,
                  controller: Optional[MorphController] = None,
                  executor: Optional[LocalExecutor] = None,
-                 prefill_threshold: int = 8):
+                 prefill_threshold: int = 8,
+                 speculative: Optional[SpecConfig] = None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0):
+        if speculative is not None and (cfg.is_encdec or cfg.frontend):
+            raise ValueError("speculative serving needs a token-only decoder "
+                             "(enc-dec / frontend archs carry non-token "
+                             "prompt operands the draft loop cannot feed)")
+        if (speculative is not None and cfg.sliding_window
+                and max(speculative.ks) + 1 > cfg.sliding_window):
+            raise ValueError(
+                f"speculative K={max(speculative.ks)} needs K+1 <= "
+                f"sliding_window ({cfg.sliding_window}): the verify commit's "
+                f"rolling scatter would alias buffer slots")
+        if (speculative is not None and top_k and speculative.top_k
+                and speculative.top_k != top_k):
+            raise ValueError(
+                f"engine top_k={top_k} conflicts with SpecConfig.top_k="
+                f"{speculative.top_k}: fallback plain stepping and the "
+                f"speculative acceptance rule would sample different "
+                f"distributions")
+        if speculative is not None and top_k and not speculative.top_k:
+            # one truncation everywhere: the speculative executables must
+            # sample/accept under the same distribution the fallback path uses
+            speculative = replace(speculative, top_k=top_k)
         self.cfg = cfg
         self.batch_size = batch_size
         self.cache_capacity = cache_capacity
+        self.speculative = speculative
+        self.temperature = float(temperature)
+        self.sample_seed = sample_seed
         self.executor = (executor or LocalExecutor()).bind(
             cfg, batch_size, cache_capacity)
         self.params = self.executor.place_params(params)
         self.ctrl = controller or self.executor.make_controller(
-            self.params, cfg, modes)
+            self.params, cfg, modes, speculative=speculative)
         self._mode_by_dw = {(m.depth, m.width): m for m in self.ctrl.modes}
+        self._spec_plan = getattr(self.ctrl, "spec_plan", {})
         self.groups: Dict[int, _DepthGroup] = {}
+        base_keys = sampling.make_slot_keys(sample_seed, batch_size)
         for d in sorted({m.depth for m in self.ctrl.modes}):
-            self.groups[d] = _DepthGroup(d, self.executor.init_cache(),
-                                         [None] * batch_size,
-                                         [1.0] * batch_size)
+            g = _DepthGroup(d, self.executor.init_cache(),
+                            [None] * batch_size, [1.0] * batch_size)
+            plan = self._spec_plan.get(d)
+            if plan is not None:
+                g.spec_k = max(plan.ks)
+                g.accept_window = deque(maxlen=speculative.window)
+            # per-(group, slot) keys: slot i of different depth groups must
+            # not share a sample stream
+            g.keys = self.executor.put(jax.vmap(
+                lambda k, d=d: jax.random.fold_in(k, d))(base_keys))
+            self.groups[d] = g
+        # acceptance telemetry per (depth, draft_depth, K) — feeds the SLO
+        # policy's (draft_depth, K) choice and the fallback decision
+        self.spec_telemetry: Dict[Tuple[int, int, int], SpecTelemetry] = {}
+        self.spec_fallback_log: Deque[Tuple[int, int, float, int]] = \
+            deque(maxlen=4096)  # (step, depth, window accept rate, off_until)
+        self.spec_draft_launches = 0
+        self.spec_verify_launches = 0
+        self.spec_generated_tokens = 0
+        # jitted per-slot sampler for the NON-speculative path (temperature
+        # is a runtime operand; 0 never reaches it — argmax stays host-side).
+        # ``top_k`` applies here; the speculative executables truncate via
+        # SpecConfig.top_k (a compile-time choice of their acceptance rule).
+        vocab = cfg.vocab_size
+        self.top_k = top_k or (speculative.top_k if speculative else 0)
+        self._sample_fn = jax.jit(
+            lambda lg, keys, t, s, k=self.top_k: sampling.sample_tokens(
+                lg, sampling.fold_step(keys, s), t, vocab, k))
+        self._temp_op = self.executor.put(np.float32(self.temperature))
         self._reset = self.executor.reset_fn()
         self._adopt = self.executor.adopt_fn()
         # compiled prefills, keyed by (prompt_len, depth); ``slot`` is traced
@@ -436,6 +585,10 @@ class ServingEngine:
         # budget can't grow it forever
         self.admission_switch_log: Deque[Tuple[int, str, str, int, int]] = \
             deque(maxlen=4096)
+        # budget-aware admission: the SLO policy's decision inputs (budget,
+        # queue-squeezed effective budget, per-class queue depths) recorded
+        # on every admission switch driven by run()'s policy loop
+        self.admission_decision_log: Deque[Dict] = deque(maxlen=4096)
         self.step_count = 0
         self.compiles_after_warmup: Optional[int] = None
         # launch accounting: actual launches (per depth group) vs what the
@@ -466,16 +619,33 @@ class ServingEngine:
         """Compile every depth's step + the batched slot-reset, then rewind.
 
         After this returns, ``self.ctrl.stats['compiles']`` is frozen at
-        ``len(depths)`` (NOT ``len(modes)``): traffic with arbitrary width
-        and depth churn re-dispatches these executables.
+        ``len(depths)`` (NOT ``len(modes)``) plus, when speculative serving
+        is on, one draft executable per (draft_depth, K) and one verify
+        executable per (depth, K): traffic with arbitrary width/depth churn,
+        (draft_depth, K) switching, and greedy/sampled temperature changes
+        re-dispatches these executables.
         """
         self.ctrl.warmup()
         tok = self.executor.put(np.zeros((self.batch_size, 1), np.int32))
         active = self._active_for([1.0] * self.batch_size)
         mask = self.executor.put(np.ones((self.batch_size,), bool))
+        s_op = self.executor.put(np.uint32(0))
         for d, g in self.groups.items():
             step = self.ctrl.step_for(self._any_mode_at(d))
-            _, cache = step(self.params, g.cache, tok, active)
+            logits, cache = step(self.params, g.cache, tok, active)
+            if self.temperature > 0:
+                self._sample_fn(logits[:, 0], g.keys, self._temp_op, s_op)
+            plan = self._spec_plan.get(d)
+            if plan is not None:
+                for k in plan.ks:
+                    draft = self.ctrl.aux_step(
+                        draft_compile_key(plan.draft_depth, k))
+                    verify = self.ctrl.aux_step(verify_compile_key(d, k))
+                    dtoks, dlg = draft(self.params, cache, tok, active,
+                                       g.keys, self._temp_op, s_op)
+                    full = jnp.concatenate([tok, dtoks], axis=1)
+                    _, _, cache = verify(self.params, cache, full, dlg,
+                                         active, g.keys, self._temp_op, s_op)
             cache = self._reset(cache, mask)
             jax.block_until_ready(cache)
             # rewind: warmup wrote garbage at pos 0 of every slot
@@ -573,8 +743,15 @@ class ServingEngine:
         logits, pre = fn(self.params, toks, slot_op)
         g.cache = self._adopt(g.cache, pre, slot_op)
         # the prefill's last-position logits yield the first generated token
-        # (same contract as the decode step that eats the last prompt token)
-        nxt = int(np.asarray(jnp.argmax(logits[0, 0, : self.cfg.vocab_size])))
+        # (same contract as the decode step that eats the last prompt token);
+        # under sampled serving it must come from the slot's sample stream,
+        # not argmax — both admission paths serve the same distribution
+        if self.temperature > 0:
+            s_op = self.executor.put(np.uint32(self.step_count))
+            nxt = int(np.asarray(self._sample_fn(
+                logits[:, 0], g.keys[slot:slot + 1], self._temp_op, s_op))[0])
+        else:
+            nxt = int(np.asarray(jnp.argmax(logits[0, 0, : self.cfg.vocab_size])))
         jax.block_until_ready(g.cache)
         self.prefill_s += time.perf_counter() - t0
         self.prefills += 1
@@ -586,6 +763,98 @@ class ServingEngine:
             self.completed.append(req)
             g.slots[slot] = None
 
+    def _spec_eligible_k(self, g: _DepthGroup) -> int:
+        """The draft length to speculate with this tick (0 = plain step).
+
+        A group speculates only when every active slot has consumed its
+        prompt up to the last token (drafting against forced prompt tokens
+        would just re-predict the prompt) and has K+1 cache positions of
+        headroom, speculation is not cooling off after an acceptance
+        collapse, and the depth has a shallower exit to draft at.
+        """
+        if self.speculative is None or g.spec_k <= 0:
+            return 0
+        if g.depth not in self._spec_plan:
+            return 0
+        if self.step_count < g.spec_off_until:
+            return 0
+        k = g.spec_k
+        for r in g.slots:
+            if r is None:
+                continue
+            if r.fed < len(r.prompt) - 1:
+                return 0
+            if r.fed + k + 1 > self.cache_capacity:
+                return 0
+        return k
+
+    def _spec_tick(self, g: _DepthGroup, k: int, active_ix: List[int],
+                   now_s: float) -> float:
+        """One speculative step for a depth group: draft K tokens at the
+        shallow exit, verify all K+1 positions in one full-depth launch,
+        commit the accepted prefix device-side. ONE host transfer brings
+        back (out_tokens, n_accepted) for slot bookkeeping."""
+        plan = self._spec_plan[g.depth]
+        draft = self.ctrl.aux_step(draft_compile_key(plan.draft_depth, k))
+        verify = self.ctrl.aux_step(verify_compile_key(g.depth, k))
+        toks = np.zeros((self.batch_size, 1), np.int32)
+        for i in active_ix:
+            toks[i, 0] = g.slots[i].next_input()
+        active = self._active_for(g.widths)
+        tok_op = self.executor.put(toks)
+        s_op = self.executor.put(np.uint32(self.step_count))
+        t0 = time.perf_counter()
+        dtoks, dlg = draft(self.params, g.cache, tok_op, active, g.keys,
+                           self._temp_op, s_op)
+        full = jnp.concatenate([tok_op, dtoks], axis=1)
+        out, n_acc, g.cache = verify(self.params, g.cache, full, dlg, active,
+                                     g.keys, self._temp_op, s_op)
+        out_h = np.asarray(out)
+        n_acc_h = np.asarray(n_acc)
+        jax.block_until_ready(g.cache)
+        dt = time.perf_counter() - t0
+        self.ctrl.stats["dispatches"] += 2
+        self.ctrl.last_step_s = dt
+        self.spec_draft_launches += 1
+        self.spec_verify_launches += 1
+
+        produced = 0
+        for i in active_ix:
+            req = g.slots[i]
+            for j in range(int(n_acc_h[i]) + 1):
+                if req.done:
+                    break
+                req.fed += 1
+                if req.fed >= len(req.prompt):
+                    req.generated.append(int(out_h[i, j]))
+                    produced += 1
+            if req.done:
+                req.finished_s = now_s
+                self.completed.append(req)
+                g.slots[i] = None
+        self.spec_generated_tokens += produced
+
+        # speculative tick wall time lives in the SPEC telemetry only: the
+        # controller's per-mode p50 is the SLO policy's per-decode-step
+        # estimate, and a 2-launch multi-token tick recorded there would
+        # inflate it and mis-steer admission
+        tel = self.spec_telemetry.setdefault(
+            (g.depth, plan.draft_depth, k), SpecTelemetry(k=k))
+        tel.record([int(n_acc_h[i]) for i in active_ix], len(active_ix), dt)
+        g.accept_window.append(
+            float(np.mean([n_acc_h[i] for i in active_ix])) / k)
+        spec = self.speculative
+        if (len(g.accept_window) == g.accept_window.maxlen
+                and float(np.mean(g.accept_window)) < spec.min_accept_rate):
+            # acceptance collapsed: drafts cost launches without yielding
+            # tokens — fall back to plain stepping, retry after the cooloff
+            g.spec_off_until = self.step_count + spec.cooloff_ticks
+            self.spec_fallback_log.append(
+                (self.step_count, g.depth,
+                 float(np.mean(g.accept_window)), g.spec_off_until))
+            g.accept_window.clear()
+        return dt
+
     def step(self, now_s: float = 0.0) -> float:
         """One engine tick. Returns device wall-time spent (seconds)."""
         self._admit(now_s)
@@ -596,6 +865,10 @@ class ServingEngine:
             if not active_ix:
                 continue
             ticked = True
+            k = self._spec_eligible_k(g)
+            if k:
+                spent += self._spec_tick(g, k, active_ix, now_s)
+                continue
             toks = np.zeros((self.batch_size, 1), np.int32)
             for i in active_ix:
                 toks[i, 0] = g.slots[i].next_input()
@@ -611,8 +884,13 @@ class ServingEngine:
             self.decode_launches += 1
             self.per_mode_launch_equiv += len(
                 {(g.depth, g.widths[i]) for i in active_ix})
-            nxt = np.asarray(
-                jnp.argmax(logits[:, 0, : self.cfg.vocab_size], axis=-1))
+            if self.temperature > 0:
+                s_op = self.executor.put(np.uint32(self.step_count))
+                nxt = np.asarray(self._sample_fn(
+                    logits[:, 0], g.keys, self._temp_op, s_op))
+            else:
+                nxt = np.asarray(
+                    jnp.argmax(logits[:, 0, : self.cfg.vocab_size], axis=-1))
             for i in active_ix:
                 req = g.slots[i]
                 req.fed += 1
@@ -676,6 +954,8 @@ class ServingEngine:
         prefills0 = self.prefills
         prefill_s0 = self.prefill_s
         prefill_toks0 = self.prefill_prompt_tokens
+        spec_v0 = self.spec_verify_launches
+        spec_tok0 = self.spec_generated_tokens
         while (pending or self.queue or self.n_active) \
                 and self.step_count - steps0 < max_steps:
             while pending and pending[0].arrival_s <= clock:
@@ -684,7 +964,14 @@ class ServingEngine:
                 clock = pending[0].arrival_s  # idle: jump to next arrival
                 continue
             if policy is not None and budget_fn is not None:
-                self.set_admission_mode(policy.choose(budget_fn(clock)))
+                qd = {c: len(q) for c, q in self._queues.items()}
+                mode = policy.choose(budget_fn(clock), queue_depths=qd)
+                if mode.name != self.admission_mode.name:
+                    self.admission_decision_log.append(
+                        dict(step=self.step_count, **policy.last_decision))
+                self.set_admission_mode(mode)
+                if self.speculative is not None:
+                    self._retune_spec_k(policy, qd)
             dt = self.step(now_s=clock)
             busy += dt
             clock += dt
@@ -713,4 +1000,37 @@ class ServingEngine:
             "prefill_prompt_tokens": prefill_toks,
             "prompt_consume_ms_per_token":
                 prefill_s / prefill_toks * 1e3 if prefill_toks else 0.0,
+            # speculative decoding: verify launches and the tokens they
+            # emitted (tokens/launch > 1 is the decode-launch reduction)
+            "spec_verify_launches": self.spec_verify_launches - spec_v0,
+            "spec_generated_tokens": self.spec_generated_tokens - spec_tok0,
+            "spec_tokens_per_launch":
+                ((self.spec_generated_tokens - spec_tok0)
+                 / max(self.spec_verify_launches - spec_v0, 1)
+                 if self.spec_verify_launches > spec_v0 else 0.0),
+            "spec_fallbacks": len(self.spec_fallback_log),
         }
+
+    def _retune_spec_k(self, policy: "SLOPolicy",
+                       queue_depths: Dict[str, int]) -> None:
+        """Let the SLO policy re-pick each group's draft length K from the
+        compiled table, using measured acceptance (rolling window first,
+        lifetime telemetry second, optimistic default before any data —
+        DistillCycle-trained exits are built to agree)."""
+        for g in self.groups.values():
+            plan = self._spec_plan.get(g.depth)
+            if plan is None:
+                continue
+            if g.accept_window:
+                rate = float(np.mean(g.accept_window))
+            else:
+                tels = [t for (d, dd, k), t in self.spec_telemetry.items()
+                        if d == g.depth and t.drafted]
+                rate = (sum(t.accepted for t in tels)
+                        / sum(t.drafted for t in tels)) if tels else 0.75
+            g.spec_k = policy.choose_spec_k(plan.ks, rate, queue_depths)
+
+    def spec_telemetry_summary(self) -> Dict[str, Dict[str, float]]:
+        """Acceptance telemetry per (depth, draft_depth, K) path."""
+        return {f"d{d}<-d{dd}k{k}": t.summary()
+                for (d, dd, k), t in self.spec_telemetry.items() if t.launches}

@@ -1,0 +1,302 @@
+"""Self-speculative decoding: DistillCycle exit paths as draft models.
+
+DistillCycle trains every depth-morph exit to track the full model's output
+distribution — which is precisely the property speculative decoding needs
+from a draft model. This module turns that training guarantee into a serving
+latency/throughput multiplier: a *shallow* exit depth drafts K tokens (K
+cheap launches over the first ``draft_depth`` layer groups), then the full
+serving depth scores all K+1 positions in ONE ``models.model.verify_step``
+launch and commits the accepted prefix with rollback-safe masked writes
+(``commit_verify``). Weights are shared (the draft is a prefix subnetwork —
+the paper's single-bitstream story), the per-slot cache is shared, and the
+accepted token stream is *distribution-identical* to running the verifier
+alone — exactly equal, token for token, under greedy decoding.
+
+Two step builders produce the functions ``core.morph.make_serve_controller``
+compiles (one draft executable per (draft_depth, K), one verify executable
+per (depth, K)):
+
+* ``make_draft_step`` — a K-iteration ``lax.scan`` of the depth-truncated
+  ``decode_step``. The cache rides the scan carry and is DISCARDED: the
+  committed cache must stay untouched so the verifier can score (and
+  arbitrarily roll back) from the true committed state. SSM state makes this
+  mandatory — recurrent state advanced by rejected drafts cannot be
+  rewound — and it keeps the verifier's input independent of draft quality.
+* ``make_verify_step`` — ``verify_step`` + the acceptance rule +
+  ``commit_verify`` fused into one launch: the acceptance count ``n_accepted``
+  stays a traced per-slot value from logits to cache commit (no host
+  round-trip, no re-trace across acceptance patterns).
+
+The acceptance rule is the standard speculative rejection sampler
+(accept draft d_j with prob min(1, p(d_j)/q(d_j)); on first rejection sample
+from normalize(max(p - q, 0)); after K acceptances sample the bonus token
+from p_K), evaluated with per-slot PRNG keys. Temperature is a runtime
+operand: at 0 the p/q distributions collapse to one-hot argmax, which makes
+the same arithmetic reduce exactly to greedy acceptance (accept iff the
+draft equals the verifier argmax; replacement/bonus = the argmax) — one
+executable serves greedy and sampled serving alike.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import commit_verify, decode_step, verify_step
+from repro.runtime import sampling
+
+
+# stream ids folded into the per-launch slot keys so every random use is
+# disjoint: draft position j uses (DRAFT, j); acceptance uniforms ACCEPT;
+# the replacement/bonus sample BONUS.
+_STREAM_DRAFT = 1
+_STREAM_ACCEPT = 2
+_STREAM_BONUS = 3
+
+
+def draft_compile_key(draft_depth: int, k: int) -> Tuple:
+    return ("spec_draft", draft_depth, k)
+
+
+def verify_compile_key(depth: int, k: int) -> Tuple:
+    return ("spec_verify", depth, k)
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative serving configuration (engine-level policy knobs).
+
+    ``ks`` is the compiled draft-length table: one draft executable per
+    (draft_depth, K) and one verify executable per (depth, K) exist after
+    warmup, and the SLO policy may switch between them at runtime (smaller K
+    under queue pressure) without recompiling. ``draft_depth`` pins the
+    drafting exit; None picks the deepest exit shallower than each serving
+    depth. Acceptance collapse (mean accepted/K below ``min_accept_rate``
+    over a ``window``-launch rolling window) disables speculation for the
+    group for ``cooloff_ticks`` engine ticks, then retries.
+    """
+
+    ks: Tuple[int, ...] = (4,)
+    draft_depth: Optional[int] = None
+    min_accept_rate: float = 0.05
+    window: int = 32
+    cooloff_ticks: int = 200
+    top_k: int = 0
+
+
+@dataclass(frozen=True)
+class SpecPlanEntry:
+    """Resolved speculative wiring for one serving depth."""
+
+    depth: int
+    draft_depth: int
+    ks: Tuple[int, ...]
+
+
+def spec_plan(depths, spec: SpecConfig) -> Dict[int, SpecPlanEntry]:
+    """Resolve (serving depth -> draft depth, K table) over the mode table.
+
+    Only depths with a strictly shallower depth available can speculate (the
+    shallowest group keeps plain stepping). An explicit ``spec.draft_depth``
+    is honoured wherever it is shallower than the serving depth.
+    """
+    depths = sorted(set(depths))
+    plan: Dict[int, SpecPlanEntry] = {}
+    for d in depths:
+        cands = [e for e in depths if e < d]
+        if spec.draft_depth is not None:
+            cands = [e for e in cands if e == spec.draft_depth]
+        if not cands:
+            continue
+        plan[d] = SpecPlanEntry(depth=d, draft_depth=max(cands),
+                                ks=tuple(sorted(set(spec.ks))))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# acceptance rule
+# ---------------------------------------------------------------------------
+
+
+def accept_speculative(logits, draft_logits, tokens, keys, temperature,
+                       vocab: int, top_k: int = 0):
+    """Speculative rejection sampling over a drafted window.
+
+    logits: (B, S, Vp) verifier scores (position j = distribution after
+    consuming tokens[:, :j+1]); draft_logits: (B, S-1, Vp) the distributions
+    the K draft tokens were sampled from; tokens: (B, S) = last committed
+    token + K drafts; keys: (B, 2) per-launch per-slot keys.
+
+    Returns (out_tokens (B, S), n_accepted (B,)): ``out_tokens[:, :n+1]`` is
+    the generated stream (n accepted drafts + one replacement/bonus token),
+    positions beyond are padding. The output stream is distribution-identical
+    to sampling the verifier token by token; at temperature 0 it equals
+    greedy verifier decoding exactly.
+    """
+    B, S = tokens.shape
+    K = S - 1
+    t = jnp.asarray(temperature, jnp.float32)
+    p = sampling.token_dist(logits, t, vocab, top_k)  # (B, S, V)
+    q = sampling.token_dist(draft_logits, t, vocab, top_k)  # (B, K, V)
+    d = tokens[:, 1:]  # (B, K) draft tokens
+    p_d = jnp.take_along_axis(p[:, :K], d[..., None], axis=-1)[..., 0]
+    q_d = jnp.take_along_axis(q, d[..., None], axis=-1)[..., 0]
+    ku = jax.vmap(lambda k: jax.random.fold_in(k, _STREAM_ACCEPT))(keys)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (K,)))(ku)  # (B, K)
+    # accept iff u < p(d)/q(d), written division-free (q_d can be 0 under
+    # top-k truncation: then accept iff p_d > 0, the correct limit)
+    accept = u * q_d < p_d
+    live = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+    n_acc = jnp.sum(live, axis=1)  # (B,) leading-accept count
+
+    # replacement (first rejection) / bonus (all accepted) distribution:
+    # normalize(max(p - q, 0)) at position n_acc, with q padded to zero at
+    # j=K so the all-accepted case reduces to sampling from p_K directly.
+    q_pad = jnp.concatenate([q, jnp.zeros((B, 1, q.shape[-1]), q.dtype)], 1)
+    ix = n_acc[:, None, None]
+    p_at = jnp.take_along_axis(p, ix, axis=1)[:, 0]  # (B, V)
+    q_at = jnp.take_along_axis(q_pad, ix, axis=1)[:, 0]
+    res = jnp.maximum(p_at - q_at, 0.0)
+    rs = jnp.sum(res, axis=-1, keepdims=True)
+    res = jnp.where(rs > 0, res / jnp.maximum(rs, 1e-38), p_at)
+    kb = jax.vmap(lambda k: jax.random.fold_in(k, _STREAM_BONUS))(keys)
+    samp = jax.vmap(lambda k, pr: jax.random.categorical(k, jnp.log(pr)))(
+        kb, jnp.maximum(res, 1e-38))
+    last = jnp.where(t > 0.0, samp, jnp.argmax(res, axis=-1)).astype(jnp.int32)
+
+    j = jnp.arange(S, dtype=jnp.int32)[None, :]
+    d_pad = jnp.concatenate([d, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    out = jnp.where(j < n_acc[:, None], d_pad, last[:, None])
+    return out, n_acc
+
+
+# ---------------------------------------------------------------------------
+# step builders (compiled by core.morph.make_serve_controller)
+# ---------------------------------------------------------------------------
+
+
+def make_draft_step(cfg: ModelConfig, draft_depth: int, k: int,
+                    top_k: int = 0):
+    """Build the K-token drafting function for one (draft_depth, K).
+
+    Signature: ``draft(params, cache, tok0, active, keys, temperature, step)
+    -> (draft_tokens (B, K), draft_logits (B, K, Vp))``. The committed cache
+    is read as the starting state but its in-scan updates are DISCARDED (the
+    verifier must score from — and roll back to — the committed state; SSM
+    recurrent state advanced by rejected drafts could not be rewound). The
+    cache is therefore NOT donated: the one transient cache copy the scan
+    carry makes is the price of rollback safety.
+    """
+    vocab = cfg.vocab_size
+
+    def draft(params, cache, tok0, active, keys, temperature, step):
+        keys_l = sampling.fold_step(keys, step)
+        kd = jax.vmap(lambda kk: jax.random.fold_in(kk, _STREAM_DRAFT))(keys_l)
+
+        def body(carry, j):
+            cache_c, tok = carry
+            logits, cache_c = decode_step(params, cache_c, tok, cfg,
+                                          depth=draft_depth, active=active)
+            lg = logits[:, 0]
+            kj = jax.vmap(lambda kk: jax.random.fold_in(kk, j))(kd)
+            nxt = sampling.sample_tokens(lg, kj, temperature, vocab, top_k)
+            return (cache_c, nxt[:, None]), (nxt, lg)
+
+        (_, _), (toks, lgs) = jax.lax.scan(
+            body, (cache, tok0), jnp.arange(k, dtype=jnp.uint32))
+        return toks.T, lgs.transpose(1, 0, 2)  # (B, K), (B, K, Vp)
+
+    return draft
+
+
+def make_verify_step(cfg: ModelConfig, depth: int, k: int, top_k: int = 0):
+    """Build the fused verify+accept+commit function for one (depth, K).
+
+    Signature: ``verify(params, cache, tokens (B, K+1), draft_logits, active,
+    keys, temperature, step) -> (out_tokens (B, K+1), n_accepted (B,),
+    new_cache)``. The cache should be donated by the caller's jit — the
+    commit is an in-place masked scatter keyed on the traced ``n_accepted``.
+    """
+
+    def verify(params, cache, tokens, draft_logits, active, keys,
+               temperature, step):
+        logits, pending = verify_step(params, cache, tokens, cfg,
+                                      depth=depth, active=active)
+        keys_l = sampling.fold_step(keys, step)
+        out, n_acc = accept_speculative(logits, draft_logits, tokens, keys_l,
+                                        temperature, cfg.vocab_size, top_k)
+        new_cache = commit_verify(cache, pending, n_acc, cfg)
+        return out, n_acc, new_cache
+
+    return verify
+
+
+# ---------------------------------------------------------------------------
+# acceptance telemetry (feeds SLOPolicy's (draft_depth, K) choice)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SpecTelemetry:
+    """Online acceptance statistics for one (depth, draft_depth, K) path."""
+
+    k: int
+    launches: int = 0
+    slot_launches: int = 0  # sum of active slots over launches
+    drafted: int = 0
+    accepted: int = 0
+    emitted: int = 0  # accepted + the per-slot replacement/bonus token
+    total_s: float = 0.0  # draft + verify wall time (NOT decode-step time:
+    # speculative ticks must never feed the SLO policy's per-step estimate)
+
+    def record(self, n_accepted, n_slots: int, dt_s: float = 0.0) -> None:
+        self.launches += 1
+        self.slot_launches += n_slots
+        self.drafted += self.k * n_slots
+        acc = int(sum(n_accepted))
+        self.accepted += acc
+        self.emitted += acc + n_slots
+        self.total_s += dt_s
+
+    @property
+    def accept_rate(self) -> float:
+        """Accepted fraction of drafted tokens."""
+        return self.accepted / self.drafted if self.drafted else 0.0
+
+    @property
+    def accepted_per_launch(self) -> float:
+        return self.accepted / self.launches if self.launches else 0.0
+
+    @property
+    def tokens_per_launch(self) -> float:
+        """Generated tokens per verify launch, summed over batch slots."""
+        return self.emitted / self.launches if self.launches else 0.0
+
+    @property
+    def tokens_per_slot_launch(self) -> float:
+        """Generated tokens per (slot, verify launch) — the per-request
+        decode-launch reduction vs the one-token-per-launch baseline."""
+        return self.emitted / self.slot_launches if self.slot_launches else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {"k": self.k, "launches": self.launches,
+                "accept_rate": round(self.accept_rate, 4),
+                "accepted_per_launch": round(self.accepted_per_launch, 3),
+                "tokens_per_launch": round(self.tokens_per_launch, 3),
+                "tokens_per_slot_launch":
+                    round(self.tokens_per_slot_launch, 3),
+                "tokens_per_s": round(self.emitted / self.total_s, 1)
+                if self.total_s > 0 else 0.0}
+
+
+def expected_tokens_per_launch(accept_rate: float, k: int) -> float:
+    """E[tokens emitted per verify launch] for i.i.d. acceptance ``a``:
+    1 + a + a^2 + ... + a^k (the standard speculative-decoding estimate) —
+    the offline predictor an SLO policy uses before a K has telemetry."""
+    a = min(max(accept_rate, 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)

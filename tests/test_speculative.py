@@ -1,0 +1,557 @@
+"""Self-speculative decoding: verify-step rollback exactness for EVERY
+acceptance count, end-to-end greedy token identity (engine level, spec vs
+plain), rejection-sampling properties (p==q accepts everything; sampled
+commits match sequential feeding), sampling utilities, acceptance-collapse
+fallback, budget-aware admission, and the 2x4 mesh case."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import elastic
+from repro.models.model import (commit_verify, decode_step, init_decode_cache,
+                                init_params, verify_step)
+from repro.runtime import sampling
+from repro.runtime import speculative as SP
+from repro.runtime.serving import Request, ServingEngine, SLOPolicy
+from repro.runtime.speculative import SpecConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves_with_path(tree)
+
+
+# ---------------------------------------------------------------------------
+# verify_step + commit_verify: rollback property
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-370m"])
+def test_verify_rollback_matches_sequential(arch):
+    """For every acceptance count n in 0..K, committing a K+1-position verify
+    pass at n equals n+1 chained decode_step calls — logits AND final cache —
+    at shallow and full depth, with mixed per-slot widths."""
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, cap, K = 2, 16, 3
+    active = jax.tree_util.tree_map(
+        jnp.asarray, elastic.active_widths_batch(cfg, [0.5, 1.0]))
+    cache = init_decode_cache(cfg, B, cap, per_slot=True)
+    for t in range(3):
+        tok = jnp.asarray([[3 + t], [5 + t]], jnp.int32)
+        _, cache = decode_step(params, cache, tok, cfg, active=active)
+    window = np.array([[2, 9, 4, 6], [7, 3, 2, 1]], np.int32)
+    for depth in [1, cfg.n_groups]:
+        logits, pending = verify_step(params, cache, jnp.asarray(window), cfg,
+                                      depth=depth, active=active)
+        for n_acc in range(K + 1):
+            committed = commit_verify(
+                cache, pending, jnp.full((B,), n_acc, jnp.int32), cfg)
+            ref = cache
+            for t in range(n_acc + 1):
+                lr, ref = decode_step(params, ref,
+                                      jnp.asarray(window[:, t:t + 1]), cfg,
+                                      depth=depth, active=active)
+            np.testing.assert_allclose(
+                np.asarray(logits[:, n_acc]), np.asarray(lr[:, 0]),
+                atol=3e-5, rtol=1e-5, err_msg=f"d{depth} n{n_acc} logits")
+            for (pa, a), (_, b) in zip(_leaves(committed), _leaves(ref)):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), atol=3e-5, rtol=1e-5,
+                    err_msg=f"d{depth} n{n_acc} {jax.tree_util.keystr(pa)}")
+
+
+def test_verify_rollback_sliding_window():
+    """Rolling KV buffers: the verify pass must read the pre-write buffer
+    (a later rejected position's write would clobber entries still in
+    earlier queries' windows) and the masked commit must preserve rolled
+    entries for rejected positions."""
+    import dataclasses
+
+    cfg = dataclasses.replace(smoke_config("mixtral-8x22b"), sliding_window=6)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, K = 2, 3
+    cache = init_decode_cache(cfg, B, 16, per_slot=True)
+    for t in range(7):  # wrap the rolling buffer first
+        _, cache = decode_step(params, cache,
+                               jnp.asarray([[3 + t], [5 + t]], jnp.int32), cfg)
+    window = np.array([[2, 9, 4, 6], [7, 3, 2, 1]], np.int32)
+    logits, pending = verify_step(params, cache, jnp.asarray(window), cfg)
+    for n_acc in range(K + 1):
+        committed = commit_verify(cache, pending,
+                                  jnp.full((B,), n_acc, jnp.int32), cfg)
+        ref = cache
+        for t in range(n_acc + 1):
+            lr, ref = decode_step(params, ref,
+                                  jnp.asarray(window[:, t:t + 1]), cfg)
+        np.testing.assert_allclose(np.asarray(logits[:, n_acc]),
+                                   np.asarray(lr[:, 0]), atol=3e-5, rtol=1e-5)
+        for (pa, a), (_, b) in zip(_leaves(committed), _leaves(ref)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=3e-5, rtol=1e-5,
+                err_msg=f"n{n_acc} {jax.tree_util.keystr(pa)}")
+
+
+def test_verify_rollback_kv_quant():
+    """int8-quantized KV caches: the verify pass must attend over the
+    quantize->dequantize round trip of its new entries (what sequential
+    decode reads back), and the commit must store the same quantized values."""
+    import dataclasses
+
+    cfg = dataclasses.replace(smoke_config("tinyllama-1.1b"), kv_quant=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, K = 2, 3
+    cache = init_decode_cache(cfg, B, 16, per_slot=True)
+    for t in range(3):
+        _, cache = decode_step(params, cache,
+                               jnp.asarray([[3 + t], [5 + t]], jnp.int32), cfg)
+    window = np.array([[2, 9, 4, 6], [7, 3, 2, 1]], np.int32)
+    logits, pending = verify_step(params, cache, jnp.asarray(window), cfg)
+    for n_acc in range(K + 1):
+        committed = commit_verify(cache, pending,
+                                  jnp.full((B,), n_acc, jnp.int32), cfg)
+        ref = cache
+        for t in range(n_acc + 1):
+            lr, ref = decode_step(params, ref,
+                                  jnp.asarray(window[:, t:t + 1]), cfg)
+        np.testing.assert_allclose(np.asarray(logits[:, n_acc]),
+                                   np.asarray(lr[:, 0]), atol=3e-5, rtol=1e-5)
+        for (pa, a), (_, b) in zip(_leaves(committed), _leaves(ref)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=3e-5, rtol=1e-5,
+                err_msg=f"n{n_acc} {jax.tree_util.keystr(pa)}")
+
+
+def test_spec_k_exceeding_sliding_window_rejected():
+    import dataclasses
+
+    cfg = dataclasses.replace(smoke_config("mixtral-8x22b"), sliding_window=3)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="sliding_window"):
+        ServingEngine(params, cfg, batch_size=1, cache_capacity=16,
+                      speculative=SpecConfig(ks=(4,)))
+
+
+def test_engine_top_k_conflicts_with_spec_top_k():
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="top_k"):
+        ServingEngine(params, cfg, batch_size=1, cache_capacity=16,
+                      speculative=SpecConfig(ks=(2,), top_k=5), top_k=9)
+
+
+def test_verify_step_rejects_encdec():
+    cfg = smoke_config("whisper-base")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cache = init_decode_cache(cfg, 1, 8, per_slot=True)
+    with pytest.raises(NotImplementedError):
+        verify_step(params, cache, jnp.zeros((1, 3), jnp.int32), cfg)
+
+
+# ---------------------------------------------------------------------------
+# acceptance rule
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_acceptance_reduction():
+    """At temperature 0 the rejection sampler reduces exactly to greedy:
+    accept while draft == verifier argmax, then emit the verifier argmax."""
+    B, K, V = 2, 3, 8
+    v = np.array([[1, 2, 3, 4], [5, 5, 6, 7]])  # verifier argmax per position
+    d = np.array([[1, 2, 9 % V, 0], [6, 0, 0, 0]])[:, :K]  # drafts d1..dK
+    logits = np.full((B, K + 1, V), -5.0, np.float32)
+    dlogits = np.full((B, K, V), -5.0, np.float32)
+    for b in range(B):
+        for j in range(K + 1):
+            logits[b, j, v[b, j]] = 5.0
+        for j in range(K):
+            dlogits[b, j, d[b, j]] = 5.0
+    tokens = np.concatenate([np.zeros((B, 1), np.int32), d], axis=1)
+    keys = sampling.make_slot_keys(0, B)
+    out, n_acc = SP.accept_speculative(
+        jnp.asarray(logits), jnp.asarray(dlogits), jnp.asarray(tokens),
+        keys, 0.0, V)
+    out, n_acc = np.asarray(out), np.asarray(n_acc)
+    # slot 0: d = [1, 2, 1] vs v = [1, 2, 3]: accept 2, replacement v[2]=3
+    assert n_acc[0] == 2 and out[0, :3].tolist() == [1, 2, 3]
+    # slot 1: d = [6, ...] vs v0 = 5: reject at once, replacement v[0]=5
+    assert n_acc[1] == 0 and out[1, 0] == 5
+
+
+def test_all_accepted_emits_bonus_token():
+    B, K, V = 1, 2, 6
+    v = [2, 3, 4]
+    logits = np.full((B, K + 1, V), -5.0, np.float32)
+    dlogits = np.full((B, K, V), -5.0, np.float32)
+    for j, t in enumerate(v):
+        logits[0, j, t] = 5.0
+    for j in range(K):
+        dlogits[0, j, v[j]] = 5.0  # drafts match the verifier
+    tokens = np.array([[0, 2, 3]], np.int32)
+    out, n_acc = SP.accept_speculative(
+        jnp.asarray(logits), jnp.asarray(dlogits), jnp.asarray(tokens),
+        sampling.make_slot_keys(0, B), 0.0, V)
+    assert int(n_acc[0]) == K
+    assert np.asarray(out)[0].tolist() == [2, 3, 4]  # K drafts + bonus
+
+
+def test_expected_tokens_per_launch():
+    assert SP.expected_tokens_per_launch(0.0, 4) == pytest.approx(1.0)
+    assert SP.expected_tokens_per_launch(1.0, 4) == pytest.approx(5.0)
+    e = SP.expected_tokens_per_launch(0.5, 2)
+    assert e == pytest.approx(1 + 0.5 + 0.25)
+
+
+# ---------------------------------------------------------------------------
+# sampling utilities
+# ---------------------------------------------------------------------------
+
+
+def test_sample_tokens_greedy_at_zero_temperature():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(3, 16)),
+                         jnp.float32)
+    keys = sampling.make_slot_keys(0, 3)
+    toks = sampling.sample_tokens(logits, keys, 0.0, 16)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_sample_tokens_top_k_support():
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    keys = sampling.make_slot_keys(3, 4)
+    top2 = set()
+    for b in range(4):
+        top2.add((b, int(np.argsort(np.asarray(logits[b]))[-1])))
+        top2.add((b, int(np.argsort(np.asarray(logits[b]))[-2])))
+    for s in range(20):
+        toks = np.asarray(sampling.sample_tokens(
+            logits, sampling.fold_step(keys, s), 1.5, 32, top_k=2))
+        for b, t in enumerate(toks):
+            assert (b, int(t)) in top2
+
+
+def test_per_slot_streams_independent_and_deterministic():
+    logits = jnp.asarray(np.random.default_rng(2).normal(size=(2, 64)),
+                         jnp.float32)
+    keys = sampling.make_slot_keys(0, 2)
+    a = np.asarray(sampling.sample_tokens(logits, keys, 1.0, 64))
+    b = np.asarray(sampling.sample_tokens(logits, keys, 1.0, 64))
+    np.testing.assert_array_equal(a, b)  # same keys -> same samples
+    c = np.asarray(sampling.sample_tokens(
+        logits, sampling.fold_step(keys, 1), 1.0, 64))
+    assert not np.array_equal(a, c)  # folded step -> fresh stream
+
+
+def test_padded_vocab_never_sampled():
+    cfg = smoke_config("tinyllama-1.1b")
+    vp = cfg.padded_vocab()
+    if vp == cfg.vocab_size:
+        pytest.skip("smoke vocab unpadded")
+    logits = jnp.zeros((2, vp), jnp.float32).at[:, -1].set(100.0)  # pad col
+    toks = sampling.sample_tokens(logits, sampling.make_slot_keys(0, 2), 1.0,
+                                  cfg.vocab_size)
+    assert int(np.max(np.asarray(toks))) < cfg.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+SPECS = [(1, 8), (3, 6), (5, 9), (1, 5), (2, 7)]
+
+
+def _drive(eng):
+    for rid, (plen, n_new) in enumerate(SPECS):
+        eng.submit(Request(rid=rid, prompt=tuple(range(1, 1 + plen)),
+                           max_new_tokens=n_new))
+    while eng.queue or eng.n_active:
+        eng.step()
+    return {r.rid: tuple(r.generated) for r in eng.completed}
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-370m"])
+def test_spec_engine_token_identical_and_no_retrace(arch):
+    """Greedy speculative serving emits exactly the plain engine's tokens,
+    compiles draft+verify once at warmup, and never re-traces after."""
+    from repro.kernels.morph_matmul import trace_count
+
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    plain = ServingEngine(params, cfg, batch_size=2, cache_capacity=32,
+                          prefill_threshold=4)
+    plain.warmup()
+    out_plain = _drive(plain)
+
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32,
+                        prefill_threshold=4, speculative=SpecConfig(ks=(3,)))
+    eng.warmup()
+    depths = {m.depth for m in eng.ctrl.modes}
+    # one decode per depth + one draft (shared exit) + one verify per
+    # speculating depth
+    assert eng.compiles_after_warmup == len(depths) + 1 + len(depths) - 1
+    frozen = eng.ctrl.stats["compiles"]
+    traces0 = eng.ctrl.trace_counter["n"]
+    ktraces0 = trace_count()
+    out_spec = _drive(eng)
+    assert out_spec == out_plain
+    assert eng.ctrl.stats["compiles"] == frozen
+    assert eng.ctrl.trace_counter["n"] == traces0
+    assert trace_count() == ktraces0
+    assert eng.spec_verify_launches > 0
+    (path, tel), = eng.spec_telemetry_summary().items()
+    assert tel["launches"] == eng.spec_verify_launches
+    assert tel["tokens_per_slot_launch"] >= 1.0  # bonus token guarantees >= 1
+
+
+def test_spec_all_accept_when_draft_equals_verifier():
+    """draft_depth == depth makes p == q: rejection sampling must accept
+    every draft and emit the draft tokens themselves."""
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, K = 2, 3
+    draft = jax.jit(SP.make_draft_step(cfg, cfg.n_groups, K))
+    verify = jax.jit(SP.make_verify_step(cfg, cfg.n_groups, K),
+                     donate_argnums=(1,))
+    keys = sampling.make_slot_keys(7, B)
+    cache = init_decode_cache(cfg, B, 32, per_slot=True)
+    _, cache = decode_step(params, cache, jnp.asarray([[3], [5]], jnp.int32),
+                           cfg)
+    tok0 = jnp.asarray([[9], [2]], jnp.int32)
+    t_op = jnp.float32(0.8)
+    for launch in range(4):
+        s_op = jnp.uint32(launch)
+        dtoks, dlg = draft(params, cache, tok0, None, keys, t_op, s_op)
+        full = jnp.concatenate([tok0, dtoks], axis=1)
+        out, n_acc, cache = verify(params, cache, full, dlg, None, keys,
+                                   t_op, s_op)
+        assert (np.asarray(n_acc) == K).all()
+        np.testing.assert_array_equal(np.asarray(out)[:, :K],
+                                      np.asarray(dtoks))
+        tok0 = np.asarray(out)[np.arange(B), np.asarray(n_acc)][:, None]
+        tok0 = jnp.asarray(tok0.astype(np.int32))
+
+
+def test_sampled_spec_commit_matches_sequential_feed():
+    """Under sampling, whatever tokens a speculative launch commits, the
+    final cache equals feeding those tokens through decode_step."""
+    cfg = smoke_config("mamba2-370m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, K = 2, 3
+    draft = jax.jit(SP.make_draft_step(cfg, 1, K))
+    verify = jax.jit(SP.make_verify_step(cfg, cfg.n_groups, K))
+    keys = sampling.make_slot_keys(5, B)
+    cache = init_decode_cache(cfg, B, 32, per_slot=True)
+    _, cache = decode_step(params, cache, jnp.asarray([[3], [5]], jnp.int32),
+                           cfg)
+    tok0 = jnp.asarray([[9], [2]], jnp.int32)
+    t_op, s_op = jnp.float32(0.7), jnp.uint32(0)
+    dtoks, dlg = draft(params, cache, tok0, None, keys, t_op, s_op)
+    full = jnp.concatenate([tok0, dtoks], axis=1)
+    out, n_acc, committed = verify(params, cache, full, dlg, None, keys,
+                                   t_op, s_op)
+    seq = np.asarray(full)
+    n = int(np.asarray(n_acc).min())
+    ref = cache
+    nacc = np.asarray(n_acc)
+    # feed each slot its consumed tokens; equal counts required for a batch
+    # feed, so assert only when both slots accepted the same count
+    if int(nacc[0]) == int(nacc[1]):
+        for t in range(n + 1):
+            _, ref = decode_step(params, ref,
+                                 jnp.asarray(seq[:, t:t + 1]), cfg)
+        for (pa, a), (_, b) in zip(_leaves(committed), _leaves(ref)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=3e-5, rtol=1e-5,
+                err_msg=jax.tree_util.keystr(pa))
+    else:  # still check per-slot positions advanced consistently
+        np.testing.assert_array_equal(np.asarray(committed["pos"]),
+                                      np.asarray(cache["pos"]) + nacc + 1)
+
+
+def test_spec_fallback_on_acceptance_collapse():
+    """With an unattainable acceptance threshold, speculation must disable
+    itself (logged) and the engine must finish on plain stepping."""
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=64,
+                        prefill_threshold=4,
+                        speculative=SpecConfig(ks=(3,), min_accept_rate=1.1,
+                                               window=4, cooloff_ticks=30))
+    eng.warmup()
+    for rid in range(4):
+        eng.submit(Request(rid=rid, prompt=(1 + rid,), max_new_tokens=25))
+    while eng.queue or eng.n_active:
+        eng.step()
+    assert len(eng.spec_fallback_log) >= 1
+    step, depth, rate, off_until = eng.spec_fallback_log[0]
+    assert rate < 1.1 and off_until > step
+    assert eng.decode_launches > 0  # plain stepping took over
+    assert len(eng.completed) == 4
+    assert all(len(r.generated) == 25 for r in eng.completed)
+
+
+def test_spec_respects_capacity_headroom():
+    """Slots too close to cache capacity must fall back to plain stepping
+    rather than draft past the end of the cache."""
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=1, cache_capacity=12,
+                        prefill_threshold=100,
+                        speculative=SpecConfig(ks=(4,)))
+    eng.warmup()
+    eng.submit(Request(rid=0, prompt=(3,), max_new_tokens=12))
+    while eng.queue or eng.n_active:
+        eng.step()
+    r = eng.completed[0]
+    assert len(r.generated) == 12
+    # the tail of the request (near capacity) must have used plain decode
+    assert eng.decode_launches > 0
+
+
+# ---------------------------------------------------------------------------
+# budget-aware admission + speculative K policy
+# ---------------------------------------------------------------------------
+
+
+def test_budget_aware_admission_narrows_under_queue_pressure():
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32)
+    eng.warmup()
+    pol = SLOPolicy(cfg, eng.ctrl, batch_size=2, cache_capacity=32)
+    lats = [pol.est_latency(m) for m in eng.ctrl.modes]
+    mid = (min(lats) + max(lats)) / 2
+    m_empty = pol.choose(mid)
+    m_deep = pol.choose(mid, queue_depths={"interactive": 50, "batch": 50})
+    f_empty = elastic.flops_fraction(cfg, m_empty)
+    f_deep = elastic.flops_fraction(cfg, m_deep)
+    assert f_deep < f_empty, (m_empty.name, m_deep.name)
+    assert pol.last_decision["effective_budget_s"] < mid
+    assert pol.last_decision["queued_interactive"] == 50
+
+
+def test_admission_decisions_logged_per_switch():
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32)
+    eng.warmup()
+    pol = SLOPolicy(cfg, eng.ctrl, batch_size=2, cache_capacity=32)
+    lats = [pol.est_latency(m) for m in eng.ctrl.modes]
+    # oscillating budget forces admission switches through run()'s policy loop
+    budgets = [max(lats) * 10, min(lats) * 0.5, max(lats) * 10]
+    from repro.runtime.serving import poisson_trace
+
+    trace = poisson_trace(9, rate_per_s=1e5, seed=3, vocab=cfg.vocab_size)
+    eng.run(trace, budget_fn=lambda t: budgets[min(int(t * 1e3) % 3, 2)],
+            policy=pol)
+    # fallback: force one deterministic switch if the virtual clock quantized
+    if not eng.admission_decision_log:
+        pol.choose(min(lats) * 0.5, queue_depths={"batch": 9})
+        eng.admission_decision_log.append(dict(step=0, **pol.last_decision))
+    rec = eng.admission_decision_log[0]
+    for key in ("budget_s", "effective_budget_s", "queue_pressure",
+                "queued_interactive", "queued_batch", "mode"):
+        assert key in rec, rec
+
+
+def test_choose_spec_k_shrinks_under_pressure():
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32)
+    eng.warmup()
+    pol = SLOPolicy(cfg, eng.ctrl, batch_size=2, cache_capacity=32)
+    ks = (1, 2, 4, 8)
+    k_idle = pol.choose_spec_k(ks, accept_rate=0.8)
+    k_deep = pol.choose_spec_k(ks, accept_rate=0.8,
+                               queue_depths={"interactive": 100, "batch": 100})
+    assert k_idle == 8
+    assert k_deep <= k_idle
+    # zero acceptance: drafting is pure waste, pick the smallest K
+    assert pol.choose_spec_k(ks, accept_rate=0.0) == 1
+
+
+# ---------------------------------------------------------------------------
+# DistillCycle agreement eval
+# ---------------------------------------------------------------------------
+
+
+def test_eval_modes_agreement_keys_and_bounds():
+    from repro.core.distillcycle import DistillCycle
+    from repro.data import DataConfig
+    from repro.optim import OptimizerConfig
+
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cyc = DistillCycle(cfg, OptimizerConfig(lr=5e-3),
+                       DataConfig(seed=0, global_batch=4, seq_len=16))
+    ev = cyc.eval_modes(params, n_batches=1, with_agreement=True)
+    full = f"d{cfg.n_groups}w100"
+    assert ev[full]["agreement"] == pytest.approx(1.0)  # full vs itself
+    for name, e in ev.items():
+        assert 0.0 <= e["agreement"] <= 1.0
+        assert np.isfinite(e["ce"])
+    # back-compat: default return stays {name: ce float}
+    ev_plain = cyc.eval_modes(params, n_batches=1)
+    assert isinstance(ev_plain[full], float)
+
+
+# ---------------------------------------------------------------------------
+# mesh case (8-device CPU subprocess, same pattern as test_serving_mesh)
+# ---------------------------------------------------------------------------
+
+_MESH_SPEC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import smoke_config
+from repro.launch.mesh import make_serve_mesh
+from repro.models.model import init_params
+from repro.runtime.serving import MeshExecutor, Request, ServingEngine
+from repro.runtime.speculative import SpecConfig
+
+SPECS = [(1, 8), (3, 6), (5, 9), (1, 5)]
+
+def drive(eng):
+    for rid, (plen, n_new) in enumerate(SPECS):
+        eng.submit(Request(rid=rid, prompt=tuple(range(1, 1 + plen)),
+                           max_new_tokens=n_new))
+    while eng.queue or eng.n_active:
+        eng.step()
+    return {r.rid: tuple(r.generated) for r in eng.completed}
+
+for arch in ["tinyllama-1.1b", "mamba2-370m"]:
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    el = ServingEngine(params, cfg, batch_size=3, cache_capacity=32,
+                       prefill_threshold=4, speculative=SpecConfig(ks=(3,)))
+    el.warmup()
+    out_l = drive(el)
+    em = ServingEngine(params, cfg, batch_size=3, cache_capacity=32,
+                       prefill_threshold=4, speculative=SpecConfig(ks=(3,)),
+                       executor=MeshExecutor(make_serve_mesh(2, 4)))
+    em.warmup()
+    assert em.compiles_after_warmup == el.compiles_after_warmup
+    tr0 = em.ctrl.trace_counter["n"]
+    out_m = drive(em)
+    assert out_m == out_l, (arch, out_m, out_l)
+    assert em.ctrl.trace_counter["n"] == tr0, f"{arch}: re-traced"
+    assert em.spec_verify_launches > 0
+print("MESH_SPEC_OK")
+"""
+
+
+def test_mesh_spec_engine_matches_local():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", _MESH_SPEC_SCRIPT],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-2000:])
+    assert "MESH_SPEC_OK" in out.stdout
