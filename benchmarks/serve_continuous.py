@@ -13,6 +13,9 @@ Phases:
   6. speculative      -> a fresh engine drafts at the shallow exit and
      verifies K+1 positions per launch; token-identical to phase-style
      plain greedy serving of the same trace, with acceptance-rate telemetry
+  7. token-tree       -> the same trace under a SpecInfer-style token tree
+     (sibling candidates per level, one ancestor-masked verify launch,
+     path-gather commit); also token-identical to plain serving
 
 Reports sustained tokens/s per phase, mode switch counts, decode launches
 per tick, and verifies the zero-recompiles-after-warmup invariant. Smoke-
@@ -202,6 +205,28 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         if spec_busy > 0 else 0.0,
         "acceptance": spec_eng.spec_telemetry_summary(),
         "fallbacks": len(spec_eng.spec_fallback_log),
+    })
+
+    # token-tree phase: the same trace under a SpecInfer-style token tree —
+    # sibling candidates per level, one ancestor-masked verify launch per
+    # tick committing the accepted root-to-leaf path. Greedy tree serving
+    # must also be token-identical to plain serving.
+    tree_eng, tree_busy = run_spec(SpecConfig(ks=(), trees=((2, 1),)))
+    tree_out = {r.rid: tuple(r.generated) for r in tree_eng.completed}
+    assert tree_out == plain_out, \
+        "tree-speculative greedy serving must be token-identical to plain"
+    assert tree_eng.spec_tree_launches > 0, \
+        "tree phase must exercise the tree verify path"
+    emit(f"serve_continuous/{cfg.name}/speculative_tree", 0.0, {
+        "token_identical": True,
+        "tree": "2x1",
+        "spec_tree_launches": tree_eng.spec_tree_launches,
+        "spec_generated_tokens": tree_eng.spec_generated_tokens,
+        "plain_decode_launches": plain_eng.decode_launches,
+        "speedup_vs_plain": round(plain_busy / tree_busy, 2)
+        if tree_busy > 0 else 0.0,
+        "acceptance": tree_eng.spec_telemetry_summary(),
+        "fallbacks": len(tree_eng.spec_fallback_log),
     })
 
     n_switches = len(slo_switches)

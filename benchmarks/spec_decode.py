@@ -8,12 +8,17 @@ end to end on the bigram smoke task:
      full model — random init drafts are rejected and prove nothing),
   2. report each path's offline top-1 agreement with the full model (the
      acceptance-rate predictor from ``DistillCycle.eval_modes``),
-  3. serve the SAME Poisson trace greedy with plain per-token stepping and
-     with speculative decoding at each draft length K, asserting the token
-     streams are identical, and
+  3. serve the SAME Poisson trace greedy with plain per-token stepping, with
+     linear speculative decoding at each draft length K, and with token-tree
+     speculation at each topology, asserting every token stream is identical,
   4. report acceptance rate, generated tokens per verify launch (per slot:
      the per-request decode-launch reduction vs the one-token baseline, must
-     exceed 1), launch counts, and wall-clock speedup.
+     exceed 1), launch counts, and wall-clock speedup, and
+  5. the HEADLINE comparison: tokens-per-verify-launch for linear K vs tree
+     topologies at EQUAL node budget (a tree drafting N candidate nodes is
+     compared against linear K = N) — sibling candidates recover drafts a
+     single chain loses at the first divergence, so the best tree must beat
+     the budget-matched linear K.
 
   PYTHONPATH=src python benchmarks/spec_decode.py [arch] [n_requests]
 """
@@ -30,7 +35,7 @@ from repro.data import DataConfig
 from repro.models.model import init_params
 from repro.optim import OptimizerConfig
 from repro.runtime.serving import Request, ServingEngine, poisson_trace
-from repro.runtime.speculative import SpecConfig
+from repro.runtime.speculative import SpecConfig, tree_node_budget
 
 
 def _serve(params, cfg, trace, *, speculative, batch=4, capacity=64):
@@ -49,9 +54,14 @@ def _serve(params, cfg, trace, *, speculative, batch=4, capacity=64):
 
 
 def run(arch: str = "tinyllama-1.1b", n_requests: int = 12,
-        train_steps: int = 10, ks=(2, 4)) -> None:
+        train_steps: int = 10, ks=(2, 4),
+        trees=((2, 2), (2, 1, 1))) -> None:
     cfg = smoke_config(arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
+    trees = tuple(tuple(int(b) for b in t) for t in trees)
+    budgets = sorted({tree_node_budget(t) for t in trees})
+    # budget-matched linear baselines ride along for the headline comparison
+    all_ks = sorted(set(ks) | set(budgets))
 
     # 1. DistillCycle: align the exits with the full model (paper Alg. 2)
     dcfg = DistillCycleConfig(epochs_per_stage=1, steps_per_epoch=train_steps,
@@ -82,9 +92,10 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 12,
              "busy_s": round(base_busy, 3),
          })
 
-    # 4. speculative serving at each compiled K — token-identical, fewer
-    # launches per token
-    for k in sorted(ks):
+    # 4a. linear speculative serving at each compiled K — token-identical,
+    # fewer launches per token
+    linear_tpl = {}
+    for k in all_ks:
         spec, spec_busy = _serve(params, cfg, trace,
                                  speculative=SpecConfig(ks=(k,)))
         spec_tokens = {r.rid: tuple(r.generated) for r in spec.completed}
@@ -95,6 +106,7 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 12,
         assert t["tokens_per_slot_launch"] > 1.0, \
             (f"K={k}: accepted tokens per verify launch must beat the "
              f"one-token baseline, got {t['tokens_per_slot_launch']}")
+        linear_tpl[k] = t["tokens_per_slot_launch"]
         emit(f"spec_decode/{cfg.name}/k{k}",
              spec_busy / max(n_tokens, 1) * 1e6, {
                  "path": path,
@@ -108,6 +120,49 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 12,
                  if spec_busy > 0 else 0.0,
                  "token_identical": True,
              })
+
+    # 4b. token-tree speculation at each topology — also token-identical
+    tree_tpl = {}
+    for br in trees:
+        name = "x".join(str(b) for b in br)
+        spec, spec_busy = _serve(params, cfg, trace,
+                                 speculative=SpecConfig(ks=(), trees=(br,)))
+        spec_tokens = {r.rid: tuple(r.generated) for r in spec.completed}
+        assert spec_tokens == base_tokens, \
+            f"tree {br}: speculative greedy output diverged from the baseline"
+        tel = spec.spec_telemetry_summary()
+        (path, t), = tel.items()
+        tree_tpl[br] = t["tokens_per_slot_launch"]
+        emit(f"spec_decode/{cfg.name}/t{name}",
+             spec_busy / max(n_tokens, 1) * 1e6, {
+                 "path": path,
+                 "node_budget": tree_node_budget(br),
+                 "accept_rate": t["accept_rate"],
+                 "tokens_per_verify_launch": t["tokens_per_slot_launch"],
+                 "tree_verify_launches": spec.spec_tree_launches,
+                 "plain_decode_launches": spec.decode_launches,
+                 "speedup_vs_baseline": round(base_busy / spec_busy, 2)
+                 if spec_busy > 0 else 0.0,
+                 "token_identical": True,
+             })
+
+    # 5. headline: linear K vs tree topologies at EQUAL node budget
+    for budget in budgets:
+        cands = {br: tpl for br, tpl in tree_tpl.items()
+                 if tree_node_budget(br) == budget}
+        best_br = max(cands, key=cands.get)
+        best = cands[best_br]
+        lin = linear_tpl[budget]
+        assert best > lin, \
+            (f"node budget {budget}: best tree {best_br} must beat linear "
+             f"K={budget} on tokens/verify-launch, got {best} vs {lin}")
+        emit(f"spec_decode/{cfg.name}/budget{budget}_tree_vs_linear", 0.0, {
+            "node_budget": budget,
+            "best_tree": "x".join(str(b) for b in best_br),
+            "tree_tokens_per_verify_launch": best,
+            "linear_tokens_per_verify_launch": lin,
+            "tree_advantage": round(best / lin, 3),
+        })
 
 
 if __name__ == "__main__":

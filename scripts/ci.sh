@@ -15,6 +15,13 @@
 #   scripts/ci.sh --spec-smoke   # additionally run the speculative-decoding
 #                                # tests + the spec_decode benchmark (tiny
 #                                # DistillCycle train -> acceptance > 0)
+#   scripts/ci.sh --tree-smoke   # additionally run the token-tree
+#                                # speculation shard: property harness +
+#                                # sampling tests (greedy tree == plain,
+#                                # zero re-trace, incl. a 2x4/8x1 mesh
+#                                # subprocess case) + the spec_decode
+#                                # tree-vs-linear benchmark at equal node
+#                                # budget
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,14 +32,35 @@ TIMEOUT="${CI_TIMEOUT:-1800}"
 BENCH_SMOKE=0
 MESH_SMOKE=0
 SPEC_SMOKE=0
+TREE_SMOKE=0
 for arg in "$@"; do
     case "$arg" in
         --bench-smoke) BENCH_SMOKE=1 ;;
         --mesh-smoke) MESH_SMOKE=1 ;;
         --spec-smoke) SPEC_SMOKE=1 ;;
+        --tree-smoke) TREE_SMOKE=1 ;;
         *) echo "ci.sh: unknown argument '$arg'" >&2; exit 2 ;;
     esac
 done
+
+if [ "$TREE_SMOKE" -eq 1 ]; then
+    echo "CI: tree-smoke shard (token-tree speculation)"
+    TREE_TIMEOUT="${CI_TREE_TIMEOUT:-1200}"
+    # the property harness includes the greedy-tree==plain + zero-re-trace
+    # engine tests and the 2x4/8x1 mesh subprocess case
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TREE_TIMEOUT" \
+        python -m pytest -q tests/test_tree_speculative.py tests/test_sampling.py; then
+        echo "CI: FAIL (token-tree tests)"
+        exit 1
+    fi
+    # tree vs linear at equal node budget (asserts the tree wins)
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$TREE_TIMEOUT" \
+        python -c "from benchmarks import spec_decode; spec_decode.run(n_requests=8, train_steps=8, ks=(2,), trees=((2,1),))"; then
+        echo "CI: FAIL (spec_decode tree bench-smoke)"
+        exit 1
+    fi
+    echo "CI: tree-smoke OK"
+fi
 
 if [ "$SPEC_SMOKE" -eq 1 ]; then
     echo "CI: spec-smoke shard (speculative decoding)"

@@ -243,7 +243,10 @@ def make_serve_controller(params, cfg: ModelConfig,
     registers the self-speculative executables: for every serving depth with
     a shallower exit available, ONE draft executable per (draft_depth, K)
     — shared by every serving depth drafting at that exit — and ONE fused
-    verify+accept+commit executable per (depth, K). Their compile keys live
+    verify+accept+commit executable per (depth, K); token-tree topologies in
+    ``SpecConfig.trees`` likewise compile one tree-draft per (draft_depth,
+    tree) and one tree-verify per (depth, tree), keyed by the static
+    branching schedule. Their compile keys live
     in the same table as the per-depth decode keys, so ``stats['compiles']``
     and the shared ``trace_counter`` measure the whole serving surface:
     after warmup, arbitrary (draft_depth, K) switching, greedy/sampled
@@ -349,6 +352,50 @@ def make_serve_controller(params, cfg: ModelConfig,
             return lambda: jax.jit(step, in_shardings=v_in,
                                    out_shardings=v_out, donate_argnums=(1,))
 
+        def tree_draft_factory(draft_depth: int, branching):
+            fn = _spec.make_tree_draft_step(cfg, draft_depth, branching,
+                                            top_k)
+
+            def step(p, cache, tok0, active, keys, temperature, step_ct):
+                trace_counter["n"] += 1  # executes at trace time only
+                if mesh is None:
+                    return fn(p, cache, tok0, active, keys, temperature,
+                              step_ct)
+                # tree drafting scores (B, n_nodes) multi-position passes
+                # internally, so it needs the VERIFY pins, not the one-token
+                # decode pins (same XLA CPU by-head bug class)
+                with _sh.activation_sharding(mesh, vspecs):
+                    return fn(p, cache, tok0, active, keys, temperature,
+                              step_ct)
+
+            if mesh is None:
+                return lambda: jax.jit(step)
+            d_in = (param_shardings, cache_shardings, rep, active_sh, rep,
+                    rep, rep)
+            return lambda: jax.jit(step, in_shardings=d_in,
+                                   out_shardings=(rep, rep))
+
+        def tree_verify_factory(depth: int, branching):
+            fn = _spec.make_tree_verify_step(cfg, depth, branching, top_k)
+
+            def step(p, cache, toks, dlogits, active, keys, temperature,
+                     step_ct):
+                trace_counter["n"] += 1  # executes at trace time only
+                if mesh is None:
+                    return fn(p, cache, toks, dlogits, active, keys,
+                              temperature, step_ct)
+                with _sh.activation_sharding(mesh, vspecs):
+                    return fn(p, cache, toks, dlogits, active, keys,
+                              temperature, step_ct)
+
+            if mesh is None:
+                return lambda: jax.jit(step, donate_argnums=(1,))
+            v_in = (param_shardings, cache_shardings, rep, rep, active_sh,
+                    rep, rep, rep)
+            v_out = (rep, rep, cache_shardings)
+            return lambda: jax.jit(step, in_shardings=v_in,
+                                   out_shardings=v_out, donate_argnums=(1,))
+
         draft_keys = sorted({(e.draft_depth, k)
                              for e in plan.values() for k in e.ks})
         for dd, k in draft_keys:
@@ -358,6 +405,15 @@ def make_serve_controller(params, cfg: ModelConfig,
             for k in e.ks:
                 ctrl.register_aux(_spec.verify_compile_key(e.depth, k),
                                   verify_factory(e.depth, k))
+        tree_draft_keys = sorted({(e.draft_depth, br)
+                                  for e in plan.values() for br in e.trees})
+        for dd, br in tree_draft_keys:
+            ctrl.register_aux(_spec.tree_draft_compile_key(dd, br),
+                              tree_draft_factory(dd, br))
+        for e in plan.values():
+            for br in e.trees:
+                ctrl.register_aux(_spec.tree_verify_compile_key(e.depth, br),
+                                  tree_verify_factory(e.depth, br))
     return ctrl
 
 

@@ -93,6 +93,14 @@ def main(argv=None):
                     help="speculative decoding draft length K (0 = off): "
                          "shallow DistillCycle exits draft K tokens, one "
                          "full-depth launch verifies K+1 positions")
+    ap.add_argument("--spec-tree", default="",
+                    help="token-tree speculative decoding branching "
+                         "schedule, e.g. 2x2x1 (level l: every frontier "
+                         "node gets that many sibling candidates); one "
+                         "full-depth launch verifies the whole tree and "
+                         "commits the accepted root-to-leaf path. May be "
+                         "combined with --spec-k (the SLO policy switches "
+                         "between the compiled shapes at runtime)")
     ap.add_argument("--spec-draft-depth", type=int, default=0,
                     help="draft exit depth in layer groups (0 = deepest "
                          "exit shallower than each serving depth)")
@@ -106,9 +114,22 @@ def main(argv=None):
     params = init_params(key, cfg)
     modes = cfg.elastic.modes(cfg.n_groups)
 
+    spec_trees = ()
+    if args.spec_tree:
+        try:
+            branching = tuple(int(b) for b in
+                              args.spec_tree.lower().split("x"))
+        except ValueError:
+            branching = ()
+        if not branching or any(b < 1 for b in branching):
+            ap.error(f"--spec-tree wants a branching schedule of levels "
+                     f">= 1 like 2x2x1, got {args.spec_tree!r}")
+        spec_trees = (branching,)
     per_req = max(4, args.tokens // (2 * args.batch))
     n_requests = max(args.batch, (args.tokens + per_req - 1) // per_req)
-    capacity = per_req + 8 + args.spec_k  # drafted-window headroom
+    # drafted-window headroom: linear K or the deepest tree level count
+    draft_depth_max = max([args.spec_k] + [len(t) for t in spec_trees])
+    capacity = per_req + 8 + draft_depth_max
 
     executor = None
     dp = tp = 1
@@ -116,9 +137,10 @@ def main(argv=None):
         dp, tp = _parse_mesh(args.mesh)
         executor = MeshExecutor(make_serve_mesh(dp, tp))
     speculative = None
-    if args.spec_k > 0:
+    if args.spec_k > 0 or spec_trees:
         speculative = SpecConfig(
-            ks=(args.spec_k,),
+            ks=(args.spec_k,) if args.spec_k > 0 else (),
+            trees=spec_trees,
             draft_depth=args.spec_draft_depth or None,
             top_k=args.top_k)
     engine = ServingEngine(params, cfg, batch_size=args.batch,

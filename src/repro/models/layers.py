@@ -263,11 +263,20 @@ def _gqa_out(w, v, cfg: ModelConfig):
     return o.reshape(B, o.shape[1], cfg.n_heads, cfg.head_dim)
 
 
-def attention_full(q, k, v, cfg: ModelConfig, q_pos, k_pos, causal=True):
-    """Plain einsum attention (used for short sequences)."""
+def attention_full(q, k, v, cfg: ModelConfig, q_pos, k_pos, causal=True,
+                   bias=None):
+    """Plain einsum attention (used for short sequences).
+
+    ``bias`` is an optional additive (Sq, Sk) f32 term on top of the
+    position mask — the token-tree verify path uses it to restrict each
+    tree node's attention to its ancestors (position masking alone cannot
+    separate siblings at equal depth).
+    """
     s = _gqa_scores(q, k, cfg)
     mask = _attn_mask(q_pos, k_pos, causal, cfg.sliding_window)
     s = s + mask[:, None, None] if mask.ndim == 3 else s + mask
+    if bias is not None:
+        s = s + bias
     w = jax.nn.softmax(s, axis=-1)
     return _gqa_out(w, v, cfg).astype(q.dtype)
 
@@ -493,7 +502,8 @@ def _cache_kpos(pos, n_slots: int, window: int):
     return jnp.where(idx < pos[:, None], idx, -10**9)
 
 
-def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None):
+def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None,
+               node_depth=None, tree_bias=None):
     """Speculative verify attention: score S positions in one pass.
 
     x: (B, S, d) — embeddings of the last committed token followed by S-1
@@ -507,6 +517,13 @@ def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None):
     where attending BEFORE any write avoids clobbering entries that later
     (rejected) positions would have rolled over.
 
+    Token-tree verify: ``node_depth`` (S,) static ints map each position to
+    its tree depth (absolute position ``pos + depth``) and ``tree_bias``
+    (S, S) is the static ancestor mask (0 ancestor-or-self / -inf) applied
+    over the new-KV block — position masking alone cannot separate sibling
+    branches sitting at the same depth. Default (both None) is the linear
+    window ``pos .. pos+S-1``.
+
     Returns (out (B, S, d), {"k": k_new, "v": v_new} with (B, S, KV, hd)).
     """
     dt = x.dtype
@@ -514,7 +531,9 @@ def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None):
     a_q = active.get("q_dim") if active else None
     a_kv = active.get("kv_dim") if active else None
     pos = jnp.asarray(pos, jnp.int32)
-    qpos = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B, S)
+    offs = (jnp.arange(S, dtype=jnp.int32) if node_depth is None
+            else jnp.asarray(node_depth, jnp.int32))
+    qpos = pos[:, None] + offs[None, :]  # (B, S)
     # pin BEFORE rope as well as after: at (B, S>1) decode shapes the XLA CPU
     # partitioner mis-lowers rope over projection-propagated column sharding
     # (wrong values, not just slow — same bug class decode_specs documents)
@@ -556,6 +575,14 @@ def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None):
     k_ext = jnp.concatenate([kc, k_att], axis=1)
     v_ext = jnp.concatenate([vc, v_att], axis=1)
     kpos = jnp.concatenate([kpos_c, qpos], axis=1)
-    out = attention_full(q, k_ext, v_ext, cfg, qpos, kpos, causal=True)
+    bias = None
+    if tree_bias is not None:
+        # cache columns stay position-masked only; new-KV columns get the
+        # ancestor mask (sibling/cousin nodes are invisible to each other)
+        bias = jnp.concatenate(
+            [jnp.zeros((S, kc.shape[1]), jnp.float32),
+             jnp.asarray(tree_bias, jnp.float32)], axis=1)
+    out = attention_full(q, k_ext, v_ext, cfg, qpos, kpos, causal=True,
+                         bias=bias)
     out = morph_proj(out.reshape(B, S, cfg.q_dim), params["wo"], active_k=a_q)
     return out, {"k": k_new, "v": v_new}

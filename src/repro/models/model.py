@@ -481,12 +481,15 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int]
 
 
 def _group_verify(group_params, group_cache, h, pos, cfg: ModelConfig,
-                  active=None):
+                  active=None, tree=None):
     """One period of layers over S speculative positions (read-only cache).
 
     Mirrors ``_group_decode`` but scores ``h`` (B, S, d) at absolute positions
     ``pos .. pos+S-1`` without writing the cache; per-layer write candidates
     (new KV, per-step SSM state/tails) are returned for ``commit_verify``.
+    With ``tree`` (a static topology — see ``verify_tree``) the S positions
+    are the flattened token tree instead of a linear window: attention gets
+    the ancestor-mask bias, the SSM recurrence follows parent pointers.
     """
     cand = {}
     for p in range(cfg.period):
@@ -496,12 +499,18 @@ def _group_verify(group_params, group_cache, h, pos, cfg: ModelConfig,
         hn = L.apply_norm(lp["norm1"], h, cfg)
         if kind == "attn":
             self_keys = {k: v for k, v in cp.items() if not k.startswith("cross_")}
-            mix, c = L.mha_verify(lp["attn"], hn, self_keys, pos, cfg,
-                                  active=active)
+            mix, c = L.mha_verify(
+                lp["attn"], hn, self_keys, pos, cfg, active=active,
+                node_depth=None if tree is None else tree.depths,
+                tree_bias=None if tree is None else tree.ancestor_bias)
         else:
             self_keys = {k: cp[k] for k in ("conv_x", "conv_bc", "state")}
-            mix, c = SSM.ssm_verify_step(lp["ssm"], hn, self_keys, cfg,
-                                         active=active)
+            if tree is None:
+                mix, c = SSM.ssm_verify_step(lp["ssm"], hn, self_keys, cfg,
+                                             active=active)
+            else:
+                mix, c = SSM.ssm_verify_tree(lp["ssm"], hn, self_keys, cfg,
+                                             tree, active=active)
         cand[f"pos{p}"] = c
         h = h + mix
         if cfg.layer_is_moe(p):
@@ -575,7 +584,73 @@ def verify_step(params, cache, tokens, cfg: ModelConfig, *,
     return logits, {"stack": cands}
 
 
-def commit_verify(cache, pending, n_accepted, cfg: ModelConfig) -> Cache:
+def verify_tree(params, cache, tokens, cfg: ModelConfig, *, tree,
+                depth: Optional[int] = None, active=None):
+    """Token-tree verifier: score a whole candidate tree in ONE pass.
+
+    ``tokens`` is (B, N): the flattened token tree in BFS level order, node 0
+    the last committed token of each slot, every other node a drafted
+    candidate continuing its parent. ``tree`` is the static topology (duck-
+    typed — see ``runtime.speculative.TreeTopology``): ``depths`` map nodes
+    to absolute positions ``pos + depth``, ``ancestor_bias`` restricts each
+    node's attention among the new keys to its own root path (position
+    masking cannot separate sibling branches at equal depth), ``paths`` /
+    ``parents`` drive the SSM conv windows and state recurrence down each
+    branch. The per-slot cache is read, never written — the pass is side-
+    effect free, so ANY root-to-leaf path can be committed afterwards.
+
+    Returns ``(logits, pending)``: ``logits`` (B, N, Vp) where row j is the
+    model's next-token distribution after consuming the root-to-j path
+    (exactly what chained ``decode_step`` calls down that branch would
+    produce), and ``pending`` the per-NODE write candidates — gather the
+    accepted path with ``commit_verify(..., path_nodes=...)`` to advance
+    each slot by a traced ``n_accepted + 1`` tokens.
+
+    ``depth`` / ``active`` match ``decode_step``. The same executable also
+    powers non-destructive tree DRAFTING: scored at a shallow exit depth, it
+    expands the tree level by level without ever copying the committed cache
+    into a scan carry.
+    """
+    if cfg.is_encdec or cfg.frontend:
+        raise NotImplementedError("verify_tree supports token-only decoders")
+    depth = depth if depth is not None else cfg.n_groups
+    dt = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]
+    if pos.ndim != 1:
+        raise ValueError("verify_tree needs a per-slot cache (pos of shape (B,))")
+    B, N = tokens.shape
+    if N != tree.n_nodes:
+        raise ValueError(f"tokens carry {N} nodes, topology has {tree.n_nodes}")
+    if cfg.sliding_window and tree.n_levels + 1 > cfg.sliding_window:
+        # commit_verify's rolling scatter would alias buffer slots
+        raise ValueError(f"tree of depth {tree.n_levels} exceeds the sliding "
+                         f"window ({cfg.sliding_window}); bound the tree "
+                         f"depth at window - 1")
+    h = params["embed"][tokens].astype(dt)
+    if pos_kind(cfg) == "sinusoidal":
+        qpos = pos[:, None] + jnp.asarray(tree.depths, jnp.int32)[None, :]
+        h = h + L.sinusoidal_pos(qpos, cfg.d_model).astype(dt)
+
+    stack_p = jax.tree_util.tree_map(lambda a: a[:depth], params["stack"])
+    stack_c = jax.tree_util.tree_map(lambda a: a[:depth], cache["stack"])
+
+    def body(h, xs):
+        gp, gc = xs
+        h, cand = _group_verify(gp, gc, h, pos, cfg, active=active, tree=tree)
+        h = _sh.constrain(h, "residual")
+        return h, cand
+
+    h, cands = jax.lax.scan(body, h, (stack_p, stack_c))
+
+    norm_p = params["final_norm"]
+    if depth < cfg.n_groups:
+        norm_p = params.get("exit_norms", {}).get(f"g{depth}", norm_p)
+    logits = _logits(params, h, cfg, norm_p)
+    return logits, {"stack": cands}
+
+
+def commit_verify(cache, pending, n_accepted, cfg: ModelConfig,
+                  path_nodes=None) -> Cache:
     """Advance each slot by ``n_accepted + 1`` tokens from a verify pass.
 
     ``pending`` comes from ``verify_step`` over S positions; ``n_accepted``
@@ -588,11 +663,28 @@ def commit_verify(cache, pending, n_accepted, cfg: ModelConfig) -> Cache:
     (exact one-hot selection). Cache groups beyond the verify depth are
     untouched. Commit is pure jnp over traced operands: one executable
     serves every acceptance pattern.
+
+    ``path_nodes`` generalizes the commit to token trees: a traced (B, L)
+    array of ``verify_tree`` node indices along each slot's accepted
+    root-to-leaf path (entry 0 the root, entries past ``n_accepted`` any
+    valid pad). Every pending leaf is first gathered along its node axis by
+    the path — after which the accepted branch IS a linear window and the
+    masked scatter / one-hot select below applies unchanged.
     """
     pos = cache["pos"]  # (B,) committed-token counts before this launch
     n_accepted = jnp.asarray(n_accepted, jnp.int32)
     stack = cache["stack"]
     pend = pending["stack"]
+    if path_nodes is not None:
+        path = jnp.asarray(path_nodes, jnp.int32)  # (B, L)
+
+        def gather_path(leaf):  # (d, B, N, ...) -> (d, B, L, ...)
+            idx = path.reshape((1,) + path.shape + (1,) * (leaf.ndim - 3))
+            idx = jnp.broadcast_to(idx, (leaf.shape[0],) + path.shape
+                                   + leaf.shape[3:])
+            return jnp.take_along_axis(leaf, idx, axis=2)
+
+        pend = jax.tree_util.tree_map(gather_path, pend)
     first = jax.tree_util.tree_leaves(pend)[0]
     d, B, S = first.shape[0], first.shape[1], first.shape[2]
     j = jnp.arange(S, dtype=jnp.int32)

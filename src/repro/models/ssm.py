@@ -332,3 +332,89 @@ def ssm_verify_step(params, x, cache, cfg: ModelConfig, active=None):
         y = apply_norm_masked(norm, y.astype(dt_), cfg, a_in)
     out = morph_proj(y, params["out_proj"], active_k=a_in)
     return out, {"conv_x": x_tails, "conv_bc": bc_tails, "state": states}
+
+
+def _path_conv(u, w, b, tail, paths):
+    """Per-node causal conv along each tree node's ancestor path.
+
+    u: (B, N, C) per-node conv inputs in tree order; ``paths`` is the static
+    tuple of root-to-node index paths. For node q the conv consumes the
+    cached tail (B, K-1, C) followed by the inputs along q's path — exactly
+    the window ``depth(q) + 1`` chained ``_causal_conv`` decode steps down
+    that branch would have seen. Returns (y (B, N, C) conv outputs at each
+    node, tails (B, N, K-1, C) the per-node post-consume tails).
+    """
+    K = w.shape[1]
+    ys, tails = [], []
+    for path in paths:
+        ext = jnp.concatenate([tail, u[:, list(path), :]], axis=1)
+        win = ext[:, -K:, :]  # len(ext) = K-1 + depth+1 >= K always
+        y = jnp.einsum("bkc,ck->bc", win.astype(jnp.float32),
+                       w.astype(jnp.float32))
+        ys.append((y + b.astype(jnp.float32)).astype(u.dtype))
+        tails.append(ext[:, -(K - 1):, :])
+    return jnp.stack(ys, axis=1), jnp.stack(tails, axis=1)
+
+
+def ssm_verify_tree(params, x, cache, cfg: ModelConfig, tree, active=None):
+    """Token-tree verify pass: score all tree nodes in one launch.
+
+    Same math as chaining ``ssm_decode_step`` down every root-to-leaf branch
+    (conv windows and recurrent state both follow the ancestor path, read
+    from the committed cache, never written), evaluated for the whole tree
+    at once: node q's state is ``decay_q * state_parent(q) + upd_q`` with
+    the root chaining off ``cache["state"]``. ``tree`` carries the static
+    topology (``paths``, ``parents`` — see runtime.speculative.TreeTopology).
+
+    Returns (y (B, N, d), candidates) with per-node ``conv_x`` / ``conv_bc``
+    tails (B, N, K-1, C) and ``state`` (B, N, nh, hp, n) — entry q is the
+    value AFTER consuming the path ending at node q, so a path-index gather
+    plus ``commit_verify``'s one-hot select lands the accepted branch.
+    """
+    dt_ = x.dtype
+    B, N, _ = x.shape
+    nh = params["A_log"].shape[0]
+    hp = cfg.ssm_head_dim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    a_in = active.get("d_inner") if active else None
+    xs = constrain(morph_proj(x, params["w_x"], active_n=a_in), "decode_ssm")
+    z = constrain(morph_proj(x, params["w_z"], active_n=a_in), "decode_ssm")
+    bc = matmul(x, params["w_bc"], dt_)
+    dt_raw = morph_proj(x, params["w_dt"],
+                        active_n=active.get("ssm_heads") if active else None)
+
+    xs_conv, x_tails = _path_conv(xs, params["conv_x_w"][: nh * hp],
+                                  params["conv_x_b"][: nh * hp],
+                                  cache["conv_x"], tree.paths)
+    bc_conv, bc_tails = _path_conv(bc, params["conv_bc_w"],
+                                   params["conv_bc_b"], cache["conv_bc"],
+                                   tree.paths)
+
+    xs_f = jax.nn.silu(xs_conv.astype(jnp.float32))  # (B, N, d_in)
+    bc_f = jax.nn.silu(bc_conv.astype(jnp.float32))
+    B_ = jnp.repeat(bc_f[..., : g * n].reshape(B, N, g, n), nh // g, axis=2)
+    C_ = jnp.repeat(bc_f[..., g * n :].reshape(B, N, g, n), nh // g, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B, N, nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs_f.reshape(B, N, nh, hp)
+
+    decay = jnp.exp(dt * A)  # (B, N, h)
+    states = []
+    for node, par in enumerate(tree.parents):
+        prev = cache["state"] if par < 0 else states[par]
+        upd = jnp.einsum("bhp,bhn->bhpn",
+                         xh[:, node] * dt[:, node][..., None], B_[:, node])
+        states.append(prev * decay[:, node][..., None, None] + upd)
+    states = jnp.stack(states, axis=1)  # (B, N, h, p, n)
+    ys = jnp.einsum("bshpn,bshn->bshp", states, C_)
+
+    y = ys + params["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(B, N, nh * hp) * jax.nn.silu(z.astype(jnp.float32))
+    norm = {"scale": params["ssm_norm"]["scale"][: nh * hp]}
+    if a_in is None:
+        y = apply_norm(norm, y.astype(dt_), cfg)
+    else:
+        y = apply_norm_masked(norm, y.astype(dt_), cfg, a_in)
+    out = morph_proj(y, params["out_proj"], active_k=a_in)
+    return out, {"conv_x": x_tails, "conv_bc": bc_tails, "state": states}

@@ -303,12 +303,18 @@ def verify_specs(cfg: ModelConfig, mesh: Mesh, policy: str,
 
     Same constraint names as ``decode_specs`` but pinned REPLICATED over the
     model axis: the XLA CPU partitioner mis-lowers the extended-KV attention
-    at (B, K+1, ...) shapes when by-head sharding propagates into the group
+    at (B, S > 1, ...) shapes when by-head sharding propagates into the group
     scan (the same bug class ``decode_specs`` works around for one-token
-    decode, observed as wrong logits rather than a crash). Verify activations
-    are K+1 tokens — KB-scale — so replicating their math costs one small
-    all-gather per projection while the weights stay sharded; the cache
-    commit keeps the sharded serving-cache layout via the jit out_shardings.
+    decode, observed as wrong logits rather than a crash). This covers every
+    multi-position speculative shape: linear verify windows (B, K+1), token
+    trees (B, n_nodes) — whose ancestor-masked attention and per-node SSM
+    recurrence hit the same mis-lowering — and the tree DRAFT pass, which
+    runs (B, n_nodes) verify_tree scoring internally and must be compiled
+    under these pins rather than the one-token decode ones. Verify
+    activations are a handful of tokens — KB-scale — so replicating their
+    math costs one small all-gather per projection while the weights stay
+    sharded; the cache commit keeps the sharded serving-cache layout via the
+    jit out_shardings.
     """
     d: Any = data_axes(mesh) or None
     if policy == "serve_2d":

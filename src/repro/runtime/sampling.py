@@ -37,8 +37,12 @@ def fold_step(keys: jnp.ndarray, step) -> jnp.ndarray:
 
 
 def top_k_mask(logits: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Mask all but the k largest logits per row to -inf (k=0: no-op)."""
-    if not k:
+    """Mask all but the k largest logits per row to -inf.
+
+    ``k = 0`` and ``k >= vocab`` are both no-ops (keeping every token is
+    already the untruncated distribution; ``lax.top_k`` would reject the
+    oversized k)."""
+    if not k or k >= logits.shape[-1]:
         return logits
     kth = jax.lax.top_k(logits, k)[0][..., -1:]
     return jnp.where(logits >= kth, logits, -jnp.inf)

@@ -47,19 +47,28 @@ the TPU analogue of that story end-to-end:
   through the decode path. Prompt-consume latency is tracked separately
   (``prefill_s`` / ``prefill_prompt_tokens``).
 
-* **Self-speculative decoding.** With ``speculative=SpecConfig(...)`` each
-  depth group that has a shallower DistillCycle exit drafts K tokens at that
-  exit (one cheap launch; the committed cache is read, never written) and
-  verifies all K+1 positions in ONE full-depth launch that also commits the
-  accepted prefix device-side (``runtime.speculative``). The emitted stream
-  is distribution-identical to plain stepping — exactly token-identical
-  under greedy — while accepted drafts turn one verify launch into several
-  tokens. Acceptance telemetry (``spec_telemetry``: accept rate, accepted
-  and tokens per launch) feeds the SLO policy's per-class (draft_depth, K)
-  choice, and a rolling-window acceptance collapse falls the group back to
-  plain stepping for a cooloff (``spec_fallback_log``). Slots still feeding
-  multi-token prompts tick plainly until the group is all-generative;
-  mixed widths ride speculative launches unchanged.
+* **Self-speculative decoding — linear and token-tree drafts.** With
+  ``speculative=SpecConfig(...)`` each depth group that has a shallower
+  DistillCycle exit drafts candidates at that exit (one cheap launch; the
+  committed cache is read, never written) and verifies every candidate in
+  ONE full-depth launch that also commits the accepted tokens device-side
+  (``runtime.speculative``). Linear drafts chain K tokens; token-tree
+  drafts (``SpecConfig.trees``, SpecInfer-style static branching schedules
+  like ``(3, 2, 1)``) sample sibling candidates per level so one verify
+  launch scores many continuations at once — ancestor-mask attention over
+  the flattened tree, per-node SSM state candidates, and a traced
+  path-index gather committing the accepted root-to-leaf path. Tree
+  drafting is NON-destructive: levels are scored by read-only
+  ``verify_tree`` passes at the draft depth, so no transient cache copy
+  rides a scan carry. The emitted stream is distribution-identical to
+  plain stepping — exactly token-identical under greedy — while accepted
+  drafts turn one verify launch into several tokens. Acceptance telemetry
+  (``spec_telemetry``: accept rate, accepted and tokens per launch) feeds
+  the SLO policy's per-class draft-shape choice (``choose_tree``: tree vs
+  linear K vs plain), and a rolling-window acceptance collapse falls the
+  group back to plain stepping for a cooloff (``spec_fallback_log``).
+  Slots still feeding multi-token prompts tick plainly until the group is
+  all-generative; mixed widths ride speculative launches unchanged.
 
 * **SLO-driven morph policy.** ``SLOPolicy`` picks the widest/deepest mode
   whose predicted step latency fits the current latency budget. The
@@ -106,6 +115,11 @@ from repro.runtime import sampling
 from repro.runtime.speculative import (SpecConfig, SpecTelemetry,
                                        draft_compile_key,
                                        expected_tokens_per_launch,
+                                       expected_tokens_per_tree_launch,
+                                       per_candidate_accept_rate,
+                                       tree_draft_compile_key,
+                                       tree_node_budget,
+                                       tree_verify_compile_key,
                                        verify_compile_key)
 
 
@@ -294,6 +308,49 @@ class SLOPolicy:
                 best = k
         return best
 
+    def choose_tree(self, trees: Sequence[Tuple[int, ...]],
+                    ks: Sequence[int], accept_rate: float,
+                    queue_depths: Optional[Dict[str, int]] = None,
+                    min_accept_rate: float = 0.05) -> Tuple[str, object]:
+        """Pick the draft shape for the next speculative launches: a token
+        tree from the compiled ``trees`` table, a linear K from ``ks``, or
+        plain stepping.
+
+        Every candidate is ranked by expected tokens per verify launch at
+        the measured acceptance rate (``expected_tokens_per_tree_launch``
+        generalizes the linear estimate: a level with b sibling candidates
+        survives with prob 1 - (1-a)^b) minus a queue-pressure-scaled node
+        cost — under backlog, wide trees burn verify FLOPs queued requests
+        could have used, so pressure shrinks the chosen tree exactly as it
+        shrinks linear K. When acceptance collapses below
+        ``min_accept_rate`` every draft shape is expected waste: the policy
+        falls back to ``("plain", None)`` and the engine's cooloff/retune
+        loop re-probes later.
+
+        Returns ``("tree", branching)``, ``("linear", k)``, or
+        ``("plain", None)``.
+        """
+        if accept_rate < min_accept_rate:
+            return ("plain", None)
+        cands: List[Tuple[str, object, int]] = \
+            [("linear", k, k) for k in sorted(set(ks))] + \
+            [("tree", tuple(br), tree_node_budget(br)) for br in trees]
+        if not cands:
+            return ("plain", None)
+        pressure = self._queue_pressure(queue_depths)
+        cut = self.queue_gamma * pressure / (1.0 + self.queue_gamma * pressure)
+        max_nodes = max(nodes for _, _, nodes in cands)
+
+        def value(kind, shape, nodes):
+            if kind == "linear":
+                e = expected_tokens_per_launch(accept_rate, shape)
+            else:
+                e = expected_tokens_per_tree_launch(accept_rate, shape)
+            return e - cut * nodes / max(max_nodes, 1)
+
+        best = max(cands, key=lambda c: value(*c))
+        return (best[0], best[1])
+
 
 # ---------------------------------------------------------------------------
 # executor seam — where device placement and compilation decisions live
@@ -466,7 +523,10 @@ class _DepthGroup:
     # speculative state (None when this depth has no shallower exit to
     # draft at, or speculation is disabled engine-wide)
     keys: Optional[object] = None  # per-slot PRNG keys, device-resident
-    spec_k: int = 0  # active draft length (0 = plain stepping)
+    spec_k: int = 0  # active linear draft length (0 = no linear drafting)
+    # active token-tree branching schedule; takes precedence over spec_k
+    # when set (the SLO policy's choose_tree switches between them)
+    spec_tree: Optional[Tuple[int, ...]] = None
     accept_window: Deque[float] = field(default_factory=lambda: deque(maxlen=32))
     spec_off_until: int = -1  # tick until which speculation is cooling off
 
@@ -505,12 +565,22 @@ class ServingEngine:
             raise ValueError("speculative serving needs a token-only decoder "
                              "(enc-dec / frontend archs carry non-token "
                              "prompt operands the draft loop cannot feed)")
-        if (speculative is not None and cfg.sliding_window
-                and max(speculative.ks) + 1 > cfg.sliding_window):
-            raise ValueError(
-                f"speculative K={max(speculative.ks)} needs K+1 <= "
-                f"sliding_window ({cfg.sliding_window}): the verify commit's "
-                f"rolling scatter would alias buffer slots")
+        if speculative is not None and cfg.sliding_window:
+            # bound every draft shape's depth at the rolling window: the
+            # verify commit's scatter would alias buffer slots otherwise
+            k_max = max(speculative.ks, default=0)
+            if k_max + 1 > cfg.sliding_window:
+                raise ValueError(
+                    f"speculative K={k_max} needs K+1 <= "
+                    f"sliding_window ({cfg.sliding_window}): the verify "
+                    f"commit's rolling scatter would alias buffer slots")
+            for br in speculative.trees:
+                if len(br) + 1 > cfg.sliding_window:
+                    raise ValueError(
+                        f"speculative tree {br} is {len(br)} levels deep; "
+                        f"needs depth+1 <= sliding_window "
+                        f"({cfg.sliding_window}): the verify commit's "
+                        f"rolling scatter would alias buffer slots")
         if (speculative is not None and top_k and speculative.top_k
                 and speculative.top_k != top_k):
             raise ValueError(
@@ -542,7 +612,15 @@ class ServingEngine:
                             [None] * batch_size, [1.0] * batch_size)
             plan = self._spec_plan.get(d)
             if plan is not None:
-                g.spec_k = max(plan.ks)
+                g.spec_k = max(plan.ks, default=0)
+                if plan.trees:
+                    # optimistic default until telemetry arrives: the tree
+                    # with the best expected tokens/launch at high agreement
+                    # (DistillCycle-trained exits are built to agree)
+                    g.spec_tree = max(
+                        plan.trees,
+                        key=lambda br: expected_tokens_per_tree_launch(
+                            0.75, br))
                 g.accept_window = deque(maxlen=speculative.window)
             # per-(group, slot) keys: slot i of different depth groups must
             # not share a sample stream
@@ -556,6 +634,7 @@ class ServingEngine:
             deque(maxlen=4096)  # (step, depth, window accept rate, off_until)
         self.spec_draft_launches = 0
         self.spec_verify_launches = 0
+        self.spec_tree_launches = 0  # verify launches that scored a tree
         self.spec_generated_tokens = 0
         # jitted per-slot sampler for the NON-speculative path (temperature
         # is a runtime operand; 0 never reaches it — argmax stays host-side).
@@ -645,6 +724,14 @@ class ServingEngine:
                                        g.keys, self._temp_op, s_op)
                     full = jnp.concatenate([tok, dtoks], axis=1)
                     _, _, cache = verify(self.params, cache, full, dlg,
+                                         active, g.keys, self._temp_op, s_op)
+                for br in plan.trees:
+                    draft = self.ctrl.aux_step(
+                        tree_draft_compile_key(plan.draft_depth, br))
+                    verify = self.ctrl.aux_step(tree_verify_compile_key(d, br))
+                    ttoks, dlg = draft(self.params, cache, tok, active,
+                                       g.keys, self._temp_op, s_op)
+                    _, _, cache = verify(self.params, cache, ttoks, dlg,
                                          active, g.keys, self._temp_op, s_op)
             cache = self._reset(cache, mask)
             jax.block_until_ready(cache)
@@ -763,40 +850,61 @@ class ServingEngine:
             self.completed.append(req)
             g.slots[slot] = None
 
-    def _spec_eligible_k(self, g: _DepthGroup) -> int:
-        """The draft length to speculate with this tick (0 = plain step).
+    def _spec_select(self, g: _DepthGroup):
+        """The draft shape to speculate with this tick: ``("tree",
+        branching)``, ``("linear", k)``, or ``None`` (plain step).
 
         A group speculates only when every active slot has consumed its
         prompt up to the last token (drafting against forced prompt tokens
-        would just re-predict the prompt) and has K+1 cache positions of
-        headroom, speculation is not cooling off after an acceptance
-        collapse, and the depth has a shallower exit to draft at.
+        would just re-predict the prompt) and has draft-depth + 1 cache
+        positions of headroom, speculation is not cooling off after an
+        acceptance collapse, and the depth has a shallower exit to draft at.
+        The active token tree (``spec_tree``) takes precedence over the
+        linear draft length when both are compiled.
         """
-        if self.speculative is None or g.spec_k <= 0:
-            return 0
+        if self.speculative is None:
+            return None
         if g.depth not in self._spec_plan:
-            return 0
+            return None
         if self.step_count < g.spec_off_until:
-            return 0
-        k = g.spec_k
+            return None
+        if g.spec_tree is not None:
+            sel = ("tree", g.spec_tree)
+            draft_depth = len(g.spec_tree)
+        elif g.spec_k > 0:
+            sel = ("linear", g.spec_k)
+            draft_depth = g.spec_k
+        else:
+            return None
         for r in g.slots:
             if r is None:
                 continue
             if r.fed < len(r.prompt) - 1:
-                return 0
-            if r.fed + k + 1 > self.cache_capacity:
-                return 0
-        return k
+                return None
+            if r.fed + draft_depth + 1 > self.cache_capacity:
+                return None
+        return sel
 
-    def _spec_tick(self, g: _DepthGroup, k: int, active_ix: List[int],
+    def _spec_tick(self, g: _DepthGroup, sel, active_ix: List[int],
                    now_s: float) -> float:
-        """One speculative step for a depth group: draft K tokens at the
-        shallow exit, verify all K+1 positions in one full-depth launch,
-        commit the accepted prefix device-side. ONE host transfer brings
-        back (out_tokens, n_accepted) for slot bookkeeping."""
+        """One speculative step for a depth group: draft candidates at the
+        shallow exit (a linear K-token chain or a token tree), verify every
+        position in one full-depth launch, commit the accepted prefix/path
+        device-side. ONE host transfer brings back (out_tokens, n_accepted)
+        for slot bookkeeping."""
         plan = self._spec_plan[g.depth]
-        draft = self.ctrl.aux_step(draft_compile_key(plan.draft_depth, k))
-        verify = self.ctrl.aux_step(verify_compile_key(g.depth, k))
+        kind, shape = sel
+        if kind == "tree":
+            draft = self.ctrl.aux_step(
+                tree_draft_compile_key(plan.draft_depth, shape))
+            verify = self.ctrl.aux_step(
+                tree_verify_compile_key(g.depth, shape))
+            depth_budget = len(shape)  # max accepted drafts per launch
+        else:
+            draft = self.ctrl.aux_step(
+                draft_compile_key(plan.draft_depth, shape))
+            verify = self.ctrl.aux_step(verify_compile_key(g.depth, shape))
+            depth_budget = shape
         toks = np.zeros((self.batch_size, 1), np.int32)
         for i in active_ix:
             toks[i, 0] = g.slots[i].next_input()
@@ -804,11 +912,17 @@ class ServingEngine:
         tok_op = self.executor.put(toks)
         s_op = self.executor.put(np.uint32(self.step_count))
         t0 = time.perf_counter()
-        dtoks, dlg = draft(self.params, g.cache, tok_op, active, g.keys,
-                           self._temp_op, s_op)
-        full = jnp.concatenate([tok_op, dtoks], axis=1)
-        out, n_acc, g.cache = verify(self.params, g.cache, full, dlg, active,
-                                     g.keys, self._temp_op, s_op)
+        if kind == "tree":
+            ttoks, dlg = draft(self.params, g.cache, tok_op, active, g.keys,
+                               self._temp_op, s_op)
+            out, n_acc, g.cache = verify(self.params, g.cache, ttoks, dlg,
+                                         active, g.keys, self._temp_op, s_op)
+        else:
+            dtoks, dlg = draft(self.params, g.cache, tok_op, active, g.keys,
+                               self._temp_op, s_op)
+            full = jnp.concatenate([tok_op, dtoks], axis=1)
+            out, n_acc, g.cache = verify(self.params, g.cache, full, dlg,
+                                         active, g.keys, self._temp_op, s_op)
         out_h = np.asarray(out)
         n_acc_h = np.asarray(n_acc)
         jax.block_until_ready(g.cache)
@@ -817,6 +931,8 @@ class ServingEngine:
         self.ctrl.last_step_s = dt
         self.spec_draft_launches += 1
         self.spec_verify_launches += 1
+        if kind == "tree":
+            self.spec_tree_launches += 1
 
         produced = 0
         for i in active_ix:
@@ -839,10 +955,19 @@ class ServingEngine:
         # estimate, and a 2-launch multi-token tick recorded there would
         # inflate it and mis-steer admission
         tel = self.spec_telemetry.setdefault(
-            (g.depth, plan.draft_depth, k), SpecTelemetry(k=k))
+            (g.depth, plan.draft_depth, shape),
+            SpecTelemetry(k=depth_budget,
+                          tree=shape if kind == "tree" else None,
+                          nodes=(tree_node_budget(shape) if kind == "tree"
+                                 else shape)))
         tel.record([int(n_acc_h[i]) for i in active_ix], len(active_ix), dt)
-        g.accept_window.append(
-            float(np.mean([n_acc_h[i] for i in active_ix])) / k)
+        # window entries are PER-CANDIDATE acceptance: a tree's depth
+        # fraction measures per-level survival (1-(1-a)^b) and must be
+        # inverted so tree and linear launches feed the policy (and the
+        # collapse threshold) one comparable number
+        g.accept_window.append(per_candidate_accept_rate(
+            float(np.mean([n_acc_h[i] for i in active_ix])) / depth_budget,
+            shape if kind == "tree" else None))
         spec = self.speculative
         if (len(g.accept_window) == g.accept_window.maxlen
                 and float(np.mean(g.accept_window)) < spec.min_accept_rate):
@@ -865,9 +990,9 @@ class ServingEngine:
             if not active_ix:
                 continue
             ticked = True
-            k = self._spec_eligible_k(g)
-            if k:
-                spent += self._spec_tick(g, k, active_ix, now_s)
+            sel = self._spec_select(g)
+            if sel is not None:
+                spent += self._spec_tick(g, sel, active_ix, now_s)
                 continue
             toks = np.zeros((self.batch_size, 1), np.int32)
             for i in active_ix:
@@ -955,6 +1080,7 @@ class ServingEngine:
         prefill_s0 = self.prefill_s
         prefill_toks0 = self.prefill_prompt_tokens
         spec_v0 = self.spec_verify_launches
+        spec_t0 = self.spec_tree_launches
         spec_tok0 = self.spec_generated_tokens
         while (pending or self.queue or self.n_active) \
                 and self.step_count - steps0 < max_steps:
@@ -971,7 +1097,7 @@ class ServingEngine:
                         dict(step=self.step_count, **policy.last_decision))
                 self.set_admission_mode(mode)
                 if self.speculative is not None:
-                    self._retune_spec_k(policy, qd)
+                    self._retune_spec(policy, qd)
             dt = self.step(now_s=clock)
             busy += dt
             clock += dt
@@ -1003,6 +1129,7 @@ class ServingEngine:
             # speculative decoding: verify launches and the tokens they
             # emitted (tokens/launch > 1 is the decode-launch reduction)
             "spec_verify_launches": self.spec_verify_launches - spec_v0,
+            "spec_tree_launches": self.spec_tree_launches - spec_t0,
             "spec_generated_tokens": self.spec_generated_tokens - spec_tok0,
             "spec_tokens_per_launch":
                 ((self.spec_generated_tokens - spec_tok0)
@@ -1011,12 +1138,14 @@ class ServingEngine:
             "spec_fallbacks": len(self.spec_fallback_log),
         }
 
-    def _retune_spec_k(self, policy: "SLOPolicy",
-                       queue_depths: Dict[str, int]) -> None:
-        """Let the SLO policy re-pick each group's draft length K from the
-        compiled table, using measured acceptance (rolling window first,
-        lifetime telemetry second, optimistic default before any data —
-        DistillCycle-trained exits are built to agree)."""
+    def _retune_spec(self, policy: "SLOPolicy",
+                     queue_depths: Dict[str, int]) -> None:
+        """Let the SLO policy re-pick each group's draft shape — a token
+        tree, a linear K, or plain stepping — from the compiled table, using
+        measured acceptance (rolling window first, lifetime telemetry
+        second, optimistic default before any data — DistillCycle-trained
+        exits are built to agree)."""
+        spec = self.speculative
         for g in self.groups.values():
             plan = self._spec_plan.get(g.depth)
             if plan is None:
@@ -1024,13 +1153,51 @@ class ServingEngine:
             if g.accept_window:
                 rate = float(np.mean(g.accept_window))
             else:
+                # lifetime fallback: convert each path's depth fraction to
+                # the per-candidate rate before averaging — tree and linear
+                # denominators (levels vs K) are otherwise incommensurable
                 tels = [t for (d, dd, k), t in self.spec_telemetry.items()
-                        if d == g.depth and t.drafted]
-                rate = (sum(t.accepted for t in tels)
-                        / sum(t.drafted for t in tels)) if tels else 0.75
-            g.spec_k = policy.choose_spec_k(plan.ks, rate, queue_depths)
+                        if d == g.depth and t.drafted and t.slot_launches]
+                if tels:
+                    rate = (sum(per_candidate_accept_rate(
+                        t.accepted / t.drafted, t.tree) * t.slot_launches
+                        for t in tels)
+                        / sum(t.slot_launches for t in tels))
+                else:
+                    rate = 0.75
+            if plan.trees:
+                kind, shape = policy.choose_tree(
+                    plan.trees, plan.ks, rate, queue_depths,
+                    min_accept_rate=spec.min_accept_rate)
+                if kind == "tree":
+                    g.spec_tree, g.spec_k = shape, 0
+                elif kind == "linear":
+                    g.spec_tree, g.spec_k = None, shape
+                elif g.accept_window:
+                    # plain stepping — but ONLY on fresh window evidence:
+                    # cool off like the in-tick collapse fallback, keeping
+                    # the shapes so the group re-probes after the cooloff.
+                    # With an empty window the rate is stale lifetime data
+                    # (frozen while speculation is off); re-extending the
+                    # cooloff from it on every admission switch would
+                    # disable speculation permanently.
+                    g.spec_off_until = max(
+                        g.spec_off_until,
+                        self.step_count + spec.cooloff_ticks)
+                    g.accept_window.clear()
+            elif plan.ks:
+                g.spec_tree = None
+                g.spec_k = policy.choose_spec_k(plan.ks, rate, queue_depths)
 
     def spec_telemetry_summary(self) -> Dict[str, Dict[str, float]]:
-        """Acceptance telemetry per (depth, draft_depth, K) path."""
-        return {f"d{d}<-d{dd}k{k}": t.summary()
-                for (d, dd, k), t in self.spec_telemetry.items() if t.launches}
+        """Acceptance telemetry per (depth, draft_depth, draft shape) path
+        (``k...`` linear draft lengths, ``t...`` tree branching schedules)."""
+
+        def label(shape) -> str:
+            if isinstance(shape, tuple):
+                return "t" + "x".join(str(b) for b in shape)
+            return f"k{shape}"
+
+        return {f"d{d}<-d{dd}{label(s)}": t.summary()
+                for (d, dd, s), t in self.spec_telemetry.items()
+                if t.launches}

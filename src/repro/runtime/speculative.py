@@ -39,13 +39,16 @@ executable serves greedy and sampled serving alike.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.model import commit_verify, decode_step, verify_step
+from repro.models.model import (commit_verify, decode_step, verify_step,
+                                verify_tree)
 from repro.runtime import sampling
 
 
@@ -65,6 +68,98 @@ def verify_compile_key(depth: int, k: int) -> Tuple:
     return ("spec_verify", depth, k)
 
 
+def tree_draft_compile_key(draft_depth: int, branching: Tuple[int, ...]) -> Tuple:
+    return ("spec_tree_draft", draft_depth, branching)
+
+
+def tree_verify_compile_key(depth: int, branching: Tuple[int, ...]) -> Tuple:
+    return ("spec_tree_verify", depth, branching)
+
+
+# ---------------------------------------------------------------------------
+# token-tree topologies (static: the tree shape is part of the compile key)
+# ---------------------------------------------------------------------------
+
+
+class TreeTopology:
+    """A static token-tree shape, flattened in BFS level order.
+
+    ``branching[l]`` is the number of children every node at level ``l``
+    gets, so the tree shape is fully described by the schedule — e.g.
+    ``(3, 2, 1)`` is a root with 3 children, 6 grandchildren and 6 leaves.
+    Node 0 is the root (the last committed token); parents always precede
+    children in index order. All derived arrays are host numpy constants:
+    they are baked into the compiled draft/verify executables (the tree
+    shape is the compile key), never traced.
+
+    Attributes: ``n_nodes``, ``n_levels`` (= max draft depth), ``parents``
+    (N,) int (root: -1), ``depths`` (N,) int, ``children`` (N, max_b) int
+    padded with 0 (only the first ``branching[depth]`` entries of a row are
+    meaningful), ``paths`` tuple of per-node root-to-node index tuples, and
+    ``ancestor_bias`` (N, N) f32 additive attention bias: 0 where column j
+    is an ancestor-or-self of row i, NEG_INF elsewhere.
+    """
+
+    def __init__(self, branching: Tuple[int, ...]):
+        branching = tuple(int(b) for b in branching)
+        if any(b < 1 for b in branching):
+            raise ValueError(f"tree branching must be >= 1 per level, "
+                             f"got {branching}")
+        self.branching = branching
+        parents = [-1]
+        depths = [0]
+        frontier = [0]
+        for lvl, b in enumerate(branching):
+            nxt = []
+            for node in frontier:
+                for _ in range(b):
+                    nxt.append(len(parents))
+                    parents.append(node)
+                    depths.append(lvl + 1)
+            frontier = nxt
+        self.n_nodes = len(parents)
+        self.n_levels = len(branching)
+        self.parents = np.asarray(parents, np.int32)
+        self.depths = np.asarray(depths, np.int32)
+        max_b = max(branching) if branching else 1
+        children = np.zeros((self.n_nodes, max_b), np.int32)
+        counts = np.zeros(self.n_nodes, np.int32)
+        for node, par in enumerate(parents):
+            if par >= 0:
+                children[par, counts[par]] = node
+                counts[par] += 1
+        self.children = children
+        paths = []
+        for node in range(self.n_nodes):
+            path = [node]
+            while parents[path[-1]] >= 0:
+                path.append(parents[path[-1]])
+            paths.append(tuple(reversed(path)))
+        self.paths = tuple(paths)
+        bias = np.full((self.n_nodes, self.n_nodes), -1e9, np.float32)
+        for node, path in enumerate(paths):
+            bias[node, list(path)] = 0.0
+        self.ancestor_bias = bias
+
+    def level_nodes(self, level: int) -> Tuple[int, int]:
+        """[start, stop) node-index range of the given level (contiguous in
+        the BFS order)."""
+        idx = np.nonzero(self.depths == level)[0]
+        return int(idx[0]), int(idx[-1]) + 1
+
+    @property
+    def n_draft_nodes(self) -> int:
+        """Node budget: candidate tokens drafted per launch (excl. root)."""
+        return self.n_nodes - 1
+
+
+@lru_cache(maxsize=None)
+def tree_topology(branching: Tuple[int, ...]) -> TreeTopology:
+    """Memoized topology: every (depth, tree) executable of one branching
+    schedule shares the same static arrays."""
+    return TreeTopology(branching)
+
+
 @dataclass(frozen=True)
 class SpecConfig:
     """Speculative serving configuration (engine-level policy knobs).
@@ -80,6 +175,7 @@ class SpecConfig:
     """
 
     ks: Tuple[int, ...] = (4,)
+    trees: Tuple[Tuple[int, ...], ...] = ()
     draft_depth: Optional[int] = None
     min_accept_rate: float = 0.05
     window: int = 32
@@ -94,15 +190,26 @@ class SpecPlanEntry:
     depth: int
     draft_depth: int
     ks: Tuple[int, ...]
+    trees: Tuple[Tuple[int, ...], ...] = ()
 
 
 def spec_plan(depths, spec: SpecConfig) -> Dict[int, SpecPlanEntry]:
-    """Resolve (serving depth -> draft depth, K table) over the mode table.
+    """Resolve (serving depth -> draft depth, K/tree tables) over the mode
+    table.
 
     Only depths with a strictly shallower depth available can speculate (the
     shallowest group keeps plain stepping). An explicit ``spec.draft_depth``
-    is honoured wherever it is shallower than the serving depth.
+    is honoured wherever it is shallower than the serving depth. ``ks`` is
+    the linear-draft table, ``trees`` the token-tree table — both compile
+    into the aux-executable registry and the engine may switch between them
+    (and plain stepping) at runtime without re-tracing.
     """
+    if not spec.ks and not spec.trees:
+        raise ValueError("SpecConfig needs at least one draft shape: a "
+                         "linear K in `ks` or a tree schedule in `trees`")
+    trees = tuple(sorted({tuple(int(b) for b in br) for br in spec.trees}))
+    for br in trees:
+        tree_topology(br)  # validates branching >= 1 per level
     depths = sorted(set(depths))
     plan: Dict[int, SpecPlanEntry] = {}
     for d in depths:
@@ -112,7 +219,7 @@ def spec_plan(depths, spec: SpecConfig) -> Dict[int, SpecPlanEntry]:
         if not cands:
             continue
         plan[d] = SpecPlanEntry(depth=d, draft_depth=max(cands),
-                                ks=tuple(sorted(set(spec.ks))))
+                                ks=tuple(sorted(set(spec.ks))), trees=trees)
     return plan
 
 
@@ -171,6 +278,98 @@ def accept_speculative(logits, draft_logits, tokens, keys, temperature,
     d_pad = jnp.concatenate([d, jnp.zeros((B, 1), jnp.int32)], axis=1)
     out = jnp.where(j < n_acc[:, None], d_pad, last[:, None])
     return out, n_acc
+
+
+def accept_tree(logits, draft_logits, tokens, topo: TreeTopology, keys,
+                temperature, vocab: int, top_k: int = 0):
+    """Token-tree rejection sampling: pick the accepted root-to-leaf path.
+
+    logits: (B, N, Vp) verifier scores over the flattened tree (node j's row
+    is the model's next-token distribution after consuming the root-to-j
+    path); draft_logits: (B, N, Vp) the draft distribution AT each node —
+    the one its children were sampled from (leaf rows unused); tokens:
+    (B, N) the tree's candidate tokens (node 0 = last committed token);
+    keys: (B, 2) per-launch per-slot keys.
+
+    The walk starts at the root and runs one multi-candidate rejection round
+    per level: children are tried in sibling order, child ``x_i`` is
+    accepted with prob ``min(1, res_i(x_i) / q(x_i))`` (division-free) where
+    ``res_1`` is the verifier distribution at the current node and
+    ``res_{i+1} = normalize(max(res_i - q, 0))`` after each rejection — the
+    standard multi-draft scheme, distribution-identical to sampling the
+    verifier token by token when siblings are i.i.d. draws from ``q``. At
+    temperature 0 the one-hot distributions reduce the same arithmetic to
+    greedy tree acceptance: descend into the child that equals the verifier
+    argmax (at any sibling rank), stop when none does, emit the argmax — so
+    greedy tree serving is token-identical to plain greedy serving.
+
+    Returns (out_tokens (B, L), path_nodes (B, L), n_accepted (B,)) with
+    L = n_levels + 1: ``out_tokens[:, :n+1]`` is the generated stream (n
+    accepted draft tokens + one replacement/bonus token), ``path_nodes`` the
+    node indices of the accepted path (entry 0 is the root; entries past
+    ``n_accepted`` repeat the stop node, a valid pad for the commit gather).
+    """
+    B, N = tokens.shape
+    t = jnp.asarray(temperature, jnp.float32)
+    p = sampling.token_dist(logits, t, vocab, top_k)  # (B, N, V)
+    q = sampling.token_dist(draft_logits, t, vocab, top_k)
+    ku = jax.vmap(lambda k: jax.random.fold_in(k, _STREAM_ACCEPT))(keys)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (N,)))(ku)  # one coin/node
+    children = jnp.asarray(topo.children, jnp.int32)
+
+    cur = jnp.zeros((B,), jnp.int32)  # current node of the walk
+    n_acc = jnp.zeros((B,), jnp.int32)
+    alive = jnp.ones((B,), bool)
+    final_res = p[:, 0]  # replacement/bonus distribution at the stop node
+    acc_toks = []
+    path_rows = [cur]
+    for level, b in enumerate(topo.branching):
+        pcur = jnp.take_along_axis(p, cur[:, None, None], axis=1)[:, 0]
+        qcur = jnp.take_along_axis(q, cur[:, None, None], axis=1)[:, 0]
+        res = pcur
+        chosen = jnp.full((B,), -1, jnp.int32)
+        for i in range(b):
+            ci = children[cur, i]  # (B,) static table, traced row
+            xi = jnp.take_along_axis(tokens, ci[:, None], axis=1)[:, 0]
+            q_xi = jnp.take_along_axis(qcur, xi[:, None], axis=1)[:, 0]
+            r_xi = jnp.take_along_axis(res, xi[:, None], axis=1)[:, 0]
+            u_i = jnp.take_along_axis(u, ci[:, None], axis=1)[:, 0]
+            not_yet = alive & (chosen < 0)
+            # division-free accept (q_xi can be 0 under top-k truncation or
+            # for non-rank-0 siblings at temperature 0: accept iff res > 0)
+            acc_i = not_yet & (u_i * q_xi < r_xi)
+            chosen = jnp.where(acc_i, ci, chosen)
+            # multi-candidate residual update, applied only on rejection
+            sub = jnp.maximum(res - qcur, 0.0)
+            rs = jnp.sum(sub, axis=-1, keepdims=True)
+            res = jnp.where((not_yet & ~acc_i)[:, None],
+                            sub / jnp.maximum(rs, 1e-38), res)
+        accepted = alive & (chosen >= 0)
+        final_res = jnp.where((alive & ~accepted)[:, None], res, final_res)
+        tok_lvl = jnp.take_along_axis(
+            tokens, jnp.maximum(chosen, 0)[:, None], axis=1)[:, 0]
+        acc_toks.append(tok_lvl)  # garbage when not accepted; masked below
+        cur = jnp.where(accepted, chosen, cur)
+        path_rows.append(cur)
+        n_acc = n_acc + accepted.astype(jnp.int32)
+        alive = accepted
+
+    p_stop = jnp.take_along_axis(p, cur[:, None, None], axis=1)[:, 0]
+    final_res = jnp.where(alive[:, None], p_stop, final_res)  # leaf: bonus
+    fsum = jnp.sum(final_res, axis=-1, keepdims=True)
+    final_res = jnp.where(fsum > 0, final_res, p_stop)  # degenerate residual
+    kb = jax.vmap(lambda k: jax.random.fold_in(k, _STREAM_BONUS))(keys)
+    samp = jax.vmap(lambda k, pr: jax.random.categorical(k, jnp.log(pr)))(
+        kb, jnp.maximum(final_res, 1e-38))
+    last = jnp.where(t > 0.0, samp,
+                     jnp.argmax(final_res, axis=-1)).astype(jnp.int32)
+
+    L = topo.n_levels + 1
+    j = jnp.arange(L, dtype=jnp.int32)[None, :]
+    acc_pad = jnp.stack(acc_toks + [jnp.zeros((B,), jnp.int32)], axis=1)
+    out = jnp.where(j < n_acc[:, None], acc_pad, last[:, None])
+    path = jnp.stack(path_rows, axis=1)
+    return out, path, n_acc
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +433,89 @@ def make_verify_step(cfg: ModelConfig, depth: int, k: int, top_k: int = 0):
     return verify
 
 
+def make_tree_draft_step(cfg: ModelConfig, draft_depth: int,
+                         branching: Tuple[int, ...], top_k: int = 0):
+    """Build the token-tree drafting function for one (draft_depth, tree).
+
+    Signature: ``draft(params, cache, tok0, active, keys, temperature, step)
+    -> (tree_tokens (B, N), draft_logits (B, N, Vp))`` with node 0 = tok0.
+    The tree grows level by level: each level scores the tree built so far
+    with a READ-ONLY multi-position ``verify_tree`` pass at the draft depth
+    (ancestor-masked extended-KV attention over the committed cache — the
+    cache is never written and, unlike the linear draft's scan, never copied
+    into a scan carry: non-destructive drafting), then samples each frontier
+    node's children from its exit-head logits. At temperature 0 the children
+    are the top-b distinct tokens (deterministic greedy expansion); at
+    temperature > 0 they are i.i.d. samples from the draft distribution
+    (per-child stream ids keep sibling draws independent — the property the
+    multi-candidate acceptance rule needs). One executable serves both: the
+    temperature is a runtime operand selecting between the two candidate
+    sets with ``jnp.where``.
+    """
+    topo = tree_topology(tuple(branching))
+    vocab = cfg.vocab_size
+
+    def draft(params, cache, tok0, active, keys, temperature, step):
+        keys_l = sampling.fold_step(keys, step)
+        kd = jax.vmap(lambda kk: jax.random.fold_in(kk, _STREAM_DRAFT))(keys_l)
+        t = jnp.asarray(temperature, jnp.float32)
+        B = tok0.shape[0]
+        tokens = jnp.zeros((B, topo.n_nodes), jnp.int32)
+        tokens = tokens.at[:, 0].set(tok0[:, 0])
+        dlg = jnp.zeros((B, topo.n_nodes, cfg.padded_vocab()), jnp.float32)
+        for level, b in enumerate(topo.branching):
+            sub = tree_topology(topo.branching[:level])
+            lg_pass, _ = verify_tree(params, cache,
+                                     tokens[:, :sub.n_nodes], cfg, tree=sub,
+                                     depth=draft_depth, active=active)
+            f0, f1 = sub.level_nodes(level)
+            dlg = dlg.at[:, f0:f1].set(lg_pass[:, f0:f1].astype(jnp.float32))
+            for nf in range(f0, f1):
+                lg_n = lg_pass[:, nf]  # (B, Vp)
+                lg_m = sampling.top_k_mask(
+                    lg_n[..., :vocab].astype(jnp.float32), top_k)
+                top_toks = jax.lax.top_k(lg_m, b)[1].astype(jnp.int32)
+                for i in range(b):
+                    c = int(topo.children[nf, i])
+                    samp = sampling.sample_tokens(lg_n, kd, t, vocab, top_k,
+                                                  salt=c)
+                    tok_c = jnp.where(t > 0.0, samp, top_toks[:, i])
+                    tokens = tokens.at[:, c].set(tok_c.astype(jnp.int32))
+        return tokens, dlg
+
+    return draft
+
+
+def make_tree_verify_step(cfg: ModelConfig, depth: int,
+                          branching: Tuple[int, ...], top_k: int = 0):
+    """Build the fused tree verify+accept+commit for one (depth, tree).
+
+    Signature: ``verify(params, cache, tree_tokens (B, N), draft_logits,
+    active, keys, temperature, step) -> (out_tokens (B, L), n_accepted (B,),
+    new_cache)`` with L = n_levels + 1. One launch scores every tree node
+    against the per-slot cache (``verify_tree``: ancestor-mask attention
+    bias over the flattened tree, per-node SSM state candidates), the
+    acceptance walk picks the accepted root-to-leaf path, and
+    ``commit_verify`` commits it via a traced path-index gather. The cache
+    should be donated by the caller's jit.
+    """
+    topo = tree_topology(tuple(branching))
+
+    def verify(params, cache, tokens, draft_logits, active, keys,
+               temperature, step):
+        logits, pending = verify_tree(params, cache, tokens, cfg, tree=topo,
+                                      depth=depth, active=active)
+        keys_l = sampling.fold_step(keys, step)
+        out, path, n_acc = accept_tree(logits, draft_logits, tokens, topo,
+                                       keys_l, temperature, cfg.vocab_size,
+                                       top_k)
+        new_cache = commit_verify(cache, pending, n_acc, cfg,
+                                  path_nodes=path)
+        return out, n_acc, new_cache
+
+    return verify
+
+
 # ---------------------------------------------------------------------------
 # acceptance telemetry (feeds SLOPolicy's (draft_depth, K) choice)
 # ---------------------------------------------------------------------------
@@ -241,9 +523,15 @@ def make_verify_step(cfg: ModelConfig, depth: int, k: int, top_k: int = 0):
 
 @dataclass
 class SpecTelemetry:
-    """Online acceptance statistics for one (depth, draft_depth, K) path."""
+    """Online acceptance statistics for one (depth, draft_depth, draft
+    shape) path. ``k`` is the maximum accepted depth per launch (the linear
+    draft length, or a tree's level count); ``tree`` carries the branching
+    schedule when the path drafts a token tree (``nodes`` then records the
+    node budget actually drafted per slot, which exceeds ``k``)."""
 
     k: int
+    tree: Optional[Tuple[int, ...]] = None
+    nodes: int = 0  # drafted candidate nodes per slot-launch (0: == k)
     launches: int = 0
     slot_launches: int = 0  # sum of active slots over launches
     drafted: int = 0
@@ -282,14 +570,18 @@ class SpecTelemetry:
         return self.emitted / self.slot_launches if self.slot_launches else 0.0
 
     def summary(self) -> Dict[str, float]:
-        return {"k": self.k, "launches": self.launches,
-                "accept_rate": round(self.accept_rate, 4),
-                "accepted_per_launch": round(self.accepted_per_launch, 3),
-                "tokens_per_launch": round(self.tokens_per_launch, 3),
-                "tokens_per_slot_launch":
-                    round(self.tokens_per_slot_launch, 3),
-                "tokens_per_s": round(self.emitted / self.total_s, 1)
-                if self.total_s > 0 else 0.0}
+        out = {"k": self.k, "launches": self.launches,
+               "accept_rate": round(self.accept_rate, 4),
+               "accepted_per_launch": round(self.accepted_per_launch, 3),
+               "tokens_per_launch": round(self.tokens_per_launch, 3),
+               "tokens_per_slot_launch":
+                   round(self.tokens_per_slot_launch, 3),
+               "tokens_per_s": round(self.emitted / self.total_s, 1)
+               if self.total_s > 0 else 0.0}
+        if self.tree is not None:
+            out["tree"] = "x".join(str(b) for b in self.tree)
+            out["draft_nodes"] = self.nodes
+        return out
 
 
 def expected_tokens_per_launch(accept_rate: float, k: int) -> float:
@@ -300,3 +592,50 @@ def expected_tokens_per_launch(accept_rate: float, k: int) -> float:
     if a >= 1.0:
         return float(k + 1)
     return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def expected_tokens_per_tree_launch(accept_rate: float,
+                                    branching: Tuple[int, ...]) -> float:
+    """E[tokens per verify launch] for a token tree under i.i.d. per-node
+    acceptance ``a``: the walk survives a level with ``b`` sibling
+    candidates with prob ``1 - (1 - a)^b``, so
+    E = 1 + sum_l prod_{i<=l} (1 - (1 - a)^{b_i}). At ``b = 1`` per level
+    this reduces to ``expected_tokens_per_launch`` — the estimate the SLO
+    policy uses to trade a tree's node budget against linear K."""
+    a = min(max(accept_rate, 0.0), 1.0)
+    e, reach = 1.0, 1.0
+    for b in branching:
+        reach *= 1.0 - (1.0 - a) ** b
+        e += reach
+    return e
+
+
+def tree_node_budget(branching: Tuple[int, ...]) -> int:
+    """Candidate nodes a tree drafts per launch (the budget matched against
+    linear K when comparing tokens-per-verify-launch)."""
+    return tree_topology(tuple(branching)).n_draft_nodes
+
+
+def per_candidate_accept_rate(depth_fraction: float,
+                              branching: Optional[Tuple[int, ...]] = None
+                              ) -> float:
+    """Convert a measured accepted-DEPTH fraction into the per-candidate
+    acceptance rate ``a`` the expected-token estimates consume.
+
+    A linear launch's depth fraction (mean n_accepted / K) is the standard
+    proxy for ``a``. A TREE launch's depth fraction measures per-level
+    survival ``s`` instead — with b sibling candidates per level,
+    ``s = 1 - (1 - a)^b`` — so feeding it straight back into
+    ``expected_tokens_per_tree_launch`` would apply the branching advantage
+    twice and systematically over-rank trees against budget-matched linear
+    K. Inverting at the mean branching factor recovers ``a``, keeping one
+    comparable acceptance number across draft shapes (and a collapse
+    threshold that means the same thing for both).
+    """
+    s = min(max(depth_fraction, 0.0), 1.0)
+    if not branching:
+        return s
+    b = sum(branching) / len(branching)
+    if b <= 1.0 or s >= 1.0:
+        return s
+    return 1.0 - (1.0 - s) ** (1.0 / b)

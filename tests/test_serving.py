@@ -357,6 +357,89 @@ def test_admission_switch_log_records_class_mix():
     assert (n_int, n_batch) == (1, 2)
 
 
+# ---------------------------------------------------------------------------
+# engine invariants under random traces (plain / linear-spec / tree ticks)
+# ---------------------------------------------------------------------------
+
+
+def _check_engine_invariants(eng, submitted):
+    """Slot/accounting invariants that must hold after EVERY operation."""
+    live = [r for g in eng.groups.values() for r in g.slots if r is not None]
+    live_ids = [id(r) for r in live]
+    # no request occupies two slots (identity, not rid: rids are unique too)
+    assert len(live_ids) == len(set(live_ids)), "request double-assigned"
+    live_rids = [r.rid for r in live]
+    assert len(live_rids) == len(set(live_rids)), "rid in two slots"
+    done_rids = [r.rid for r in eng.completed]
+    assert len(done_rids) == len(set(done_rids)), "request completed twice"
+    assert not (set(live_rids) & set(done_rids)), "completed request in slot"
+    queued_rids = [r.rid for r in eng.queue]
+    # conservation: every submitted request is queued, in a slot, or done
+    assert sorted(queued_rids + live_rids + done_rids) == \
+        sorted(submitted.keys()), "request leaked"
+    for r in live:
+        assert len(r.generated) < submitted[r.rid], \
+            "finished request still occupying a slot"
+        assert r.fed <= len(r.prompt) + len(r.generated)
+    # launch accounting: a tick with work issues >= 1 launch (plain decode,
+    # linear verify, or tree verify) and <= one per depth group; the
+    # per-(depth, width) equivalent never undercounts actual launches
+    launches = eng.decode_launches + eng.spec_verify_launches
+    assert eng.ticks_with_work <= launches <= \
+        eng.ticks_with_work * len(eng.groups) + eng.prefills
+    assert eng.per_mode_launch_equiv >= eng.decode_launches
+    assert eng.spec_draft_launches == eng.spec_verify_launches
+    assert eng.spec_tree_launches <= eng.spec_verify_launches
+
+
+def test_engine_slot_invariants_under_random_traces():
+    """Property test: random interleavings of submit / step / admission-mode
+    churn never leak or double-assign cache slots, and the launch accounting
+    stays consistent — across plain, linear-speculative, and token-tree
+    engines alike. Every request still finishes with exactly its token
+    count."""
+    from repro.runtime.speculative import SpecConfig
+
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    variants = [None, SpecConfig(ks=(2,)), SpecConfig(ks=(), trees=((2, 1),))]
+    for vi, spec in enumerate(variants):
+        eng = ServingEngine(params, cfg, batch_size=3, cache_capacity=32,
+                            prefill_threshold=5, speculative=spec)
+        eng.warmup()
+        rng = np.random.default_rng(17 + vi)
+        modes = eng.ctrl.modes
+        submitted = {}
+        rid = 0
+        for _ in range(50):
+            r = rng.random()
+            if r < 0.35 and rid < 12:
+                plen = int(rng.integers(1, 8))
+                n_new = int(rng.integers(1, 7))
+                eng.submit(Request(
+                    rid=rid,
+                    prompt=tuple(int(x) for x in
+                                 rng.integers(1, cfg.vocab_size, plen)),
+                    max_new_tokens=n_new,
+                    slo_class="interactive" if rng.random() < 0.3
+                    else "batch"))
+                submitted[rid] = n_new
+                rid += 1
+            elif r < 0.45:
+                eng.set_admission_mode(
+                    modes[int(rng.integers(len(modes)))])
+            else:
+                eng.step()
+            _check_engine_invariants(eng, submitted)
+        while eng.queue or eng.n_active:
+            eng.step()
+            _check_engine_invariants(eng, submitted)
+        assert len(eng.completed) == len(submitted)
+        for r_ in eng.completed:
+            assert len(r_.generated) == submitted[r_.rid], \
+                (vi, r_.rid, r_.generated)
+
+
 @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-370m"])
 def test_prefill_admission_matches_token_feed(arch):
     """Long prompts admitted via one prefill launch generate exactly the
