@@ -17,9 +17,16 @@ Phases:
      (sibling candidates per level, one ancestor-masked verify launch,
      path-gather commit); also token-identical to plain serving
 
+  8. block-paged KV    -> the same shared-system-prompt trace served dense
+     vs block-paged (radix prefix reuse, page-table launches); asserts
+     token identity and reports page-pool occupancy + radix hit rate
+
 Reports sustained tokens/s per phase, mode switch counts, decode launches
 per tick, and verifies the zero-recompiles-after-warmup invariant. Smoke-
 scale by default so it runs in CI; pass an arch name for the full config.
+Every phase's derived metrics are also written to
+``benchmarks/results/BENCH_serving.json`` — the tracked serving baseline
+(tokens/s, launches, p50/p95 latency, page-pool occupancy).
 
 ``--mesh`` adds the sharded axis: the same engine + trace at dp x tp in
 {1x1, 2x4, 8x1} (1x1 = the host-local executor baseline; the others run
@@ -32,7 +39,10 @@ which must happen before jax initializes — hence the import-time check.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
+from typing import Dict
 
 if "--mesh" in sys.argv:  # before jax initializes its backend
     from repro.xla_flags import force_host_device_count
@@ -40,20 +50,28 @@ if "--mesh" in sys.argv:  # before jax initializes its backend
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import RESULTS_DIR, emit
 from repro.configs import smoke_config
 from repro.core import elastic
 from repro.launch.mesh import make_serve_mesh
 from repro.models.model import init_params
+from repro.models.paged import PagedLayout
 from repro.runtime.serving import (MeshExecutor, Request, ServingEngine,
                                    SLOPolicy, poisson_trace)
 from repro.runtime.speculative import SpecConfig
+
+BENCH_JSON = os.path.join(RESULTS_DIR, "BENCH_serving.json")
 
 
 def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         batch: int = 4, capacity: int = 32) -> None:
     cfg = smoke_config(arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
+    bench: Dict[str, Dict] = {}
+
+    def record(name: str, us: float, derived: Dict) -> None:
+        bench[name.rsplit("/", 1)[-1]] = derived
+        emit(name, us, derived)
     engine = ServingEngine(params, cfg, batch_size=batch,
                            cache_capacity=capacity, prefill_threshold=8)
     engine.warmup()
@@ -93,7 +111,7 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         budget = budget_fn(0.0)
         chosen = policy.choose(budget)
         chosen_frac[pname] = elastic.flops_fraction(cfg, chosen)
-        emit(f"serve_continuous/{cfg.name}/{pname}",
+        record(f"serve_continuous/{cfg.name}/{pname}",
              1e6 / max(summary["sustained_tokens_per_s"], 1e-9), {
                  "budget_us": round(budget * 1e6, 2),
                  "mode_chosen": chosen.name,
@@ -136,7 +154,7 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         f"mixed widths must share launches: {launches} vs per-mode {permode}"
     assert generated == sum(r.max_new_tokens for r in mix), \
         "mixed-width batching must not change generated token counts"
-    emit(f"serve_continuous/{cfg.name}/mixed_width", 0.0, {
+    record(f"serve_continuous/{cfg.name}/mixed_width", 0.0, {
         "decode_launches": launches,
         "per_mode_launch_equiv": permode,
         "launches_per_tick": round(launches / ticks, 2),
@@ -155,7 +173,7 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
     summary = engine.run(long_trace, budget_fn=None, policy=None)
     assert summary["prefills"] == len(long_trace), \
         f"every long prompt must prefill: {summary['prefills']} vs {len(long_trace)}"
-    emit(f"serve_continuous/{cfg.name}/prefill_admission", 0.0, {
+    record(f"serve_continuous/{cfg.name}/prefill_admission", 0.0, {
         "prefills": summary["prefills"],
         "prefill_prompt_tokens": summary["prefill_prompt_tokens"],
         "prompt_consume_ms_per_token":
@@ -196,7 +214,7 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         "speculative greedy serving must be token-identical to plain serving"
     assert spec_eng.spec_verify_launches > 0, \
         "speculative phase must exercise the verify path"
-    emit(f"serve_continuous/{cfg.name}/speculative", 0.0, {
+    record(f"serve_continuous/{cfg.name}/speculative", 0.0, {
         "token_identical": True,
         "spec_verify_launches": spec_eng.spec_verify_launches,
         "spec_generated_tokens": spec_eng.spec_generated_tokens,
@@ -217,7 +235,7 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         "tree-speculative greedy serving must be token-identical to plain"
     assert tree_eng.spec_tree_launches > 0, \
         "tree phase must exercise the tree verify path"
-    emit(f"serve_continuous/{cfg.name}/speculative_tree", 0.0, {
+    record(f"serve_continuous/{cfg.name}/speculative_tree", 0.0, {
         "token_identical": True,
         "tree": "2x1",
         "spec_tree_launches": tree_eng.spec_tree_launches,
@@ -229,13 +247,64 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         "fallbacks": len(tree_eng.spec_fallback_log),
     })
 
+    # block-paged phase: a shared-system-prompt trace (every prompt opens
+    # with the same 2-page prefix) served dense vs block-paged. Token
+    # identity is asserted, and the paged engine's pool telemetry — radix
+    # prefix hits, peak pages, occupancy — is the new reporting surface.
+    ps = 4
+    pcap = capacity + (-capacity) % ps
+    sys_prompt = tuple(1 + (j * 5) % (cfg.vocab_size - 1)
+                       for j in range(2 * ps))
+    paged_trace = [Request(rid=900 + i,
+                           prompt=sys_prompt + (1 + i % (cfg.vocab_size - 1),),
+                           max_new_tokens=4 + i % 4)
+                   for i in range(max(6, n_requests // 3))]
+
+    def serve_trace(paged):
+        eng = ServingEngine(params, cfg, batch_size=batch,
+                            cache_capacity=pcap, prefill_threshold=4,
+                            paged=paged)
+        eng.warmup()
+        for r in paged_trace:
+            eng.submit(Request(rid=r.rid, prompt=r.prompt,
+                               max_new_tokens=r.max_new_tokens))
+        busy = 0.0
+        while eng.queue or eng.n_active:
+            busy += eng.step()
+        assert eng.ctrl.stats["compiles"] == eng.compiles_after_warmup
+        return eng, busy
+
+    dense_eng, dense_busy = serve_trace(None)
+    paged_eng, paged_busy = serve_trace(PagedLayout(page_size=ps))
+    dense_out = {r.rid: tuple(r.generated) for r in dense_eng.completed}
+    paged_out = {r.rid: tuple(r.generated) for r in paged_eng.completed}
+    assert paged_out == dense_out, \
+        "block-paged greedy serving must be token-identical to dense"
+    paged_eng.check_paged_invariants()
+    pool = paged_eng.page_pool_stats()
+    assert any(st["radix_hits"] > 0 for st in pool.values()), \
+        "shared system prompt must hit the radix prefix cache"
+    gen = sum(len(r.generated) for r in paged_eng.completed)
+    tele = {k: {kk: round(vv, 2) for kk, vv in v.items()}
+            for k, v in paged_eng.ctrl.telemetry_summary().items()}
+    record(f"serve_continuous/{cfg.name}/paged_kv", 0.0, {
+        "token_identical": True,
+        "page_size": ps,
+        "tokens_per_s": round(gen / paged_busy, 1) if paged_busy else 0.0,
+        "dense_tokens_per_s": round(gen / dense_busy, 1) if dense_busy else 0.0,
+        "decode_launches": paged_eng.decode_launches,
+        "prefills": paged_eng.prefills,
+        "telemetry": tele,
+        "page_pool": {str(d): st for d, st in sorted(pool.items())},
+    })
+
     n_switches = len(slo_switches)
     assert engine.ctrl.stats["compiles"] == engine.compiles_after_warmup, \
         "mode churn must not recompile"
     assert n_switches >= 2, f"expected >= 2 admission mode switches, got {n_switches}"
     assert chosen_frac["tight"] < chosen_frac["generous"], \
         "tight budget must select a narrower mode"
-    emit(f"serve_continuous/{cfg.name}/summary", 0.0, {
+    record(f"serve_continuous/{cfg.name}/summary", 0.0, {
         "admission_switches": n_switches,
         # only the SLO-driven phases — calibration and forced mixed-width
         # cycling are excluded, consistent with the count above
@@ -246,6 +315,14 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         "telemetry": {k: {kk: round(vv, 2) for kk, vv in v.items()}
                       for k, v in engine.ctrl.telemetry_summary().items()},
     })
+
+    # the tracked serving baseline: every phase's derived metrics, one file
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"arch": cfg.name, "n_requests": n_requests,
+                   "batch": batch, "capacity": capacity, "phases": bench},
+                  f, indent=2, sort_keys=True)
+    print(f"[serve_continuous] wrote {BENCH_JSON}")
 
 
 def run_mesh(arch: str = "tinyllama-1.1b", n_requests: int = 12,

@@ -22,6 +22,13 @@
 #                                # subprocess case) + the spec_decode
 #                                # tree-vs-linear benchmark at equal node
 #                                # budget
+#   scripts/ci.sh --paged-smoke  # additionally run the block-paged KV
+#                                # shard: dense-vs-paged token-identical
+#                                # equivalence (mixed widths + depth switch
+#                                # + shared-prefix adoption, full-attn /
+#                                # SWA / kv-quant, spec + tree) locally and
+#                                # on a 2x4 CPU mesh subprocess, plus the
+#                                # allocator/radix property tests
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -33,15 +40,36 @@ BENCH_SMOKE=0
 MESH_SMOKE=0
 SPEC_SMOKE=0
 TREE_SMOKE=0
+PAGED_SMOKE=0
 for arg in "$@"; do
     case "$arg" in
         --bench-smoke) BENCH_SMOKE=1 ;;
         --mesh-smoke) MESH_SMOKE=1 ;;
         --spec-smoke) SPEC_SMOKE=1 ;;
         --tree-smoke) TREE_SMOKE=1 ;;
+        --paged-smoke) PAGED_SMOKE=1 ;;
         *) echo "ci.sh: unknown argument '$arg'" >&2; exit 2 ;;
     esac
 done
+
+if [ "$PAGED_SMOKE" -eq 1 ]; then
+    echo "CI: paged-smoke shard (block-paged KV cache)"
+    PAGED_TIMEOUT="${CI_PAGED_TIMEOUT:-1200}"
+    # dense-vs-paged token identity (mixed widths + depth switch +
+    # shared-prefix adoption; full-attn / SWA / kv-quant; linear-spec and
+    # token-tree engines; incl. the 2x4 CPU mesh subprocess case) plus the
+    # allocator/radix property tests and the paged engine invariants
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$PAGED_TIMEOUT" \
+        python -m pytest -q tests/test_serving_paged.py \
+        "tests/test_serving.py::test_engine_slot_invariants_under_random_traces" \
+        "tests/test_serving.py::test_block_allocator_free_list_roundtrip" \
+        "tests/test_serving.py::test_radix_insert_match_evict_deterministic" \
+        "tests/test_serving.py::test_radix_allocator_properties"; then
+        echo "CI: FAIL (block-paged KV tests)"
+        exit 1
+    fi
+    echo "CI: paged-smoke OK"
+fi
 
 if [ "$TREE_SMOKE" -eq 1 ]; then
     echo "CI: tree-smoke shard (token-tree speculation)"

@@ -47,6 +47,13 @@ from repro.models.model import decode_step
 from repro.parallel import sharding as _sh
 
 
+def paged_decode_compile_key(depth: int, bucket: int) -> Tuple:
+    """Compile key of the paged one-token decode executable for one
+    (depth, page-table-width bucket). Disjoint from the per-depth dense keys
+    and the speculative aux keys."""
+    return ("paged_decode", depth, bucket)
+
+
 class ModeTelemetry:
     """Online per-mode step-latency / throughput statistics.
 
@@ -218,7 +225,8 @@ def make_serve_controller(params, cfg: ModelConfig,
                           mesh=None, policy: str = "serve_tp",
                           param_shardings=None, cache_shardings=None,
                           activation_specs=None, verify_activation_specs=None,
-                          speculative=None) -> MorphController:
+                          speculative=None, paged_page_size: int = 0,
+                          paged_buckets: Tuple[int, ...] = ()) -> MorphController:
     """Serving controller: ONE jitted decode executable per *depth*.
 
     Each executable's signature is ``step(params, cache, tokens, active)``:
@@ -255,6 +263,17 @@ def make_serve_controller(params, cfg: ModelConfig,
     as the decode steps (tokens / keys / temperature replicated; the verify
     cache donated and sharded in and out; the draft cache NOT donated — its
     in-scan updates are discarded to keep the committed state rollback-safe).
+
+    ``paged_page_size`` > 0 switches the whole serving surface to the
+    block-paged cache layout (``models.paged``): every executable takes a
+    trailing traced page-table operand, the one-token decode path is keyed
+    ``("paged_decode", depth, bucket)`` for every table-width bucket in
+    ``paged_buckets`` (the zero-re-trace discipline over variable-length
+    slots: slots whose page counts fall in one bucket share one executable),
+    and the speculative draft/verify executables read/write the page pool at
+    the full table width. The per-depth mode table is still registered (and
+    warmed without tracing) but a paged engine dispatches the bucketed aux
+    keys instead.
     """
     trace_counter = {"n": 0}
     if mesh is not None:
@@ -294,6 +313,30 @@ def make_serve_controller(params, cfg: ModelConfig,
     ctrl.trace_counter = trace_counter
     ctrl.spec_plan = {}
 
+    if paged_page_size:
+        def paged_factory(depth: int, bucket: int):
+            def step(p, cache, tokens, active, pages):
+                trace_counter["n"] += 1  # executes at trace time only
+                if mesh is None:
+                    return decode_step(p, cache, tokens, cfg, depth=depth,
+                                       active=active, pages=pages,
+                                       page_size=paged_page_size)
+                with _sh.activation_sharding(mesh, aspecs):
+                    return decode_step(p, cache, tokens, cfg, depth=depth,
+                                       active=active, pages=pages,
+                                       page_size=paged_page_size)
+
+            if mesh is None:
+                return lambda: jax.jit(step, donate_argnums=(1,))
+            pd_in = (param_shardings, cache_shardings, rep, active_sh, rep)
+            return lambda: jax.jit(step, in_shardings=pd_in,
+                                   out_shardings=out_sh, donate_argnums=(1,))
+
+        for d in sorted({m.depth for m in ctrl.modes}):
+            for b in paged_buckets:
+                ctrl.register_aux(paged_decode_compile_key(d, b),
+                                  paged_factory(d, b))
+
     if speculative is not None:
         # local import: repro.runtime's package init imports the serving
         # engine, which imports this module — a top-level import would cycle
@@ -312,86 +355,125 @@ def make_serve_controller(params, cfg: ModelConfig,
                       if verify_activation_specs is not None
                       else _sh.verify_specs(cfg, mesh, policy))
 
-        def draft_factory(draft_depth: int, k: int):
-            fn = _spec.make_draft_step(cfg, draft_depth, k, top_k)
+        # paged serving appends one replicated traced operand (the page
+        # table) to every speculative executable's signature
+        pg_tail = (rep,) if (paged_page_size and mesh is not None) else ()
 
-            def step(p, cache, tok0, active, keys, temperature, step_ct):
+        def draft_factory(draft_depth: int, k: int):
+            fn = _spec.make_draft_step(cfg, draft_depth, k, top_k,
+                                       page_size=paged_page_size)
+
+            def _run(args):
                 trace_counter["n"] += 1  # executes at trace time only
                 if mesh is None:
-                    return fn(p, cache, tok0, active, keys, temperature,
-                              step_ct)
+                    return fn(*args)
                 with _sh.activation_sharding(mesh, aspecs):
-                    return fn(p, cache, tok0, active, keys, temperature,
-                              step_ct)
+                    return fn(*args)
+
+            if paged_page_size:
+                def step(p, cache, tok0, active, keys, temperature, step_ct,
+                         pages):
+                    return _run((p, cache, tok0, active, keys, temperature,
+                                 step_ct, pages))
+            else:
+                def step(p, cache, tok0, active, keys, temperature, step_ct):
+                    return _run((p, cache, tok0, active, keys, temperature,
+                                 step_ct))
 
             if mesh is None:
                 return lambda: jax.jit(step)
             d_in = (param_shardings, cache_shardings, rep, active_sh, rep,
-                    rep, rep)
+                    rep, rep) + pg_tail
             return lambda: jax.jit(step, in_shardings=d_in,
                                    out_shardings=(rep, rep))
 
         def verify_factory(depth: int, k: int):
-            fn = _spec.make_verify_step(cfg, depth, k, top_k)
+            fn = _spec.make_verify_step(cfg, depth, k, top_k,
+                                        page_size=paged_page_size)
 
-            def step(p, cache, toks, dlogits, active, keys, temperature,
-                     step_ct):
+            def _run(args):
                 trace_counter["n"] += 1  # executes at trace time only
                 if mesh is None:
-                    return fn(p, cache, toks, dlogits, active, keys,
-                              temperature, step_ct)
+                    return fn(*args)
                 with _sh.activation_sharding(mesh, vspecs):
-                    return fn(p, cache, toks, dlogits, active, keys,
-                              temperature, step_ct)
+                    return fn(*args)
+
+            if paged_page_size:
+                def step(p, cache, toks, dlogits, active, keys, temperature,
+                         step_ct, pages):
+                    return _run((p, cache, toks, dlogits, active, keys,
+                                 temperature, step_ct, pages))
+            else:
+                def step(p, cache, toks, dlogits, active, keys, temperature,
+                         step_ct):
+                    return _run((p, cache, toks, dlogits, active, keys,
+                                 temperature, step_ct))
 
             if mesh is None:
                 return lambda: jax.jit(step, donate_argnums=(1,))
             v_in = (param_shardings, cache_shardings, rep, rep, active_sh,
-                    rep, rep, rep)
+                    rep, rep, rep) + pg_tail
             v_out = (rep, rep, cache_shardings)
             return lambda: jax.jit(step, in_shardings=v_in,
                                    out_shardings=v_out, donate_argnums=(1,))
 
         def tree_draft_factory(draft_depth: int, branching):
             fn = _spec.make_tree_draft_step(cfg, draft_depth, branching,
-                                            top_k)
+                                            top_k, page_size=paged_page_size)
 
-            def step(p, cache, tok0, active, keys, temperature, step_ct):
+            def _run(args):
                 trace_counter["n"] += 1  # executes at trace time only
                 if mesh is None:
-                    return fn(p, cache, tok0, active, keys, temperature,
-                              step_ct)
+                    return fn(*args)
                 # tree drafting scores (B, n_nodes) multi-position passes
                 # internally, so it needs the VERIFY pins, not the one-token
                 # decode pins (same XLA CPU by-head bug class)
                 with _sh.activation_sharding(mesh, vspecs):
-                    return fn(p, cache, tok0, active, keys, temperature,
-                              step_ct)
+                    return fn(*args)
+
+            if paged_page_size:
+                def step(p, cache, tok0, active, keys, temperature, step_ct,
+                         pages):
+                    return _run((p, cache, tok0, active, keys, temperature,
+                                 step_ct, pages))
+            else:
+                def step(p, cache, tok0, active, keys, temperature, step_ct):
+                    return _run((p, cache, tok0, active, keys, temperature,
+                                 step_ct))
 
             if mesh is None:
                 return lambda: jax.jit(step)
             d_in = (param_shardings, cache_shardings, rep, active_sh, rep,
-                    rep, rep)
+                    rep, rep) + pg_tail
             return lambda: jax.jit(step, in_shardings=d_in,
                                    out_shardings=(rep, rep))
 
         def tree_verify_factory(depth: int, branching):
-            fn = _spec.make_tree_verify_step(cfg, depth, branching, top_k)
+            fn = _spec.make_tree_verify_step(cfg, depth, branching, top_k,
+                                             page_size=paged_page_size)
 
-            def step(p, cache, toks, dlogits, active, keys, temperature,
-                     step_ct):
+            def _run(args):
                 trace_counter["n"] += 1  # executes at trace time only
                 if mesh is None:
-                    return fn(p, cache, toks, dlogits, active, keys,
-                              temperature, step_ct)
+                    return fn(*args)
                 with _sh.activation_sharding(mesh, vspecs):
-                    return fn(p, cache, toks, dlogits, active, keys,
-                              temperature, step_ct)
+                    return fn(*args)
+
+            if paged_page_size:
+                def step(p, cache, toks, dlogits, active, keys, temperature,
+                         step_ct, pages):
+                    return _run((p, cache, toks, dlogits, active, keys,
+                                 temperature, step_ct, pages))
+            else:
+                def step(p, cache, toks, dlogits, active, keys, temperature,
+                         step_ct):
+                    return _run((p, cache, toks, dlogits, active, keys,
+                                 temperature, step_ct))
 
             if mesh is None:
                 return lambda: jax.jit(step, donate_argnums=(1,))
             v_in = (param_shardings, cache_shardings, rep, rep, active_sh,
-                    rep, rep, rep)
+                    rep, rep, rep) + pg_tail
             v_out = (rep, rep, cache_shardings)
             return lambda: jax.jit(step, in_shardings=v_in,
                                    out_shardings=v_out, donate_argnums=(1,))

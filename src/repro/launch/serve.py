@@ -61,6 +61,7 @@ from repro.configs import get_config, smoke_config
 from repro.core import elastic
 from repro.launch.mesh import make_serve_mesh
 from repro.models.model import init_params
+from repro.models.paged import PagedLayout
 from repro.runtime.serving import (MeshExecutor, Request, ServingEngine,
                                    SLOPolicy)
 from repro.runtime.speculative import SpecConfig
@@ -104,6 +105,17 @@ def main(argv=None):
     ap.add_argument("--spec-draft-depth", type=int, default=0,
                     help="draft exit depth in layer groups (0 = deepest "
                          "exit shallower than each serving depth)")
+    ap.add_argument("--kv-page-size", type=int, default=0,
+                    help="block-paged KV cache: tokens per physical page "
+                         "(0 = dense per-slot buffers). Must divide the "
+                         "cache capacity, and the sliding window when the "
+                         "arch uses one; shared prompt prefixes then reuse "
+                         "physical pages via the radix cache")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="physical page-pool size (0 = worst case: every "
+                         "slot at full length + scratch). Requires "
+                         "--kv-page-size; undersizing trades admission "
+                         "failures for memory")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -143,18 +155,36 @@ def main(argv=None):
             trees=spec_trees,
             draft_depth=args.spec_draft_depth or None,
             top_k=args.top_k)
+    paged = None
+    if args.kv_pages and not args.kv_page_size:
+        ap.error("--kv-pages requires --kv-page-size (a pool needs a page "
+                 "geometry)")
+    if args.kv_page_size:
+        # round the derived capacity up to a page boundary so the layout
+        # validates for any --tokens/--batch combination
+        capacity += (-capacity) % args.kv_page_size
+        paged = PagedLayout(page_size=args.kv_page_size,
+                            n_pages=args.kv_pages or None)
+        try:
+            paged.validate(cfg, capacity)
+        except ValueError as e:
+            ap.error(str(e))
     engine = ServingEngine(params, cfg, batch_size=args.batch,
                            cache_capacity=capacity, modes=modes,
                            executor=executor,
                            prefill_threshold=args.prefill_threshold,
                            speculative=speculative,
                            temperature=args.temperature, top_k=args.top_k,
-                           sample_seed=args.seed)
+                           sample_seed=args.seed, paged=paged)
     mesh_note = (f" mesh=dp{dp}xtp{tp} policy={engine.executor.policy}"
                  if args.mesh else "")
+    paged_note = ""
+    if paged is not None:
+        pool = paged.pool_pages(cfg, args.batch, capacity)
+        paged_note = f" kv=paged({args.kv_page_size} tok/page, {pool} pages)"
     print(f"[serve] {cfg.name}: modes = {[m.name for m in modes]} "
           f"requests={n_requests} x {per_req} tokens, batch={args.batch}"
-          f"{mesh_note}")
+          f"{mesh_note}{paged_note}")
     engine.warmup()
 
     for i in range(n_requests):
@@ -203,6 +233,13 @@ def main(argv=None):
               f"launches {t['launches']}")
     if engine.spec_fallback_log:
         print(f"  spec fallbacks: {list(engine.spec_fallback_log)}")
+    if paged is not None:
+        engine.check_paged_invariants()
+        for depth, st in sorted(engine.page_pool_stats().items()):
+            print(f"  pages depth={depth}: pool {st['n_pages']} "
+                  f"peak {st['peak_in_use']} allocs {st['allocs']} "
+                  f"radix hit-rate {st['radix_hit_rate'] * 100:.0f}% "
+                  f"({st['radix_nodes']} nodes)")
     return 0
 
 

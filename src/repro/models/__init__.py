@@ -11,6 +11,13 @@ from repro.models.model import (
     reset_cache_slots,
     adopt_cache_slot,
 )
+from repro.models.paged import (
+    PagedLayout,
+    adopt_paged_slot,
+    copy_page,
+    init_paged_cache,
+    paged_view,
+)
 
 __all__ = [
     "cross_entropy",
@@ -24,4 +31,9 @@ __all__ = [
     "reset_cache_slot",
     "reset_cache_slots",
     "adopt_cache_slot",
+    "PagedLayout",
+    "adopt_paged_slot",
+    "copy_page",
+    "init_paged_cache",
+    "paged_view",
 ]

@@ -386,7 +386,7 @@ def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, dtype):
 
 
 def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False,
-               active=None):
+               active=None, pages=None, page_size=0):
     """One-token decode. x: (B,1,d); cache dict; pos: scalar int32 or (B,)
     per-slot positions (continuous batching: each batch slot is an independent
     request at its own sequence offset).
@@ -396,6 +396,15 @@ def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False,
     width are exactly zero, so inactive heads score uniformly over zero
     values and contribute nothing, and the output projection's contraction
     skips inactive head columns — one executable serves every width.
+
+    ``pages`` switches the cache to the block-paged layout (see
+    ``models.paged``): cache K/V leaves are physical page pools
+    ``(n_pages, page_size, KV, hd)`` and ``pages`` is the traced
+    ``(B, P)`` int32 page table. The new K/V is written to the physical
+    (page, offset) the slot's position maps to, then attention runs over the
+    gathered per-slot view — garbage columns (table entries past a slot's
+    length) sit at kpos = -1e9 and contribute exact zeros, so the paged
+    path is bit-identical to the dense one. Requires per-slot positions.
 
     Returns (out, new_cache). For cross-attention the cache holds precomputed
     encoder K/V and is returned unchanged.
@@ -439,19 +448,39 @@ def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False,
     k_new = constrain(k_new, "decode_kv")
     v_new = constrain(v_new, "decode_kv")
 
-    S = cache["k"].shape[1]
     window = cfg.sliding_window
-    slot = jnp.mod(pos, S) if window else jnp.minimum(pos, S - 1)
+    if pages is not None:
+        if not per_slot:
+            raise ValueError("paged decode needs per-slot positions (pos (B,))")
+        ps = page_size
+        S = pages.shape[1] * ps  # positions visible through the table
+        slot = jnp.mod(pos, S) if window else jnp.minimum(pos, S - 1)
+        page_ix = slot // ps
+        off = slot - page_ix * ps
+        phys = jnp.take_along_axis(pages, page_ix[:, None], axis=1)[:, 0]
 
-    if per_slot:
-        batch_ix = jnp.arange(B)
+        def write(buf, new):  # buf: (n_pages, page_size, ...)
+            return buf.at[phys, off].set(new[:, 0].astype(buf.dtype))
 
-        def write(buf, new):
-            return buf.at[batch_ix, slot].set(new[:, 0].astype(buf.dtype))
+        def view(buf):
+            g = jnp.take(buf, pages, axis=0)
+            return g.reshape((B, S) + buf.shape[2:])
     else:
-        def write(buf, new):
-            return jax.lax.dynamic_update_slice_in_dim(
-                buf, new.astype(buf.dtype), slot, axis=1)
+        S = cache["k"].shape[1]
+        slot = jnp.mod(pos, S) if window else jnp.minimum(pos, S - 1)
+
+        def view(buf):
+            return buf
+
+        if per_slot:
+            batch_ix = jnp.arange(B)
+
+            def write(buf, new):
+                return buf.at[batch_ix, slot].set(new[:, 0].astype(buf.dtype))
+        else:
+            def write(buf, new):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    buf, new.astype(buf.dtype), slot, axis=1)
 
     new_cache = dict(cache)
     if cfg.kv_quant:
@@ -461,12 +490,18 @@ def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False,
         new_cache["v"] = write(cache["v"], vq)
         new_cache["k_scale"] = write(cache["k_scale"], ks)
         new_cache["v_scale"] = write(cache["v_scale"], vs)
-        k = dequantize_kv(new_cache["k"], new_cache["k_scale"], dt)
-        v = dequantize_kv(new_cache["v"], new_cache["v_scale"], dt)
+        k = dequantize_kv(view(new_cache["k"]), view(new_cache["k_scale"]), dt)
+        v = dequantize_kv(view(new_cache["v"]), view(new_cache["v_scale"]), dt)
     else:
         new_cache["k"] = write(cache["k"], k_new)
         new_cache["v"] = write(cache["v"], v_new)
-        k, v = new_cache["k"].astype(dt), new_cache["v"].astype(dt)
+        k, v = view(new_cache["k"]).astype(dt), view(new_cache["v"]).astype(dt)
+    if pages is not None:
+        # mesh serving: the gather collapses the pool's page axis into a
+        # per-slot seq axis — pin the result back to the by-head layout the
+        # attention math below assumes (no-op outside a sharding context)
+        k = constrain(k, "decode_kv")
+        v = constrain(v, "decode_kv")
 
     # kpos: absolute position of each cache slot. With per-slot pos the mask
     # broadcasts to (B, S) — stale entries from a slot's previous request sit
@@ -503,7 +538,7 @@ def _cache_kpos(pos, n_slots: int, window: int):
 
 
 def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None,
-               node_depth=None, tree_bias=None):
+               node_depth=None, tree_bias=None, pages=None, page_size=0):
     """Speculative verify attention: score S positions in one pass.
 
     x: (B, S, d) — embeddings of the last committed token followed by S-1
@@ -523,6 +558,11 @@ def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None,
     over the new-KV block — position masking alone cannot separate sibling
     branches sitting at the same depth. Default (both None) is the linear
     window ``pos .. pos+S-1``.
+
+    With ``pages`` (traced (B, P) int32 table; see ``models.paged``) the
+    cache operands are page pools and the committed K/V is read through the
+    gathered per-slot view — same masking argument as ``mha_decode``, same
+    bit-identity to the dense path.
 
     Returns (out (B, S, d), {"k": k_new, "v": v_new} with (B, S, KV, hd)).
     """
@@ -550,10 +590,23 @@ def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None,
     k_new = constrain(k_new, "decode_kv")
     v_new = constrain(v_new, "decode_kv")
 
-    kc, vc = cache["k"], cache["v"]
-    if cfg.kv_quant and "k_scale" in cache:
+    if pages is not None:
+        Sv = pages.shape[1] * page_size
+
+        def _view(buf):
+            g = jnp.take(buf, pages, axis=0)
+            return g.reshape((B, Sv) + buf.shape[2:])
+
+        kc, vc = _view(cache["k"]), _view(cache["v"])
+        if cfg.kv_quant and "k_scale" in cache:
+            kc = dequantize_kv(kc, _view(cache["k_scale"]), dt)
+            vc = dequantize_kv(vc, _view(cache["v_scale"]), dt)
+    else:
+        kc, vc = cache["k"], cache["v"]
+    if cfg.kv_quant and "k_scale" in cache and pages is None:
         kc = dequantize_kv(kc, cache["k_scale"], dt)
         vc = dequantize_kv(vc, cache["v_scale"], dt)
+    if cfg.kv_quant and "k_scale" in cache:
         # attend over the quantize->dequantize round trip of the NEW entries
         # too: that is what sequential mha_decode reads back from the cache,
         # and what commit_verify will store — raw values would break the

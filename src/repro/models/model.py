@@ -340,14 +340,14 @@ def reset_cache_slot(cache: Cache, slot) -> Cache:
     rewound position hides the previous occupant's keys. Jit this once per
     cache structure (with the cache donated) — ``slot`` is a traced scalar,
     so re-admission never recompiles or copies.
+
+    Thin wrapper over ``reset_cache_slots`` with a one-hot mask — one reset
+    implementation serves both the scalar and the batched call sites (and
+    both cache layouts: pooled attention leaves are not recurrent keys, so
+    the paged cache resets identically).
     """
-    stack = {
-        pname: {k: (a.at[:, slot].set(jnp.zeros_like(a[:, slot]))
-                    if k in _RECURRENT_CACHE_KEYS else a)
-                for k, a in layer.items()}
-        for pname, layer in cache["stack"].items()
-    }
-    return {"pos": cache["pos"].at[slot].set(0), "stack": stack}
+    n_slots = cache["pos"].shape[0]
+    return reset_cache_slots(cache, jnp.arange(n_slots) == slot)
 
 
 def reset_cache_slots(cache: Cache, mask) -> Cache:
@@ -389,7 +389,7 @@ def adopt_cache_slot(cache: Cache, pre: Cache, slot) -> Cache:
 
 
 def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig,
-                  active=None):
+                  active=None, pages=None, page_size=0):
     new_cache = {}
     for p in range(cfg.period):
         lp = group_params[f"pos{p}"]
@@ -400,7 +400,8 @@ def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig,
         if kind == "attn":
             self_keys = {k: v for k, v in cp.items() if not k.startswith("cross_")}
             mix, upd = L.mha_decode(lp["attn"], hn, self_keys, pos, cfg,
-                                    active=active)
+                                    active=active, pages=pages,
+                                    page_size=page_size)
             nc.update(upd)
         else:
             self_keys = {k: cp[k] for k in ("conv_x", "conv_bc", "state")}
@@ -430,8 +431,13 @@ def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig,
 
 
 def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int] = None,
-                active=None):
+                active=None, pages=None, page_size=0):
     """One-token decode. tokens: (B, 1). Returns (logits (B,1,Vp), new_cache).
+
+    ``pages`` / ``page_size`` switch the attention cache to the block-paged
+    layout (``models.paged``): ``pages`` is the traced (B, P) int32 page
+    table a paged ``cache``'s pooled K/V leaves are read and written
+    through. SSM leaves are per-slot dense either way.
 
     ``active`` is the runtime width-morph operand (see
     ``elastic.active_widths_batch``): a dict of active inner-dim sizes,
@@ -462,7 +468,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int]
         gc = jax.tree_util.tree_map(
             lambda a: jax.lax.dynamic_index_in_dim(a, g_idx, 0, keepdims=False),
             cache_stack)
-        h, nc = _group_decode(gp, gc, h, pos, cfg, active=active)
+        h, nc = _group_decode(gp, gc, h, pos, cfg, active=active,
+                              pages=pages, page_size=page_size)
         h = _sh.constrain(h, "residual")  # mesh serving: pin the decode stream
         cache_stack = jax.tree_util.tree_map(
             lambda full, new: jax.lax.dynamic_update_index_in_dim(
@@ -481,7 +488,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int]
 
 
 def _group_verify(group_params, group_cache, h, pos, cfg: ModelConfig,
-                  active=None, tree=None):
+                  active=None, tree=None, pages=None, page_size=0):
     """One period of layers over S speculative positions (read-only cache).
 
     Mirrors ``_group_decode`` but scores ``h`` (B, S, d) at absolute positions
@@ -502,7 +509,8 @@ def _group_verify(group_params, group_cache, h, pos, cfg: ModelConfig,
             mix, c = L.mha_verify(
                 lp["attn"], hn, self_keys, pos, cfg, active=active,
                 node_depth=None if tree is None else tree.depths,
-                tree_bias=None if tree is None else tree.ancestor_bias)
+                tree_bias=None if tree is None else tree.ancestor_bias,
+                pages=pages, page_size=page_size)
         else:
             self_keys = {k: cp[k] for k in ("conv_x", "conv_bc", "state")}
             if tree is None:
@@ -527,7 +535,8 @@ def _group_verify(group_params, group_cache, h, pos, cfg: ModelConfig,
 
 
 def verify_step(params, cache, tokens, cfg: ModelConfig, *,
-                depth: Optional[int] = None, active=None):
+                depth: Optional[int] = None, active=None, pages=None,
+                page_size=0):
     """Speculative-decoding verifier: score S = K+1 positions in ONE pass.
 
     ``tokens`` is (B, S): the last committed token of each slot followed by
@@ -571,7 +580,8 @@ def verify_step(params, cache, tokens, cfg: ModelConfig, *,
 
     def body(h, xs):
         gp, gc = xs
-        h, cand = _group_verify(gp, gc, h, pos, cfg, active=active)
+        h, cand = _group_verify(gp, gc, h, pos, cfg, active=active,
+                                pages=pages, page_size=page_size)
         h = _sh.constrain(h, "residual")
         return h, cand
 
@@ -585,7 +595,8 @@ def verify_step(params, cache, tokens, cfg: ModelConfig, *,
 
 
 def verify_tree(params, cache, tokens, cfg: ModelConfig, *, tree,
-                depth: Optional[int] = None, active=None):
+                depth: Optional[int] = None, active=None, pages=None,
+                page_size=0):
     """Token-tree verifier: score a whole candidate tree in ONE pass.
 
     ``tokens`` is (B, N): the flattened token tree in BFS level order, node 0
@@ -636,7 +647,8 @@ def verify_tree(params, cache, tokens, cfg: ModelConfig, *, tree,
 
     def body(h, xs):
         gp, gc = xs
-        h, cand = _group_verify(gp, gc, h, pos, cfg, active=active, tree=tree)
+        h, cand = _group_verify(gp, gc, h, pos, cfg, active=active, tree=tree,
+                                pages=pages, page_size=page_size)
         h = _sh.constrain(h, "residual")
         return h, cand
 
@@ -650,7 +662,7 @@ def verify_tree(params, cache, tokens, cfg: ModelConfig, *, tree,
 
 
 def commit_verify(cache, pending, n_accepted, cfg: ModelConfig,
-                  path_nodes=None) -> Cache:
+                  path_nodes=None, pages=None, page_size=0) -> Cache:
     """Advance each slot by ``n_accepted + 1`` tokens from a verify pass.
 
     ``pending`` comes from ``verify_step`` over S positions; ``n_accepted``
@@ -670,6 +682,12 @@ def commit_verify(cache, pending, n_accepted, cfg: ModelConfig,
     valid pad). Every pending leaf is first gathered along its node axis by
     the path — after which the accepted branch IS a linear window and the
     masked scatter / one-hot select below applies unchanged.
+
+    With ``pages`` (traced (B, P) int32 table; see ``models.paged``) the
+    attention scatter resolves each target position to its physical
+    (page, offset) through the table; rejected lanes still write the old
+    values back, so rolled-back positions leave the pool untouched — the
+    host then frees the tail pages speculation reached past the commit.
     """
     pos = cache["pos"]  # (B,) committed-token counts before this launch
     n_accepted = jnp.asarray(n_accepted, jnp.int32)
@@ -693,16 +711,27 @@ def commit_verify(cache, pending, n_accepted, cfg: ModelConfig,
     batch_ix = jnp.arange(B)
 
     def scatter_kv(full, new):
-        """full: (G, B, Sc, ...); new: (d, B, S, ...) — masked scatter at the
-        slots positions pos..pos+S-1 map to (rolling for sliding windows)."""
-        Sc = full.shape[2]
+        """full: (G, B, Sc, ...) dense, or (G, n_pages, page_size, ...) paged;
+        new: (d, B, S, ...) — masked scatter at the slots positions
+        pos..pos+S-1 map to (rolling for sliding windows)."""
         tgt = pos[:, None] + j[None, :]
-        slot = jnp.mod(tgt, Sc) if cfg.sliding_window else jnp.minimum(tgt, Sc - 1)
         sub = full[:d]
-        old = sub[:, batch_ix[:, None], slot]  # (d, B, S, ...)
         m = acc.reshape((1, B, S) + (1,) * (new.ndim - 3))
-        vals = jnp.where(m, new.astype(full.dtype), old)
-        sub = sub.at[:, batch_ix[:, None], slot].set(vals)
+        if pages is not None:
+            Sv = pages.shape[1] * page_size
+            slot = jnp.mod(tgt, Sv) if cfg.sliding_window else jnp.minimum(tgt, Sv - 1)
+            pg = slot // page_size  # (B, S) logical page per position
+            phys = jnp.take_along_axis(pages, pg, axis=1)
+            off = slot - pg * page_size
+            old = sub[:, phys, off]  # (d, B, S, ...)
+            vals = jnp.where(m, new.astype(full.dtype), old)
+            sub = sub.at[:, phys, off].set(vals)
+        else:
+            Sc = full.shape[2]
+            slot = jnp.mod(tgt, Sc) if cfg.sliding_window else jnp.minimum(tgt, Sc - 1)
+            old = sub[:, batch_ix[:, None], slot]  # (d, B, S, ...)
+            vals = jnp.where(m, new.astype(full.dtype), old)
+            sub = sub.at[:, batch_ix[:, None], slot].set(vals)
         return jnp.concatenate([sub, full[d:]], axis=0)
 
     def select_step(full, new):

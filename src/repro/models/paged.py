@@ -1,0 +1,231 @@
+"""Block-paged attention-KV layout: page pool + page-table indexing.
+
+Dense serving caches give every batch slot a private ``capacity``-long K/V
+buffer — max concurrency equals ``n_slots`` and every request pays worst-case
+sequence length. The paged layout replaces the per-slot buffers with ONE
+physical page pool per layer group:
+
+    dense:  k  (n_groups, n_slots, capacity, KV, hd)
+    paged:  k  (n_groups, n_pages, page_size, KV, hd)
+
+plus a per-slot *page table* — a small ``(n_slots, n_pages_mapped)`` int32
+array mapping each slot's logical page ``p`` (positions ``p*page_size ..``)
+to a physical page. The table is host-managed (``runtime.paged_cache``) and
+rides each decode/verify launch as a traced operand, so remapping pages never
+recompiles, and two slots whose prompts share a full-page prefix can point
+their first table entries at the SAME physical blocks.
+
+Only attention K/V is paged. SSM conv tails / state are O(1) per slot and
+recurrent (no sequence axis to page), so they stay per-slot dense — the cache
+is heterogeneous by design, and every consumer (reset/adopt/sharding/commit)
+dispatches on leaf names (``_PAGED_KEYS``) rather than assuming one layout.
+
+Exactness: a slot's gathered view ``pool[table[i]]`` reshaped to
+``(Sv, KV, hd)`` reproduces the dense buffer's first ``Sv`` columns wherever
+the dense buffer was written; remaining columns hold garbage from other
+requests, but every such column sits at ``kpos`` masked to -1e9 and
+``exp(-1e9 + s)`` underflows to exactly 0.0 in f32 — adding exact zeros
+leaves every softmax/output reduction bit-identical to the dense path. The
+equivalence tests in ``tests/test_serving_paged.py`` assert token identity,
+not closeness.
+
+Compile keys: the traced table's WIDTH (max pages visible to a launch) is a
+shape, hence a compile key. ``PagedLayout.buckets`` quantizes widths to a
+power-of-two ladder so the zero-re-trace discipline survives variable-length
+slots — all slots whose page counts fall in one bucket share one executable.
+Sliding-window groups use a single fixed bucket (the rolling buffer never
+grows past ``window // page_size`` pages).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as SSM
+
+# Cache leaf names that live in the paged pool (everything else — SSM conv
+# tails/state, encoder cross-K/V — stays per-slot dense).
+_PAGED_KEYS = ("k", "v", "k_scale", "v_scale")
+
+
+def is_paged_key(name: str) -> bool:
+    return name in _PAGED_KEYS
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static description of a block-paged KV cache.
+
+    ``page_size``: tokens per physical page. ``n_pages``: total physical
+    pages in the pool, or None to size for the worst case (every slot at
+    full length, plus one scratch page per slot — see ``pool_pages``).
+    """
+
+    page_size: int
+    n_pages: Optional[int] = None
+
+    def validate(self, cfg: ModelConfig, capacity: int) -> None:
+        ps = self.page_size
+        if ps <= 0:
+            raise ValueError(f"kv page size must be positive, got {ps}")
+        if capacity % ps:
+            raise ValueError(
+                f"kv page size {ps} must divide the cache capacity {capacity}")
+        if cfg.sliding_window and cfg.sliding_window % ps:
+            raise ValueError(
+                f"kv page size {ps} must divide the sliding window "
+                f"{cfg.sliding_window} (the rolling buffer wraps at page "
+                f"boundaries)")
+        if self.n_pages is not None and self.n_pages <= 0:
+            raise ValueError(f"kv page pool must be positive, got {self.n_pages}")
+
+    def seq_capacity(self, cfg: ModelConfig, capacity: int) -> int:
+        """Max cache positions per slot (the dense buffer's seq length)."""
+        w = cfg.sliding_window
+        return min(capacity, w) if w else capacity
+
+    def cap_pages(self, cfg: ModelConfig, capacity: int) -> int:
+        """Logical pages a slot needs at full length (= max table width)."""
+        return self.seq_capacity(cfg, capacity) // self.page_size
+
+    def pool_pages(self, cfg: ModelConfig, batch: int, capacity: int) -> int:
+        """Physical pool size: explicit ``n_pages`` or the safe default.
+
+        The default guarantees allocation can never fail: every slot at full
+        length plus (full attention only) one permanently-owned scratch page
+        per slot that free slots' table rows point at, so whole-batch
+        launches write their garbage somewhere harmless.
+        """
+        if self.n_pages is not None:
+            return self.n_pages
+        scratch = 0 if cfg.sliding_window else 1
+        return batch * (self.cap_pages(cfg, capacity) + scratch)
+
+    def buckets(self, cfg: ModelConfig, capacity: int) -> Tuple[int, ...]:
+        """Page-table widths that become compile keys (ascending).
+
+        Full attention: powers of two up to the full-length page count, plus
+        the full count. Sliding window: one fixed bucket — the rolling
+        buffer is always ``window // page_size`` pages wide.
+        """
+        cp = self.cap_pages(cfg, capacity)
+        if cfg.sliding_window:
+            return (cp,)
+        out = []
+        b = 1
+        while b < cp:
+            out.append(b)
+            b *= 2
+        out.append(cp)
+        return tuple(out)
+
+    def bucket_for(self, cfg: ModelConfig, capacity: int, needed: int) -> int:
+        """Smallest bucket covering ``needed`` pages."""
+        for b in self.buckets(cfg, capacity):
+            if b >= needed:
+                return b
+        return self.cap_pages(cfg, capacity)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, capacity: int,
+                     layout: PagedLayout):
+    """Zeroed paged serving cache (always per-slot / continuous-batching).
+
+    Same pytree structure as ``init_decode_cache(per_slot=True)`` except the
+    attention leaves are page pools ``(n_groups, n_pages, page_size, KV, hd)``
+    shared by all slots. ``pos`` stays the per-slot committed-token counter —
+    position masking over the gathered view works exactly as it does over
+    the dense buffers.
+    """
+    if cfg.is_encdec or cfg.frontend:
+        raise NotImplementedError("paged cache supports token-only decoders")
+    layout.validate(cfg, capacity)
+    dt = jnp.dtype(cfg.dtype)
+    ps = layout.page_size
+    n_pages = layout.pool_pages(cfg, batch, capacity)
+
+    def one_layer(p: int):
+        kind = cfg.layer_kind(p)
+        if kind != "attn":
+            return SSM.init_ssm_cache(cfg, batch, dtype=dt)
+        shape = (n_pages, ps, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.kv_quant:
+            return {
+                "k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.bfloat16),
+                "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.bfloat16),
+            }
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    stack = {f"pos{p}": jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), one_layer(p))
+        for p in range(cfg.period)}
+    pos = jnp.zeros((batch,), jnp.int32)
+    return {"pos": pos, "stack": stack}
+
+
+def paged_view(buf, pages, page_size: int):
+    """Gather a slot-major view from a page pool.
+
+    buf: (n_pages, page_size, ...); pages: (B, P) int32 page table. Returns
+    (B, P*page_size, ...) — each slot's logical sequence, garbage wherever
+    the table points at pages the slot doesn't own (masked by kpos).
+    """
+    g = jnp.take(buf, pages, axis=0)  # (B, P, page_size, ...)
+    B, P = pages.shape
+    return g.reshape((B, P * page_size) + buf.shape[2:])
+
+
+def adopt_paged_slot(cache, pre, slot, pages, write_mask, page_size: int):
+    """Adopt a prefilled slot's state into a paged serving cache.
+
+    ``pre`` is a dense ``prefill(per_slot=True, slot=...)`` cache whose
+    attention buffers cover at least ``len(pages) * page_size`` positions.
+    Attention lanes are reshaped into pages and scattered to the physical
+    pages in ``pages`` (traced (ncp,) int32); ``write_mask`` (ncp,) bool
+    skips pages already resident via the shared-prefix radix — the prefill
+    recomputed identical K/V for those positions, and NOT writing them is
+    what lets one physical block back many slots. SSM state and the position
+    counter copy densely, exactly like ``adopt_cache_slot``.
+    """
+    ps = page_size
+    ncp = pages.shape[0]
+    m = jnp.asarray(write_mask)
+    new_stack = {}
+    for pname, layer in cache["stack"].items():
+        pl = pre["stack"][pname]
+        nl = {}
+        for kname, full in layer.items():
+            new = pl[kname]
+            if kname in _PAGED_KEYS:
+                lane = new[:, slot]  # (G, S_pre, ...)
+                seg = lane[:, :ncp * ps]
+                seg = seg.reshape((seg.shape[0], ncp, ps) + seg.shape[2:])
+                old = full[:, pages]  # (G, ncp, page_size, ...)
+                wm = m.reshape((1, ncp) + (1,) * (seg.ndim - 2))
+                nl[kname] = full.at[:, pages].set(
+                    jnp.where(wm, seg.astype(full.dtype), old))
+            else:
+                nl[kname] = full.at[:, slot].set(new[:, slot].astype(full.dtype))
+        new_stack[pname] = nl
+    pos = cache["pos"].at[slot].set(pre["pos"][slot])
+    return {"pos": pos, "stack": new_stack}
+
+
+def copy_page(cache, src, dst):
+    """Copy physical page ``src`` onto ``dst`` in every pooled leaf.
+
+    The copy-on-write primitive: before a slot writes into a page whose
+    refcount exceeds one, the host allocates a private page and issues this
+    (one jitted call per cache structure — ``src``/``dst`` are traced
+    scalars, so divergence points never recompile).
+    """
+    stack = {pname: {k: (a.at[:, dst].set(a[:, src]) if k in _PAGED_KEYS else a)
+                     for k, a in layer.items()}
+             for pname, layer in cache["stack"].items()}
+    return {"pos": cache["pos"], "stack": stack}

@@ -215,13 +215,21 @@ def _axes_size(mesh: Mesh, axes) -> int:
     return n
 
 
-def cache_specs(cache_shape, cfg: ModelConfig, mesh: Mesh, policy: str) -> Any:
+def cache_specs(cache_shape, cfg: ModelConfig, mesh: Mesh, policy: str,
+                paged: bool = False) -> Any:
     """Decode-cache specs. Leaves carry leading group axis.
 
     KV seq dim -> model (serve_tp) or (data, model) (serve_2d, 256-way).
     SSM state heads -> model; batch -> data (serve_tp) / replicated (serve_2d).
     Axes that do not divide a leaf dim fall back to replication (e.g.
     global_batch=1 in long_500k).
+
+    With ``paged=True`` the attention leaves are the block-paged pool
+    ``(G, n_pages, page_size, KV, hd)``: the pool has no batch or contiguous
+    sequence dim to split, so it shards by KV head on ``model`` (matching the
+    ``decode_kv`` activation pins) and the page/offset dims stay replicated —
+    page tables index into the pool identically on every shard. SSM leaves
+    remain per-slot dense and keep the dense rules.
     """
     m = model_axis(mesh)
     d: Any = data_axes(mesh) or None
@@ -238,6 +246,9 @@ def cache_specs(cache_shape, cfg: ModelConfig, mesh: Mesh, policy: str) -> Any:
         nd = len(leafv.shape)
         if name == "pos":
             return P()
+        if paged and name in ("k", "v", "k_scale", "v_scale"):
+            # pool (G, n_pages, page_size, KV, hd) / scales (..., KV, 1)
+            return P(None, None, None, fit(m, leafv.shape[3]), None)
         # leading dim is the group stack
         if name in ("k", "v", "k_scale", "v_scale", "cross_k", "cross_v"):
             # (G, B, S, KV, hd) or scales (G, B, S, KV, 1)
@@ -256,16 +267,18 @@ def cache_specs(cache_shape, cfg: ModelConfig, mesh: Mesh, policy: str) -> Any:
     return _spec_like(cache_shape, leaf)
 
 
-def serve_cache_specs(cache_shape, cfg: ModelConfig, mesh: Mesh, policy: str) -> Any:
+def serve_cache_specs(cache_shape, cfg: ModelConfig, mesh: Mesh, policy: str,
+                      paged: bool = False) -> Any:
     """Specs for the engine's per-slot morph cache (see module docstring).
 
     ``cache_shape`` is the full engine cache dict — ``pos`` (n_slots,) plus
     the per-group ``stack`` — as a ShapeDtypeStruct pytree or real cache.
     Stack leaves reuse ``cache_specs`` (n_slots is their batch dim); ``pos``
     stays replicated: it is read on the host every admission tick.
+    ``paged=True`` switches the attention leaves to the block-pool rules.
     """
     return {"pos": P(None), "stack": cache_specs(cache_shape["stack"], cfg,
-                                                 mesh, policy)}
+                                                 mesh, policy, paged=paged)}
 
 
 def decode_specs(cfg: ModelConfig, mesh: Mesh, policy: str,

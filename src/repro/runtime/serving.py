@@ -104,14 +104,18 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, MorphMode, ShapeCell
 from repro.core import elastic
-from repro.core.morph import MorphController, make_serve_controller, policy_for_budget
+from repro.core.morph import (MorphController, make_serve_controller,
+                              paged_decode_compile_key, policy_for_budget)
 from repro.core.neuroforge.analytical import estimate
 from repro.core.neuroforge.hw import V5E, HardwareSpec
 from repro.core.neuroforge.space import DesignPoint
 from repro.models.model import (adopt_cache_slot, init_decode_cache, prefill,
                                 reset_cache_slots)
+from repro.models.paged import (PagedLayout, adopt_paged_slot, copy_page,
+                                init_paged_cache)
 from repro.parallel import sharding as SH
 from repro.runtime import sampling
+from repro.runtime.paged_cache import BlockAllocator, RadixCache
 from repro.runtime.speculative import (SpecConfig, SpecTelemetry,
                                        draft_compile_key,
                                        expected_tokens_per_launch,
@@ -372,11 +376,12 @@ class LocalExecutor:
     dp = 1
     tp = 1
 
-    def bind(self, cfg: ModelConfig, batch_size: int,
-             cache_capacity: int) -> "LocalExecutor":
+    def bind(self, cfg: ModelConfig, batch_size: int, cache_capacity: int,
+             paged: Optional[PagedLayout] = None) -> "LocalExecutor":
         self._cfg = cfg
         self._batch = batch_size
         self._cap = cache_capacity
+        self._paged = paged
         return self
 
     # -- placement ----------------------------------------------------------
@@ -390,12 +395,22 @@ class LocalExecutor:
 
     # -- compiled ops -------------------------------------------------------
 
+    def _paged_kwargs(self, cfg: ModelConfig) -> Dict:
+        if self._paged is None:
+            return {}
+        return dict(paged_page_size=self._paged.page_size,
+                    paged_buckets=self._paged.buckets(cfg, self._cap))
+
     def make_controller(self, params, cfg: ModelConfig, modes,
                         speculative: Optional[SpecConfig] = None) -> MorphController:
         return make_serve_controller(params, cfg, modes,
-                                     speculative=speculative)
+                                     speculative=speculative,
+                                     **self._paged_kwargs(cfg))
 
     def init_cache(self):
+        if self._paged is not None:
+            return init_paged_cache(self._cfg, self._batch, self._cap,
+                                    self._paged)
         return init_decode_cache(self._cfg, self._batch, self._cap,
                                  per_slot=True)
 
@@ -419,6 +434,30 @@ class LocalExecutor:
 
         return jax.jit(pf)
 
+    def prefill_adopt_fn(self, prompt_len: int, depth: int, ncp: int):
+        """Fused whole-prompt consume + paged adoption: (params, (1, L)
+        tokens, slot, cache, (ncp,) physical pages, (ncp,) write mask) ->
+        (last-token logits, cache with the prompt scattered into the pool).
+        The prefill runs over ``ncp * page_size`` positions; pages masked
+        False are already resident via the shared-prefix radix and are NOT
+        rewritten (that is what lets one block back many slots)."""
+        cfg, n_slots = self._cfg, self._batch
+        ps = self._paged.page_size
+
+        def pf(params, tokens, slot, cache, pages, wmask):
+            logits, pre = prefill(params, {"tokens": tokens}, cfg,
+                                  cache_extra=max(ncp * ps - prompt_len, 0),
+                                  per_slot=True, slot=slot, n_slots=n_slots,
+                                  depth=depth)
+            return logits, adopt_paged_slot(cache, pre, slot, pages, wmask,
+                                            ps)
+
+        return jax.jit(pf, donate_argnums=(3,))
+
+    def copy_page_fn(self):
+        """Jitted copy-on-write page copy (src/dst are traced scalars)."""
+        return jax.jit(copy_page, donate_argnums=(0,))
+
 
 class MeshExecutor(LocalExecutor):
     """SPMD execution backend: the same ops, compiled under a TP/DP mesh.
@@ -440,14 +479,20 @@ class MeshExecutor(LocalExecutor):
             self.dp *= mesh.shape[a]
         self._rep = NamedSharding(mesh, P())
 
-    def bind(self, cfg: ModelConfig, batch_size: int,
-             cache_capacity: int) -> "MeshExecutor":
-        super().bind(cfg, batch_size, cache_capacity)
+    def bind(self, cfg: ModelConfig, batch_size: int, cache_capacity: int,
+             paged: Optional[PagedLayout] = None) -> "MeshExecutor":
+        super().bind(cfg, batch_size, cache_capacity, paged=paged)
         self.policy = self._policy_arg or SH.serve_policy(cfg, self.tp)
-        cstruct = jax.eval_shape(
-            lambda: init_decode_cache(cfg, batch_size, cache_capacity,
-                                      per_slot=True))
-        cspecs = SH.serve_cache_specs(cstruct, cfg, self.mesh, self.policy)
+        if paged is not None:
+            cstruct = jax.eval_shape(
+                lambda: init_paged_cache(cfg, batch_size, cache_capacity,
+                                         paged))
+        else:
+            cstruct = jax.eval_shape(
+                lambda: init_decode_cache(cfg, batch_size, cache_capacity,
+                                          per_slot=True))
+        cspecs = SH.serve_cache_specs(cstruct, cfg, self.mesh, self.policy,
+                                      paged=paged is not None)
         self._cache_sh = SH.shardings_for(cspecs, self.mesh)
         self._aspecs = SH.decode_specs(cfg, self.mesh, self.policy, batch_size)
         self._vspecs = SH.verify_specs(cfg, self.mesh, self.policy, batch_size)
@@ -469,11 +514,17 @@ class MeshExecutor(LocalExecutor):
             params, cfg, modes, mesh=self.mesh, policy=self.policy,
             param_shardings=self._param_sh, cache_shardings=self._cache_sh,
             activation_specs=self._aspecs,
-            verify_activation_specs=self._vspecs, speculative=speculative)
+            verify_activation_specs=self._vspecs, speculative=speculative,
+            **self._paged_kwargs(cfg))
 
     def init_cache(self):
         cfg, batch, cap = self._cfg, self._batch, self._cap
         # born sharded: no host round-trip for multi-GB caches
+        if self._paged is not None:
+            layout = self._paged
+            return jax.jit(
+                lambda: init_paged_cache(cfg, batch, cap, layout),
+                out_shardings=self._cache_sh)()
         return jax.jit(
             lambda: init_decode_cache(cfg, batch, cap, per_slot=True),
             out_shardings=self._cache_sh)()
@@ -505,10 +556,192 @@ class MeshExecutor(LocalExecutor):
                        in_shardings=(self._param_sh, self._rep, self._rep),
                        out_shardings=(self._rep, self._cache_sh))
 
+    def prefill_adopt_fn(self, prompt_len: int, depth: int, ncp: int):
+        cfg, n_slots = self._cfg, self._batch
+        ps = self._paged.page_size
+        mesh = self.mesh
+        aspecs = SH.decode_specs(cfg, mesh, self.policy)
+
+        def pf(params, tokens, slot, cache, pages, wmask):
+            with SH.activation_sharding(mesh, aspecs):
+                logits, pre = prefill(params, {"tokens": tokens}, cfg,
+                                      cache_extra=max(ncp * ps - prompt_len, 0),
+                                      per_slot=True, slot=slot,
+                                      n_slots=n_slots, depth=depth)
+            return logits, adopt_paged_slot(cache, pre, slot, pages, wmask,
+                                            ps)
+
+        return jax.jit(pf,
+                       in_shardings=(self._param_sh, self._rep, self._rep,
+                                     self._cache_sh, self._rep, self._rep),
+                       out_shardings=(self._rep, self._cache_sh),
+                       donate_argnums=(3,))
+
+    def copy_page_fn(self):
+        return jax.jit(copy_page,
+                       in_shardings=(self._cache_sh, self._rep, self._rep),
+                       out_shardings=self._cache_sh, donate_argnums=(0,))
+
 
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
+
+
+class _GroupPaging:
+    """Host-side page bookkeeping for ONE depth group's paged cache.
+
+    Owns the group's ``BlockAllocator`` (free list + refcounts over the
+    physical pool), the ``(n_slots, cap_pages)`` page table shipped to every
+    launch, a host mirror of the device position counter (``host_pos`` — the
+    engine advances it exactly as the executables advance ``cache['pos']``),
+    and — full attention only — the shared-prefix ``RadixCache`` plus one
+    permanently-owned scratch page per slot that free slots' table rows point
+    at (whole-batch launches write their garbage somewhere harmless).
+
+    Sliding-window groups are ``fixed``: the rolling buffer is always
+    ``window // page_size`` pages, so every slot permanently owns its pages —
+    no allocator churn, no prefix sharing (the window overwrites pages), no
+    scratch.
+    """
+
+    def __init__(self, layout: PagedLayout, cfg: ModelConfig, n_slots: int,
+                 capacity: int):
+        self.layout = layout
+        self.ps = layout.page_size
+        self.cap_pages = layout.cap_pages(cfg, capacity)
+        self.fixed = bool(cfg.sliding_window)
+        self.n_slots = n_slots
+        self.alloc = BlockAllocator(layout.pool_pages(cfg, n_slots, capacity))
+        self.table = np.zeros((n_slots, self.cap_pages), np.int32)
+        self.host_pos = np.zeros((n_slots,), np.int64)
+        self.pages: List[List[int]] = [[] for _ in range(n_slots)]
+        self.scratch: List[int] = []
+        self.radix: Optional[RadixCache] = None
+        if self.fixed:
+            for i in range(n_slots):
+                self.pages[i] = [self.alloc.alloc()
+                                 for _ in range(self.cap_pages)]
+                self.table[i, :] = self.pages[i]
+        else:
+            self.radix = RadixCache(self.alloc)
+            for i in range(n_slots):
+                s = self.alloc.alloc()
+                self.scratch.append(s)
+                self.table[i, :] = s
+
+    def _alloc_page(self) -> int:
+        """Allocate one page, evicting LRU radix prefixes if the pool is dry.
+
+        Evicting a node only frees its page when no live slot still maps it,
+        so the loop keeps evicting until a page actually frees or the tree
+        runs out — then exhaustion is a hard error (live slots alone exceed
+        the pool)."""
+        while not self.alloc.can_alloc():
+            if self.radix is None or not self.radix.evict_lru(1):
+                raise RuntimeError(
+                    "kv page pool exhausted: live slots reference every "
+                    "page (raise --kv-pages or lower concurrency)")
+        return self.alloc.alloc()
+
+    def ensure_slot(self, i: int, last_pos: int) -> None:
+        """Grow slot ``i``'s mapping to cover a write at ``last_pos``."""
+        if self.fixed:
+            return
+        need = min(last_pos // self.ps + 1, self.cap_pages)
+        while len(self.pages[i]) < need:
+            p = self._alloc_page()
+            self.table[i, len(self.pages[i])] = p
+            self.pages[i].append(p)
+
+    def release(self, i: int) -> None:
+        """Drop slot ``i``'s references; its table row falls back to scratch."""
+        self.host_pos[i] = 0
+        if self.fixed:
+            return
+        for p in self.pages[i]:
+            self.alloc.decref(p)
+        self.pages[i] = []
+        self.table[i, :] = self.scratch[i]
+
+    def trim(self, i: int) -> None:
+        """Free tail pages past the committed position (speculative rollback:
+        pages grown for rejected draft positions go back to the pool)."""
+        if self.fixed:
+            return
+        keep = min(int(self.host_pos[i]) // self.ps + 1, self.cap_pages)
+        while len(self.pages[i]) > keep:
+            p = self.pages[i].pop()
+            self.alloc.decref(p)
+            self.table[i, len(self.pages[i])] = self.scratch[i]
+
+    def cow_pairs(self, i: int, first_pos: int,
+                  last_pos: int) -> List[Tuple[int, int]]:
+        """Copy-on-write: privatize shared pages in slot ``i``'s write range.
+
+        Returns (src, dst) physical pairs for the engine to copy device-side
+        before launching. Shared pages come only from full-page prompt
+        prefixes and writes start at >= the prompt length, so this normally
+        returns [] — it is the belt-and-braces guarantee that a slot NEVER
+        writes a page another slot (or the radix tree) can see."""
+        if self.fixed:
+            return []
+        out: List[Tuple[int, int]] = []
+        first = first_pos // self.ps
+        last = min(last_pos // self.ps, self.cap_pages - 1)
+        for j in range(first, min(last + 1, len(self.pages[i]))):
+            p = self.pages[i][j]
+            if self.alloc.refcount[p] > 1:
+                q = self._alloc_page()
+                self.pages[i][j] = q
+                self.table[i, j] = q
+                self.alloc.decref(p)
+                out.append((p, q))
+        return out
+
+    # -- accounting (engine invariants / telemetry) -------------------------
+
+    def check_invariants(self) -> None:
+        """Exact page accounting: slot refs + scratch + radix == refcounts,
+        free-list size matches zero-refcount pages, and every table row maps
+        only pages its slot owns (or its scratch). AssertionError on drift."""
+        refs = [0] * self.alloc.n_pages
+        for i in range(self.n_slots):
+            for p in self.pages[i]:
+                refs[p] += 1
+        for s in self.scratch:
+            refs[s] += 1
+        if self.radix is not None:
+            for p in self.radix.held_pages():
+                refs[p] += 1
+        assert refs == self.alloc.refcount, (
+            f"page refcount drift: expected {refs}, "
+            f"allocator has {self.alloc.refcount}")
+        n_zero = sum(1 for r in self.alloc.refcount if r == 0)
+        assert n_zero == self.alloc.n_free, (
+            f"free-list drift: {self.alloc.n_free} free vs "
+            f"{n_zero} zero-refcount pages")
+        for i in range(self.n_slots):
+            own = self.pages[i]
+            row = self.table[i]
+            assert list(row[: len(own)]) == own, \
+                f"slot {i}: table row disagrees with owned pages"
+            if not self.fixed:
+                tail = {int(x) for x in row[len(own):]}
+                assert tail <= {self.scratch[i]}, \
+                    f"slot {i}: tail maps non-scratch pages {tail}"
+
+    def stats(self) -> Dict[str, float]:
+        out = {"n_pages": self.alloc.n_pages,
+               "in_use": self.alloc.n_in_use,
+               "free": self.alloc.n_free,
+               "occupancy": self.alloc.occupancy(),
+               "peak_in_use": self.alloc.peak_in_use,
+               "allocs": self.alloc.allocs}
+        if self.radix is not None:
+            out.update({f"radix_{k}": v
+                        for k, v in self.radix.stats().items()})
+        return out
 
 
 @dataclass
@@ -529,6 +762,8 @@ class _DepthGroup:
     spec_tree: Optional[Tuple[int, ...]] = None
     accept_window: Deque[float] = field(default_factory=lambda: deque(maxlen=32))
     spec_off_until: int = -1  # tick until which speculation is cooling off
+    # host-side page bookkeeping (None when the engine is dense)
+    paging: Optional[_GroupPaging] = None
 
     @property
     def n_active(self) -> int:
@@ -560,7 +795,15 @@ class ServingEngine:
                  prefill_threshold: int = 8,
                  speculative: Optional[SpecConfig] = None,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0,
+                 paged: Optional[PagedLayout] = None):
+        if paged is not None:
+            if cfg.is_encdec or cfg.frontend:
+                raise ValueError(
+                    "paged KV serving needs a token-only decoder (enc-dec / "
+                    "frontend archs carry cross-attention state the page "
+                    "pool does not cover)")
+            paged.validate(cfg, cache_capacity)
         if speculative is not None and (cfg.is_encdec or cfg.frontend):
             raise ValueError("speculative serving needs a token-only decoder "
                              "(enc-dec / frontend archs carry non-token "
@@ -598,8 +841,9 @@ class ServingEngine:
         self.speculative = speculative
         self.temperature = float(temperature)
         self.sample_seed = sample_seed
+        self.paged = paged
         self.executor = (executor or LocalExecutor()).bind(
-            cfg, batch_size, cache_capacity)
+            cfg, batch_size, cache_capacity, paged=paged)
         self.params = self.executor.place_params(params)
         self.ctrl = controller or self.executor.make_controller(
             self.params, cfg, modes, speculative=speculative)
@@ -610,6 +854,9 @@ class ServingEngine:
         for d in sorted({m.depth for m in self.ctrl.modes}):
             g = _DepthGroup(d, self.executor.init_cache(),
                             [None] * batch_size, [1.0] * batch_size)
+            if paged is not None:
+                g.paging = _GroupPaging(paged, cfg, batch_size,
+                                        cache_capacity)
             plan = self._spec_plan.get(d)
             if plan is not None:
                 g.spec_k = max(plan.ks, default=0)
@@ -648,6 +895,8 @@ class ServingEngine:
         self._temp_op = self.executor.put(np.float32(self.temperature))
         self._reset = self.executor.reset_fn()
         self._adopt = self.executor.adopt_fn()
+        self._copy_page = (self.executor.copy_page_fn()
+                           if paged is not None else None)
         # compiled prefills, keyed by (prompt_len, depth); ``slot`` is traced
         self._prefills: Dict[Tuple[int, int], Callable] = {}
         self.prefill_threshold = prefill_threshold
@@ -710,8 +959,26 @@ class ServingEngine:
         mask = self.executor.put(np.ones((self.batch_size,), bool))
         s_op = self.executor.put(np.uint32(0))
         for d, g in self.groups.items():
-            step = self.ctrl.step_for(self._any_mode_at(d))
-            logits, cache = step(self.params, g.cache, tok, active)
+            spec_extra = ()
+            if g.paging is not None:
+                # paged serving never dispatches the dense per-depth steps:
+                # trace one executable per (depth, table-width bucket) plus
+                # the CoW page copy instead (free slots' tables point at
+                # scratch, so the garbage these launches write is harmless)
+                cache = g.cache
+                for b in self.paged.buckets(self.cfg, self.cache_capacity):
+                    fn = self.ctrl.aux_step(paged_decode_compile_key(d, b))
+                    pages_b = self.executor.put(g.paging.table[:, :b].copy())
+                    logits, cache = fn(self.params, cache, tok, active,
+                                       pages_b)
+                cache = self._copy_page(cache,
+                                        self.executor.put(np.int32(0)),
+                                        self.executor.put(np.int32(0)))
+                spec_extra = (self.executor.put(
+                    g.paging.table[:, :g.paging.cap_pages].copy()),)
+            else:
+                step = self.ctrl.step_for(self._any_mode_at(d))
+                logits, cache = step(self.params, g.cache, tok, active)
             if self.temperature > 0:
                 self._sample_fn(logits[:, 0], g.keys, self._temp_op, s_op)
             plan = self._spec_plan.get(d)
@@ -721,22 +988,28 @@ class ServingEngine:
                         draft_compile_key(plan.draft_depth, k))
                     verify = self.ctrl.aux_step(verify_compile_key(d, k))
                     dtoks, dlg = draft(self.params, cache, tok, active,
-                                       g.keys, self._temp_op, s_op)
+                                       g.keys, self._temp_op, s_op,
+                                       *spec_extra)
                     full = jnp.concatenate([tok, dtoks], axis=1)
                     _, _, cache = verify(self.params, cache, full, dlg,
-                                         active, g.keys, self._temp_op, s_op)
+                                         active, g.keys, self._temp_op, s_op,
+                                         *spec_extra)
                 for br in plan.trees:
                     draft = self.ctrl.aux_step(
                         tree_draft_compile_key(plan.draft_depth, br))
                     verify = self.ctrl.aux_step(tree_verify_compile_key(d, br))
                     ttoks, dlg = draft(self.params, cache, tok, active,
-                                       g.keys, self._temp_op, s_op)
+                                       g.keys, self._temp_op, s_op,
+                                       *spec_extra)
                     _, _, cache = verify(self.params, cache, ttoks, dlg,
-                                         active, g.keys, self._temp_op, s_op)
+                                         active, g.keys, self._temp_op, s_op,
+                                         *spec_extra)
             cache = self._reset(cache, mask)
             jax.block_until_ready(cache)
             # rewind: warmup wrote garbage at pos 0 of every slot
             g.cache = self.executor.init_cache()
+            if g.paging is not None:
+                g.paging.host_pos[:] = 0
         self.compiles_after_warmup = self.ctrl.stats["compiles"]
 
     def _any_mode_at(self, depth: int) -> MorphMode:
@@ -805,12 +1078,18 @@ class ServingEngine:
         if mask.any():
             # ONE batched reset per tick, however large the admission burst
             g.cache = self._reset(g.cache, self.executor.put(mask))
+            if g.paging is not None:
+                # the reset zeroed the device position counters; mirror it
+                g.paging.host_pos[mask] = 0
         for slot, req in prefills:
             self._admit_prefill(g, slot, req, now_s)
 
     def _admit_prefill(self, g: _DepthGroup, slot: int, req: Request,
                        now_s: float) -> None:
         """Consume the whole prompt in one compiled prefill + adoption."""
+        if g.paging is not None:
+            self._admit_prefill_paged(g, slot, req, now_s)
+            return
         plen = len(req.prompt)
         key = (plen, g.depth)
         fn = self._prefills.get(key)
@@ -849,6 +1128,79 @@ class ServingEngine:
             req.finished_s = now_s
             self.completed.append(req)
             g.slots[slot] = None
+
+    def _admit_prefill_paged(self, g: _DepthGroup, slot: int, req: Request,
+                             now_s: float) -> None:
+        """Paged whole-prompt admission with shared-prefix block reuse.
+
+        The prompt's full pages are radix-matched under (depth, width): a
+        resident prefix is mapped into the slot's table (incref'd, write-
+        masked — the fused prefill recomputes identical K/V for those
+        positions but does NOT write them, so many slots share one physical
+        block). Fresh pages cover the rest; afterwards the prompt's full
+        pages are inserted into the tree for the next arrival.
+        """
+        pg = g.paging
+        ps = pg.ps
+        plen = len(req.prompt)
+        rkey = (g.depth, g.widths[slot])
+        if pg.fixed:
+            # sliding window: the dense prefill already emits the ROLLED
+            # lane (token t at slot t % window), which is exactly the fixed
+            # page row's layout — adopt all cap_pages pages, no sharing (the
+            # rolling buffer overwrites pages, so blocks can't be shared)
+            ncp = pg.cap_pages
+            chunks, n_full = [], 0
+            pages_list = list(pg.pages[slot])
+            wmask = np.ones(ncp, bool)
+        else:
+            ncp = min(plen // ps + 1, pg.cap_pages)
+            n_full = min(plen // ps, ncp)
+            chunks = [tuple(req.prompt[j * ps:(j + 1) * ps])
+                      for j in range(n_full)]
+            shared = pg.radix.match(rkey, chunks)
+            for p in shared:
+                pg.alloc.incref(p)
+            pages_list = shared + [pg._alloc_page()
+                                   for _ in range(ncp - len(shared))]
+            pg.pages[slot] = list(pages_list)
+            pg.table[slot, :] = pg.scratch[slot]
+            pg.table[slot, :ncp] = pages_list
+            wmask = np.arange(ncp) >= len(shared)
+        pg.host_pos[slot] = plen
+        key = (plen, g.depth)
+        fn = self._prefills.get(key)
+        if fn is None:
+            if len(self._prefills) > 256:
+                self._prefills.clear()
+            fn = self.executor.prefill_adopt_fn(plen, g.depth, ncp)
+            self._prefills[key] = fn
+        t0 = time.perf_counter()
+        toks = self.executor.put(np.asarray([req.prompt], np.int32))
+        slot_op = self.executor.put(np.int32(slot))
+        logits, g.cache = fn(
+            self.params, toks, slot_op, g.cache,
+            self.executor.put(np.asarray(pages_list, np.int32)),
+            self.executor.put(wmask))
+        if not pg.fixed:
+            pg.radix.insert(rkey, chunks, pages_list[:n_full])
+        if self.temperature > 0:
+            s_op = self.executor.put(np.uint32(self.step_count))
+            nxt = int(np.asarray(self._sample_fn(
+                logits[:, 0], g.keys[slot:slot + 1], self._temp_op, s_op))[0])
+        else:
+            nxt = int(np.asarray(jnp.argmax(logits[0, 0, : self.cfg.vocab_size])))
+        jax.block_until_ready(g.cache)
+        self.prefill_s += time.perf_counter() - t0
+        self.prefills += 1
+        self.prefill_prompt_tokens += plen
+        req.fed = plen
+        req.generated.append(nxt)
+        if req.done:
+            req.finished_s = now_s
+            self.completed.append(req)
+            g.slots[slot] = None
+            pg.release(slot)
 
     def _spec_select(self, g: _DepthGroup):
         """The draft shape to speculate with this tick: ``("tree",
@@ -911,18 +1263,35 @@ class ServingEngine:
         active = self._active_for(g.widths)
         tok_op = self.executor.put(toks)
         s_op = self.executor.put(np.uint32(self.step_count))
+        pg = g.paging
+        extra = ()
+        if pg is not None:
+            # grow every active slot's mapping to cover the deepest draft
+            # write (root + depth_budget positions) and privatize any shared
+            # page in that range; the speculative executables always see the
+            # FULL-width table (their compile keys are not bucketed)
+            for i in active_ix:
+                pos = int(pg.host_pos[i])
+                pg.ensure_slot(i, pos + depth_budget)
+                for src, dst in pg.cow_pairs(i, pos, pos + depth_budget):
+                    g.cache = self._copy_page(
+                        g.cache, self.executor.put(np.int32(src)),
+                        self.executor.put(np.int32(dst)))
+            extra = (self.executor.put(pg.table[:, :pg.cap_pages].copy()),)
         t0 = time.perf_counter()
         if kind == "tree":
             ttoks, dlg = draft(self.params, g.cache, tok_op, active, g.keys,
-                               self._temp_op, s_op)
+                               self._temp_op, s_op, *extra)
             out, n_acc, g.cache = verify(self.params, g.cache, ttoks, dlg,
-                                         active, g.keys, self._temp_op, s_op)
+                                         active, g.keys, self._temp_op, s_op,
+                                         *extra)
         else:
             dtoks, dlg = draft(self.params, g.cache, tok_op, active, g.keys,
-                               self._temp_op, s_op)
+                               self._temp_op, s_op, *extra)
             full = jnp.concatenate([tok_op, dtoks], axis=1)
             out, n_acc, g.cache = verify(self.params, g.cache, full, dlg,
-                                         active, g.keys, self._temp_op, s_op)
+                                         active, g.keys, self._temp_op, s_op,
+                                         *extra)
         out_h = np.asarray(out)
         n_acc_h = np.asarray(n_acc)
         jax.block_until_ready(g.cache)
@@ -933,6 +1302,11 @@ class ServingEngine:
         self.spec_verify_launches += 1
         if kind == "tree":
             self.spec_tree_launches += 1
+
+        if pg is not None:
+            # mirror commit_verify: pos += n_accepted + 1 for EVERY slot
+            # (free slots drift harmlessly — admission resets both counters)
+            pg.host_pos += np.asarray(n_acc_h, np.int64) + 1
 
         produced = 0
         for i in active_ix:
@@ -948,6 +1322,11 @@ class ServingEngine:
                 req.finished_s = now_s
                 self.completed.append(req)
                 g.slots[i] = None
+                if pg is not None:
+                    pg.release(i)
+            elif pg is not None:
+                # rollback: pages grown for rejected draft positions free
+                pg.trim(i)
         self.spec_generated_tokens += produced
 
         # speculative tick wall time lives in the SPEC telemetry only: the
@@ -994,6 +1373,9 @@ class ServingEngine:
             if sel is not None:
                 spent += self._spec_tick(g, sel, active_ix, now_s)
                 continue
+            if g.paging is not None:
+                spent += self._paged_tick(g, active_ix, now_s)
+                continue
             toks = np.zeros((self.batch_size, 1), np.int32)
             for i in active_ix:
                 toks[i, 0] = g.slots[i].next_input()
@@ -1031,6 +1413,80 @@ class ServingEngine:
         self.ticks_with_work += ticked
         self.step_count += 1
         return spent
+
+    def _paged_tick(self, g: _DepthGroup, active_ix: List[int],
+                    now_s: float) -> float:
+        """One plain decode tick through the bucketed paged executable.
+
+        Host page bookkeeping first (grow each active slot's mapping to its
+        write position, CoW-copy any shared page in range), then ONE launch
+        of the ``("paged_decode", depth, bucket)`` executable — bucket is
+        the smallest compiled table width covering every active slot, so
+        variable-length slots re-trace nothing.
+        """
+        pg = g.paging
+        needed = 1
+        for i in active_ix:
+            pos = int(pg.host_pos[i])
+            pg.ensure_slot(i, pos)
+            for src, dst in pg.cow_pairs(i, pos, pos):
+                g.cache = self._copy_page(g.cache,
+                                          self.executor.put(np.int32(src)),
+                                          self.executor.put(np.int32(dst)))
+            needed = max(needed, min(pos // pg.ps + 1, pg.cap_pages))
+        bucket = self.paged.bucket_for(self.cfg, self.cache_capacity, needed)
+        pages_op = self.executor.put(pg.table[:, :bucket].copy())
+        toks = np.zeros((self.batch_size, 1), np.int32)
+        for i in active_ix:
+            toks[i, 0] = g.slots[i].next_input()
+        active = self._active_for(g.widths)
+        w_max = max(g.widths[i] for i in active_ix)
+        mode = self._mode_by_dw[(g.depth, w_max)]
+        fn = self.ctrl.aux_step(paged_decode_compile_key(g.depth, bucket))
+        self.ctrl.stats["dispatches"] += 1
+        t0 = time.perf_counter()
+        logits, g.cache = fn(self.params, g.cache, self.executor.put(toks),
+                             active, pages_op)
+        jax.block_until_ready((logits, g.cache))
+        dt = time.perf_counter() - t0
+        self.ctrl.telemetry[mode.name].record(dt, len(active_ix))
+        self.ctrl.last_step_s = dt
+        pg.host_pos += 1  # mirror the device counter (ALL slots advance)
+        self.decode_launches += 1
+        self.per_mode_launch_equiv += len(
+            {(g.depth, g.widths[i]) for i in active_ix})
+        if self.temperature > 0:
+            s_op = self.executor.put(np.uint32(self.step_count))
+            nxt = np.asarray(self._sample_fn(
+                logits[:, 0], g.keys, self._temp_op, s_op))
+        else:
+            nxt = np.asarray(
+                jnp.argmax(logits[:, 0, : self.cfg.vocab_size], axis=-1))
+        for i in active_ix:
+            req = g.slots[i]
+            req.fed += 1
+            if req.fed >= len(req.prompt) and not req.done:
+                req.generated.append(int(nxt[i]))
+            if req.done:
+                req.finished_s = now_s
+                self.completed.append(req)
+                g.slots[i] = None
+                pg.release(i)
+        return dt
+
+    # -- page-pool accounting ----------------------------------------------
+
+    def check_paged_invariants(self) -> None:
+        """Assert exact page accounting in every depth group (no leaks, no
+        double assignment, no refcount drift). No-op for dense engines."""
+        for g in self.groups.values():
+            if g.paging is not None:
+                g.paging.check_invariants()
+
+    def page_pool_stats(self) -> Dict[int, Dict[str, float]]:
+        """Per-depth-group pool occupancy + radix telemetry (empty if dense)."""
+        return {d: g.paging.stats() for d, g in self.groups.items()
+                if g.paging is not None}
 
     # -- driving loops ------------------------------------------------------
 

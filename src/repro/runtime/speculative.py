@@ -378,7 +378,7 @@ def accept_tree(logits, draft_logits, tokens, topo: TreeTopology, keys,
 
 
 def make_draft_step(cfg: ModelConfig, draft_depth: int, k: int,
-                    top_k: int = 0):
+                    top_k: int = 0, page_size: int = 0):
     """Build the K-token drafting function for one (draft_depth, K).
 
     Signature: ``draft(params, cache, tok0, active, keys, temperature, step)
@@ -388,17 +388,24 @@ def make_draft_step(cfg: ModelConfig, draft_depth: int, k: int,
     recurrent state advanced by rejected drafts could not be rewound). The
     cache is therefore NOT donated: the one transient cache copy the scan
     carry makes is the price of rollback safety.
+
+    With ``page_size`` > 0 the cache is block-paged and the function takes a
+    trailing traced page-table operand (``pages`` (B, P) int32, see
+    ``models.paged``); draft writes land in the discarded carry copy of the
+    page pool, so the committed pool never sees speculative state.
     """
     vocab = cfg.vocab_size
 
-    def draft(params, cache, tok0, active, keys, temperature, step):
+    def draft(params, cache, tok0, active, keys, temperature, step,
+              pages=None):
         keys_l = sampling.fold_step(keys, step)
         kd = jax.vmap(lambda kk: jax.random.fold_in(kk, _STREAM_DRAFT))(keys_l)
 
         def body(carry, j):
             cache_c, tok = carry
             logits, cache_c = decode_step(params, cache_c, tok, cfg,
-                                          depth=draft_depth, active=active)
+                                          depth=draft_depth, active=active,
+                                          pages=pages, page_size=page_size)
             lg = logits[:, 0]
             kj = jax.vmap(lambda kk: jax.random.fold_in(kk, j))(kd)
             nxt = sampling.sample_tokens(lg, kj, temperature, vocab, top_k)
@@ -411,30 +418,37 @@ def make_draft_step(cfg: ModelConfig, draft_depth: int, k: int,
     return draft
 
 
-def make_verify_step(cfg: ModelConfig, depth: int, k: int, top_k: int = 0):
+def make_verify_step(cfg: ModelConfig, depth: int, k: int, top_k: int = 0,
+                     page_size: int = 0):
     """Build the fused verify+accept+commit function for one (depth, K).
 
     Signature: ``verify(params, cache, tokens (B, K+1), draft_logits, active,
     keys, temperature, step) -> (out_tokens (B, K+1), n_accepted (B,),
     new_cache)``. The cache should be donated by the caller's jit — the
     commit is an in-place masked scatter keyed on the traced ``n_accepted``.
+    With ``page_size`` > 0 the cache is block-paged and a trailing traced
+    page table routes both the verify gather and the commit scatter; the
+    host frees tail pages speculation reached past the commit.
     """
 
     def verify(params, cache, tokens, draft_logits, active, keys,
-               temperature, step):
+               temperature, step, pages=None):
         logits, pending = verify_step(params, cache, tokens, cfg,
-                                      depth=depth, active=active)
+                                      depth=depth, active=active,
+                                      pages=pages, page_size=page_size)
         keys_l = sampling.fold_step(keys, step)
         out, n_acc = accept_speculative(logits, draft_logits, tokens, keys_l,
                                         temperature, cfg.vocab_size, top_k)
-        new_cache = commit_verify(cache, pending, n_acc, cfg)
+        new_cache = commit_verify(cache, pending, n_acc, cfg, pages=pages,
+                                  page_size=page_size)
         return out, n_acc, new_cache
 
     return verify
 
 
 def make_tree_draft_step(cfg: ModelConfig, draft_depth: int,
-                         branching: Tuple[int, ...], top_k: int = 0):
+                         branching: Tuple[int, ...], top_k: int = 0,
+                         page_size: int = 0):
     """Build the token-tree drafting function for one (draft_depth, tree).
 
     Signature: ``draft(params, cache, tok0, active, keys, temperature, step)
@@ -455,7 +469,8 @@ def make_tree_draft_step(cfg: ModelConfig, draft_depth: int,
     topo = tree_topology(tuple(branching))
     vocab = cfg.vocab_size
 
-    def draft(params, cache, tok0, active, keys, temperature, step):
+    def draft(params, cache, tok0, active, keys, temperature, step,
+              pages=None):
         keys_l = sampling.fold_step(keys, step)
         kd = jax.vmap(lambda kk: jax.random.fold_in(kk, _STREAM_DRAFT))(keys_l)
         t = jnp.asarray(temperature, jnp.float32)
@@ -467,7 +482,8 @@ def make_tree_draft_step(cfg: ModelConfig, draft_depth: int,
             sub = tree_topology(topo.branching[:level])
             lg_pass, _ = verify_tree(params, cache,
                                      tokens[:, :sub.n_nodes], cfg, tree=sub,
-                                     depth=draft_depth, active=active)
+                                     depth=draft_depth, active=active,
+                                     pages=pages, page_size=page_size)
             f0, f1 = sub.level_nodes(level)
             dlg = dlg.at[:, f0:f1].set(lg_pass[:, f0:f1].astype(jnp.float32))
             for nf in range(f0, f1):
@@ -487,7 +503,8 @@ def make_tree_draft_step(cfg: ModelConfig, draft_depth: int,
 
 
 def make_tree_verify_step(cfg: ModelConfig, depth: int,
-                          branching: Tuple[int, ...], top_k: int = 0):
+                          branching: Tuple[int, ...], top_k: int = 0,
+                          page_size: int = 0):
     """Build the fused tree verify+accept+commit for one (depth, tree).
 
     Signature: ``verify(params, cache, tree_tokens (B, N), draft_logits,
@@ -502,15 +519,17 @@ def make_tree_verify_step(cfg: ModelConfig, depth: int,
     topo = tree_topology(tuple(branching))
 
     def verify(params, cache, tokens, draft_logits, active, keys,
-               temperature, step):
+               temperature, step, pages=None):
         logits, pending = verify_tree(params, cache, tokens, cfg, tree=topo,
-                                      depth=depth, active=active)
+                                      depth=depth, active=active,
+                                      pages=pages, page_size=page_size)
         keys_l = sampling.fold_step(keys, step)
         out, path, n_acc = accept_tree(logits, draft_logits, tokens, topo,
                                        keys_l, temperature, cfg.vocab_size,
                                        top_k)
         new_cache = commit_verify(cache, pending, n_acc, cfg,
-                                  path_nodes=path)
+                                  path_nodes=path, pages=pages,
+                                  page_size=page_size)
         return out, n_acc, new_cache
 
     return verify

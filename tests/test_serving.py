@@ -13,7 +13,16 @@ from repro.core.neuroforge.analytical import estimate
 from repro.core.neuroforge.hw import V5E, HardwareSpec
 from repro.core.neuroforge.space import DesignPoint
 from repro.models import decode_step, init_decode_cache, init_params, reset_cache_slot
+from repro.models.paged import PagedLayout
+from repro.runtime.paged_cache import BlockAllocator, RadixCache
 from repro.runtime.serving import Request, ServingEngine, SLOPolicy, poisson_trace
+
+try:  # the container does not ship hypothesis; fall back to seeded random
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def _engine(arch="tinyllama-1.1b", batch=3, capacity=32):
@@ -390,14 +399,20 @@ def _check_engine_invariants(eng, submitted):
     assert eng.per_mode_launch_equiv >= eng.decode_launches
     assert eng.spec_draft_launches == eng.spec_verify_launches
     assert eng.spec_tree_launches <= eng.spec_verify_launches
+    # paged engines: no page leaks / double assignment / refcount drift —
+    # the engine cross-checks its page tables against the allocator exactly
+    if getattr(eng, "paged", None) is not None:
+        eng.check_paged_invariants()
 
 
-def test_engine_slot_invariants_under_random_traces():
+@pytest.mark.parametrize("paged", [None, PagedLayout(page_size=4)],
+                         ids=["dense", "paged"])
+def test_engine_slot_invariants_under_random_traces(paged):
     """Property test: random interleavings of submit / step / admission-mode
-    churn never leak or double-assign cache slots, and the launch accounting
-    stays consistent — across plain, linear-speculative, and token-tree
-    engines alike. Every request still finishes with exactly its token
-    count."""
+    churn never leak or double-assign cache slots (nor, on the paged cache,
+    physical pages), and the launch accounting stays consistent — across
+    plain, linear-speculative, and token-tree engines alike. Every request
+    still finishes with exactly its token count."""
     from repro.runtime.speculative import SpecConfig
 
     cfg = smoke_config("tinyllama-1.1b")
@@ -405,7 +420,8 @@ def test_engine_slot_invariants_under_random_traces():
     variants = [None, SpecConfig(ks=(2,)), SpecConfig(ks=(), trees=((2, 1),))]
     for vi, spec in enumerate(variants):
         eng = ServingEngine(params, cfg, batch_size=3, cache_capacity=32,
-                            prefill_threshold=5, speculative=spec)
+                            prefill_threshold=5, speculative=spec,
+                            paged=paged)
         eng.warmup()
         rng = np.random.default_rng(17 + vi)
         modes = eng.ctrl.modes
@@ -438,6 +454,14 @@ def test_engine_slot_invariants_under_random_traces():
         for r_ in eng.completed:
             assert len(r_.generated) == submitted[r_.rid], \
                 (vi, r_.rid, r_.generated)
+        if paged is not None:
+            # all slots released: only scratch pages + radix-retained
+            # prefixes may remain in use — anything else is a leak
+            for g in eng.groups.values():
+                pg = g.paging
+                held = pg.radix.held_pages() if pg.radix else []
+                assert pg.alloc.n_in_use == len(pg.scratch) + len(held), \
+                    (vi, "page leak after drain")
 
 
 @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-370m"])
@@ -487,3 +511,124 @@ def test_prefill_admission_completes_single_token_request():
     assert len(eng.completed) == 1 and eng.n_active == 0
     assert len(eng.completed[0].generated) == 1
     assert eng.prefills == 1
+
+
+# ---------------------------------------------------------------------------
+# block allocator + radix prefix cache (hypothesis properties when the
+# package is available, seeded-random fallback otherwise)
+# ---------------------------------------------------------------------------
+
+
+def test_block_allocator_free_list_roundtrip():
+    a = BlockAllocator(4)
+    pages = [a.alloc() for _ in range(4)]
+    assert sorted(pages) == [0, 1, 2, 3]
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.alloc()
+    a.incref(pages[0])
+    a.decref(pages[0])
+    assert a.n_free == 0  # one reference still outstanding
+    for p in pages:
+        a.decref(p)
+    assert a.n_free == 4 and a.n_in_use == 0
+    with pytest.raises(RuntimeError, match="underflow"):
+        a.decref(pages[0])
+    with pytest.raises(RuntimeError, match="unallocated"):
+        a.incref(pages[1])
+
+
+def test_radix_insert_match_evict_deterministic():
+    a = BlockAllocator(8)
+    rx = RadixCache(a)
+    chunks = [(1, 2), (3, 4), (5, 6)]
+    pages = [a.alloc() for _ in chunks]
+    assert rx.insert("k", chunks, pages) == 3
+    assert rx.match("k", chunks) == pages
+    assert rx.match("k", chunks[:2] + [(9, 9)]) == pages[:2]
+    assert rx.match("other", chunks) == []  # roots are per (depth, width)
+    for p in pages:  # the slot releases; the tree alone keeps pages alive
+        a.decref(p)
+    assert a.n_in_use == 3
+    assert rx.evict_lru(1) == 1  # leaf-first: the deepest node goes
+    assert rx.match("k", chunks) == pages[:2]
+    assert rx.evict_lru(5) == 2  # tree empties, pages return to the pool
+    assert a.n_in_use == 0 and rx.n_nodes == 0
+    assert rx.evict_lru(1) == 0
+
+
+def _radix_trial(seed: int) -> None:
+    """Random insert/match/evict script against allocator invariants:
+    conservation (free + in-use == pool), tree-held pages unique and alive,
+    match prefix-consistency, and insert round-trips exactly."""
+    rng = np.random.default_rng(seed)
+    alloc = BlockAllocator(int(rng.integers(4, 16)))
+    rx = RadixCache(alloc)
+    keys = ["k0", "k1"]
+
+    def check():
+        held = rx.held_pages()
+        assert len(held) == len(set(held)), "page mapped by two nodes"
+        assert alloc.n_in_use == len(held), "leak: page in use, not in tree"
+        assert alloc.n_free + alloc.n_in_use == alloc.n_pages
+        for pid in held:
+            assert alloc.refcount[pid] == 1
+
+    for _ in range(40):
+        op = rng.random()
+        key = keys[int(rng.integers(len(keys)))]
+        if op < 0.55:
+            n = int(rng.integers(1, 5))
+            chunks = [tuple(int(x) for x in rng.integers(0, 3, 2))
+                      for _ in range(n)]
+            matched = rx.match(key, chunks)
+            for p in matched:  # map into our "slot" before any eviction
+                alloc.incref(p)
+            fresh, ok = [], True
+            for _ in range(len(chunks) - len(matched)):
+                while not alloc.can_alloc():
+                    if rx.evict_lru(1) == 0:
+                        ok = False
+                        break
+                if not ok:
+                    break
+                fresh.append(alloc.alloc())
+            if ok:
+                pages = matched + fresh
+                created = rx.insert(key, chunks, pages)
+                # every fresh page needs a node; eviction during the alloc
+                # loop may also have dropped part of the matched prefix
+                assert len(fresh) <= created <= len(chunks)
+                assert rx.match(key, chunks) == pages  # exact round-trip
+                for p in pages:
+                    alloc.decref(p)
+            else:  # give back whatever we acquired; pool too small this op
+                for p in matched + fresh:
+                    alloc.decref(p)
+        elif op < 0.85:
+            n = int(rng.integers(1, 5))
+            chunks = [tuple(int(x) for x in rng.integers(0, 3, 2))
+                      for _ in range(n)]
+            got = rx.match(key, chunks)
+            assert got == rx.match(key, chunks)  # stable
+            shorter = rx.match(key, chunks[: max(len(got) - 1, 0)])
+            assert shorter == got[: len(shorter)]  # prefix-consistent
+            for p in got:
+                assert alloc.refcount[p] >= 1, "match returned a freed page"
+        else:
+            n_nodes = rx.n_nodes
+            want = int(rng.integers(1, 4))
+            assert rx.evict_lru(want) == min(want, n_nodes)
+        check()
+    rx.evict_lru(alloc.n_pages * 2)
+    assert alloc.n_in_use == 0, "eviction must return every page"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_radix_allocator_properties(seed):
+        _radix_trial(seed)
+else:
+    @pytest.mark.parametrize("seed", range(20))
+    def test_radix_allocator_properties(seed):
+        _radix_trial(seed)
