@@ -21,6 +21,13 @@ Phases:
      vs block-paged (radix prefix reuse, page-table launches); asserts
      token identity and reports page-pool occupancy + radix hit rate
 
+  9. failover         -> the same paged + speculative trace served fault-
+     free and then under an ExecutorSupervisor with injected executor
+     failures at three distinct launch boundaries; asserts bit-identical
+     committed streams and reports recovery latency (rebuild + replay,
+     detection -> first post-recovery token) and tokens/s degradation.
+     Runs alone via ``--failover`` (the ci.sh --chaos-smoke entry point).
+
 Reports sustained tokens/s per phase, mode switch counts, decode launches
 per tick, and verifies the zero-recompiles-after-warmup invariant. Smoke-
 scale by default so it runs in CI; pass an arch name for the full config.
@@ -36,13 +43,14 @@ which must happen before jax initializes — hence the import-time check.
 
   PYTHONPATH=src python benchmarks/serve_continuous.py [arch] [n_requests]
   PYTHONPATH=src python benchmarks/serve_continuous.py --mesh [arch] [n_requests]
+  PYTHONPATH=src python benchmarks/serve_continuous.py --failover [arch] [n_requests]
 """
 from __future__ import annotations
 
 import json
 import os
 import sys
-from typing import Dict
+from typing import Dict, Sequence
 
 if "--mesh" in sys.argv:  # before jax initializes its backend
     from repro.xla_flags import force_host_device_count
@@ -56,6 +64,7 @@ from repro.core import elastic
 from repro.launch.mesh import make_serve_mesh
 from repro.models.model import init_params
 from repro.models.paged import PagedLayout
+from repro.runtime.fault_tolerance import ExecutorSupervisor, FailurePlan
 from repro.runtime.serving import (MeshExecutor, Request, ServingEngine,
                                    SLOPolicy, poisson_trace)
 from repro.runtime.speculative import SpecConfig
@@ -64,7 +73,13 @@ BENCH_JSON = os.path.join(RESULTS_DIR, "BENCH_serving.json")
 
 
 def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
-        batch: int = 4, capacity: int = 32) -> None:
+        batch: int = 4, capacity: int = 32,
+        phases: Sequence[str] = ("core", "failover")) -> None:
+    """Run the serving benchmark. ``phases`` selects the groups: ``core``
+    is the SLO/mixed-width/prefill/speculative/paged suite (phases 1-8 in
+    the module docstring), ``failover`` the fault-injection recovery phase.
+    Results merge into ``BENCH_serving.json`` so a subset run refreshes
+    only its own entries."""
     cfg = smoke_config(arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
     bench: Dict[str, Dict] = {}
@@ -72,6 +87,35 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
     def record(name: str, us: float, derived: Dict) -> None:
         bench[name.rsplit("/", 1)[-1]] = derived
         emit(name, us, derived)
+
+    unknown = set(phases) - {"core", "failover"}
+    if unknown:
+        raise ValueError(f"unknown benchmark phases: {sorted(unknown)}")
+    if "core" in phases:
+        _core_phases(cfg, params, record, n_requests, batch, capacity)
+    if "failover" in phases:
+        _failover_phase(cfg, params, record, n_requests, batch, capacity)
+
+    # the tracked serving baseline: every phase's derived metrics, one file.
+    # Merged with what's already on disk so a phase-subset run (ci.sh
+    # --chaos-smoke runs only "failover") doesn't clobber the other entries.
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    merged: Dict[str, Dict] = {}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                merged = json.load(f).get("phases", {})
+        except (OSError, json.JSONDecodeError, AttributeError):
+            merged = {}
+    merged.update(bench)
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"arch": cfg.name, "n_requests": n_requests,
+                   "batch": batch, "capacity": capacity, "phases": merged},
+                  f, indent=2, sort_keys=True)
+    print(f"[serve_continuous] wrote {BENCH_JSON}")
+
+
+def _core_phases(cfg, params, record, n_requests, batch, capacity) -> None:
     engine = ServingEngine(params, cfg, batch_size=batch,
                            cache_capacity=capacity, prefill_threshold=8)
     engine.warmup()
@@ -316,13 +360,79 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
                       for k, v in engine.ctrl.telemetry_summary().items()},
     })
 
-    # the tracked serving baseline: every phase's derived metrics, one file
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(BENCH_JSON, "w") as f:
-        json.dump({"arch": cfg.name, "n_requests": n_requests,
-                   "batch": batch, "capacity": capacity, "phases": bench},
-                  f, indent=2, sort_keys=True)
-    print(f"[serve_continuous] wrote {BENCH_JSON}")
+
+def _failover_phase(cfg, params, record, n_requests, batch, capacity) -> None:
+    """Fault-injected serving: one paged + speculative trace served fault-
+    free through a COUNTING supervisor (learning per-site launch totals),
+    then again under a FailurePlan that kills three distinct launch
+    boundaries (paged decode, spec verify, prefill adoption). The committed
+    streams must be bit-identical; the new reporting surface is recovery
+    latency — rebuild + replay and detection -> first post-recovery token —
+    and the tokens/s degradation the recovery overhead costs."""
+    def factory():
+        eng = ServingEngine(params, cfg, batch_size=batch,
+                            cache_capacity=capacity, prefill_threshold=4,
+                            speculative=SpecConfig(ks=(2,)),
+                            paged=PagedLayout(page_size=4))
+        eng.warmup()
+        return eng
+
+    def trace():
+        # rate 1e6 -> all arrivals at ~t=0: the tick schedule is independent
+        # of measured latencies, so chaos and fault-free runs walk the same
+        # schedule and their streams are comparable token-for-token
+        return poisson_trace(max(6, n_requests), rate_per_s=1e6, seed=43,
+                             prompt_len=(1, 9), new_tokens=(4, 8),
+                             vocab=cfg.vocab_size, interactive_frac=0.3)
+
+    counter = FailurePlan()
+    sup0 = ExecutorSupervisor(factory, failure_plan=counter)
+    ref_summary = sup0.run_trace(trace())
+    assert sup0.failovers == 0
+    ref_out = {r.rid: tuple(r.generated) for r in sup0.engine.completed}
+    totals = dict(counter.site_counts)
+    sites = ["paged_decode", "verify", "prefill"]
+    assert all(totals.get(s, 0) >= 1 for s in sites), \
+        f"trace must exercise every failure site: {totals}"
+    # occurrences the fault-free run proves reachable (chaos redo ticks
+    # only inflate the counts, so these are guaranteed to fire)
+    plan = FailurePlan(at_sites=tuple((s, min(2, totals[s])) for s in sites))
+
+    # ping-pong two pre-warmed standbys: restore fully resets an engine,
+    # so failover pays only snapshot replay, not engine construction
+    engines = [factory(), factory()]
+    idx = [0]
+
+    def pingpong():
+        idx[0] ^= 1
+        return engines[idx[0]]
+
+    sup = ExecutorSupervisor(pingpong, failure_plan=plan,
+                             max_failovers=len(plan.at_sites))
+    summary = sup.run_trace(trace())
+    out = {r.rid: tuple(r.generated) for r in sup.engine.completed}
+    assert out == ref_out, \
+        "failover must not change the committed token streams"
+    assert summary["failovers"] == len(plan.at_sites)
+    assert plan.fired_sites == set(plan.at_sites)
+    # busy_s counts only successful-attempt device time; the chaos run's
+    # real throughput divides by busy + recovery overhead
+    overhead = sum(summary["recovery_s"])
+    wall = summary["busy_s"] + overhead
+    ref_tps = ref_summary["sustained_tokens_per_s"]
+    tps = summary["generated_tokens"] / wall if wall > 0 else 0.0
+    first = [t for t in summary["first_token_s"] if t is not None]
+    record(f"serve_continuous/{cfg.name}/failover", 0.0, {
+        "token_identical": True,
+        "failovers": summary["failovers"],
+        "failure_sites": [f"{s}#{n}" for s, n in plan.at_sites],
+        "recovery_ms": [round(r * 1e3, 1) for r in summary["recovery_s"]],
+        "detect_to_first_token_ms": [round(t * 1e3, 1) for t in first],
+        "tokens_per_s_fault_free": round(ref_tps, 1),
+        "tokens_per_s_under_chaos": round(tps, 1),
+        "throughput_degradation_frac":
+            round(1.0 - tps / ref_tps, 3) if ref_tps > 0 else 0.0,
+    })
 
 
 def run_mesh(arch: str = "tinyllama-1.1b", n_requests: int = 12,
@@ -377,10 +487,12 @@ def run_mesh(arch: str = "tinyllama-1.1b", n_requests: int = 12,
 
 
 if __name__ == "__main__":
-    argv = [a for a in sys.argv[1:] if a != "--mesh"]
+    argv = [a for a in sys.argv[1:] if not a.startswith("--")]
     arch = argv[0] if argv else "tinyllama-1.1b"
     n = int(argv[1]) if len(argv) > 1 else 24
     if "--mesh" in sys.argv:
         run_mesh(arch, max(6, n // 2))
+    elif "--failover" in sys.argv:
+        run(arch, n, phases=("failover",))
     else:
         run(arch, n)

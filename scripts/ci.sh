@@ -29,6 +29,13 @@
 #                                # SWA / kv-quant, spec + tree) locally and
 #                                # on a 2x4 CPU mesh subprocess, plus the
 #                                # allocator/radix property tests
+#   scripts/ci.sh --chaos-smoke  # additionally run the fault-tolerance
+#                                # shard: chaos-trace harness (injected
+#                                # executor failures at every launch
+#                                # boundary -> bit-identical streams after
+#                                # failover, dense + paged, incl. a 2x4 CPU
+#                                # mesh subprocess) + snapshot/restore and
+#                                # seed fault_tolerance primitive tests
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -41,6 +48,7 @@ MESH_SMOKE=0
 SPEC_SMOKE=0
 TREE_SMOKE=0
 PAGED_SMOKE=0
+CHAOS_SMOKE=0
 for arg in "$@"; do
     case "$arg" in
         --bench-smoke) BENCH_SMOKE=1 ;;
@@ -48,9 +56,34 @@ for arg in "$@"; do
         --spec-smoke) SPEC_SMOKE=1 ;;
         --tree-smoke) TREE_SMOKE=1 ;;
         --paged-smoke) PAGED_SMOKE=1 ;;
+        --chaos-smoke) CHAOS_SMOKE=1 ;;
         *) echo "ci.sh: unknown argument '$arg'" >&2; exit 2 ;;
     esac
 done
+
+if [ "$CHAOS_SMOKE" -eq 1 ]; then
+    echo "CI: chaos-smoke shard (fault-tolerant serving)"
+    CHAOS_TIMEOUT="${CI_CHAOS_TIMEOUT:-1200}"
+    # chaos-trace harness (bit-identical streams under injected failures at
+    # decode / verify / tree-verify / paged-decode / prefill boundaries,
+    # dense + paged + mesh subprocess), ServingEngine.snapshot/restore
+    # exactness, ExecutorSupervisor mechanics, and the seed
+    # fault_tolerance.py primitives (TrainRunner restarts, StragglerMonitor
+    # warmup, FailurePlan semantics)
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$CHAOS_TIMEOUT" \
+        python -m pytest -q tests/test_chaos.py tests/test_fault_tolerance.py; then
+        echo "CI: FAIL (fault-tolerance tests)"
+        exit 1
+    fi
+    # failover phase of the serving benchmark (recovery latency + tokens/s
+    # degradation recorded into benchmarks/results/BENCH_serving.json)
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$CHAOS_TIMEOUT" \
+        python -c "from benchmarks import serve_continuous; serve_continuous.run(n_requests=6, phases=('failover',))"; then
+        echo "CI: FAIL (serve_continuous failover bench-smoke)"
+        exit 1
+    fi
+    echo "CI: chaos-smoke OK"
+fi
 
 if [ "$PAGED_SMOKE" -eq 1 ]; then
     echo "CI: paged-smoke shard (block-paged KV cache)"

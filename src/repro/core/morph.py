@@ -104,6 +104,25 @@ class ModeTelemetry:
                 "p50_ms": self.p50_s * 1e3, "p95_ms": self.p95_s * 1e3,
                 "tokens_per_s": self.tokens_per_s}
 
+    def state_dict(self) -> Dict:
+        """Copy of the full telemetry state (plain lists/scalars).
+
+        Snapshot/restore seam for fault-tolerant serving: a rebuilt engine
+        must keep steering the SLO policy with the measured history the lost
+        executor accumulated, not restart from the analytical cold start.
+        """
+        return {"window": self._window, "fifo": list(self._fifo),
+                "steps": self.steps, "tokens": self.tokens,
+                "total_s": self.total_s}
+
+    def load_state(self, st: Dict) -> None:
+        self._window = int(st["window"])
+        self._fifo = deque(st["fifo"])
+        self._sorted = sorted(self._fifo)
+        self.steps = int(st["steps"])
+        self.tokens = int(st["tokens"])
+        self.total_s = float(st["total_s"])
+
 
 class MorphController:
     """Dispatches train/serve steps to specialized executables.
@@ -215,9 +234,29 @@ class MorphController:
     def step_for(self, mode: MorphMode) -> Callable:
         return self._get(mode)
 
+    def force_mode(self, mode: MorphMode) -> None:
+        """Set the active mode WITHOUT counting/logging a switch.
+
+        Snapshot restore re-materializes a policy decision that was already
+        made (and logged) once on the lost executor; routing it through
+        ``set_mode`` would double-count it in ``stats['switches']``.
+        """
+        if mode.name not in self.mode_by_name:
+            raise KeyError(f"mode {mode.name} not in deployed mode table")
+        self._mode = mode
+
     def telemetry_summary(self) -> Dict[str, Dict[str, float]]:
         return {name: t.summary() for name, t in self.telemetry.items()
                 if t.steps}
+
+    def telemetry_state(self) -> Dict[str, Dict]:
+        """Snapshot-able per-mode telemetry (see ModeTelemetry.state_dict)."""
+        return {name: t.state_dict() for name, t in self.telemetry.items()}
+
+    def load_telemetry_state(self, st: Dict[str, Dict]) -> None:
+        for name, s in st.items():
+            if name in self.telemetry:
+                self.telemetry[name].load_state(s)
 
 
 def make_serve_controller(params, cfg: ModelConfig,

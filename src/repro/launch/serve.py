@@ -22,6 +22,15 @@ Two traffic shapes:
     mesh's DesignPoint(dp, tp), corrected online by measured telemetry) fits
     the budget.
 
+Fault-tolerance drill: ``--fail-at site:occ[,site:occ...]`` injects executor
+failures at launch boundaries (sites: decode, paged_decode, verify,
+tree_verify, prefill) and ``--tick-timeout-s`` arms hung-tick detection;
+either one routes the drive loop through an ``ExecutorSupervisor`` that
+snapshots before every tick and rebuilds + replays on failure (recovery
+timings are printed per failover). ``--deadline-s`` gives every request a
+TTL on the virtual serving clock; requests queued past it finish as
+``expired`` instead of occupying slots.
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
       --tokens 64 --switch-every 16 --mesh 2x4
@@ -62,9 +71,12 @@ from repro.core import elastic
 from repro.launch.mesh import make_serve_mesh
 from repro.models.model import init_params
 from repro.models.paged import PagedLayout
+from repro.runtime.fault_tolerance import ExecutorSupervisor, FailurePlan
 from repro.runtime.serving import (MeshExecutor, Request, ServingEngine,
                                    SLOPolicy)
 from repro.runtime.speculative import SpecConfig
+
+FAILURE_SITES = ("decode", "paged_decode", "verify", "tree_verify", "prefill")
 
 
 def main(argv=None):
@@ -116,8 +128,36 @@ def main(argv=None):
                          "slot at full length + scratch). Requires "
                          "--kv-page-size; undersizing trades admission "
                          "failures for memory")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request TTL in seconds on the virtual serving "
+                         "clock (0 = none): requests still queued past it "
+                         "finish as 'expired' instead of occupying slots")
+    ap.add_argument("--fail-at", default="",
+                    help="inject executor failures: comma-separated "
+                         "site:occurrence pairs, e.g. decode:3,verify:1 "
+                         f"(sites: {', '.join(FAILURE_SITES)}); each kills "
+                         "that site's Nth launch, and an ExecutorSupervisor "
+                         "rebuilds from the pre-tick snapshot and replays")
+    ap.add_argument("--tick-timeout-s", type=float, default=0.0,
+                    help="if > 0, supervise ticks with a wall-time timeout: "
+                         "a slower tick is treated as a hung executor — its "
+                         "results are discarded and the tick is redone on a "
+                         "rebuilt engine")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    failure_plan = None
+    if args.fail_at:
+        at_sites = []
+        for part in args.fail_at.split(","):
+            site, sep, occ = part.strip().partition(":")
+            if site not in FAILURE_SITES or not sep or not occ.isdigit() \
+                    or int(occ) < 1:
+                ap.error(f"--fail-at wants site:occurrence pairs with sites "
+                         f"in {FAILURE_SITES} and occurrence >= 1, got "
+                         f"{part!r}")
+            at_sites.append((site, int(occ)))
+        failure_plan = FailurePlan(at_sites=tuple(at_sites))
 
     if args.batch < 1:
         ap.error(f"--batch must be >= 1, got {args.batch}")
@@ -169,13 +209,16 @@ def main(argv=None):
             paged.validate(cfg, capacity)
         except ValueError as e:
             ap.error(str(e))
-    engine = ServingEngine(params, cfg, batch_size=args.batch,
-                           cache_capacity=capacity, modes=modes,
-                           executor=executor,
-                           prefill_threshold=args.prefill_threshold,
-                           speculative=speculative,
-                           temperature=args.temperature, top_k=args.top_k,
-                           sample_seed=args.seed, paged=paged)
+    def build_engine():
+        return ServingEngine(params, cfg, batch_size=args.batch,
+                             cache_capacity=capacity, modes=modes,
+                             executor=executor,
+                             prefill_threshold=args.prefill_threshold,
+                             speculative=speculative,
+                             temperature=args.temperature, top_k=args.top_k,
+                             sample_seed=args.seed, paged=paged)
+
+    engine = build_engine()
     mesh_note = (f" mesh=dp{dp}xtp{tp} policy={engine.executor.policy}"
                  if args.mesh else "")
     paged_note = ""
@@ -187,31 +230,73 @@ def main(argv=None):
           f"{mesh_note}{paged_note}")
     engine.warmup()
 
+    supervisor = None
+    if failure_plan is not None or args.tick_timeout_s > 0:
+        warmed = [engine]
+
+        def factory():
+            if warmed:  # first call adopts the already-warmed engine
+                return warmed.pop()
+            eng = build_engine()
+            eng.warmup()
+            return eng
+
+        supervisor = ExecutorSupervisor(
+            factory, failure_plan=failure_plan,
+            tick_timeout_s=args.tick_timeout_s or None)
+
     for i in range(n_requests):
         engine.submit(Request(rid=i, prompt=(1 + i % (cfg.vocab_size - 1),),
                               max_new_tokens=per_req,
-                              slo_class="interactive" if i % 3 == 0 else "batch"))
+                              slo_class="interactive" if i % 3 == 0 else "batch",
+                              deadline_s=args.deadline_s or None))
 
     policy = None
     if args.budget_ms > 0:
         policy = SLOPolicy(cfg, engine.ctrl, batch_size=args.batch,
                            cache_capacity=capacity, dp=dp, tp=tp)
+        if supervisor is not None:
+            supervisor.attach_policy(policy)
 
     mode_idx = len(modes) - 1
     busy = 0.0
-    while engine.queue or engine.n_active:
+    while True:
+        # a failover swaps the engine out from under the loop
+        engine = supervisor.engine if supervisor is not None else engine
+        if not (engine.queue or engine.n_active):
+            break
         if policy is not None:
             engine.set_admission_mode(policy.choose(args.budget_ms * 1e-3))
         elif engine.step_count and engine.step_count % args.switch_every == 0:
             mode_idx = (mode_idx - 1) % len(modes)  # degrade then wrap
             engine.set_admission_mode(modes[mode_idx])
-        busy += engine.step()
+        if supervisor is not None:
+            busy += supervisor.tick(now_s=busy)
+        else:
+            busy += engine.step(now_s=busy)
+    engine = supervisor.engine if supervisor is not None else engine
 
     assert engine.ctrl.stats["compiles"] == engine.compiles_after_warmup, \
         "runtime switch must not recompile"
+    if supervisor is not None:
+        if failure_plan is not None:
+            missed = set(failure_plan.at_sites) - failure_plan.fired_sites
+            if missed:
+                print(f"[serve] warning: planned failures never reached "
+                      f"(too few launches at those sites): {sorted(missed)}")
+        for e in supervisor.failover_log:
+            ftok = (f"{e['first_token_s'] * 1e3:.0f} ms"
+                    if e["first_token_s"] is not None else "n/a")
+            print(f"[serve] failover @step {e['step']}: {e['cause']} | "
+                  f"rebuild {e['rebuild_s'] * 1e3:.0f} ms, "
+                  f"replay {e['replay_s'] * 1e3:.0f} ms, "
+                  f"first token {ftok}")
     ctrl = engine.ctrl
     generated = sum(len(r.generated) for r in engine.completed)
-    print(f"[serve] completed={len(engine.completed)} generated={generated} "
+    print(f"[serve] completed={len(engine.completed)} "
+          f"expired={len(engine.expired)} "
+          f"failovers={supervisor.failovers if supervisor else 0} "
+          f"generated={generated} "
           f"switches={ctrl.stats['switches']} "
           f"admission_switches={len(engine.admission_switch_log)} "
           f"recompiles_after_warmup=0 dispatches={ctrl.stats['dispatches']} "

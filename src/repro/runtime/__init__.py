@@ -6,6 +6,7 @@ from repro.runtime.compression import (
     quantize,
 )
 from repro.runtime.fault_tolerance import (
+    ExecutorSupervisor,
     FailurePlan,
     SimulatedFailure,
     StragglerMonitor,
@@ -13,6 +14,7 @@ from repro.runtime.fault_tolerance import (
     elastic_reshard,
 )
 from repro.runtime.serving import (
+    EngineSnapshot,
     LocalExecutor,
     MeshExecutor,
     Request,
@@ -23,6 +25,8 @@ from repro.runtime.serving import (
 from repro.runtime.speculative import SpecConfig, SpecTelemetry
 
 __all__ = [
+    "EngineSnapshot",
+    "ExecutorSupervisor",
     "LocalExecutor",
     "MeshExecutor",
     "Request",

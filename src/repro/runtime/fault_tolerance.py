@@ -1,15 +1,23 @@
-"""Fault-tolerant training runtime: checkpoint/restart, failure injection,
-straggler monitoring, elastic re-sharding.
+"""Fault tolerance: checkpoint/restart training, failure injection, straggler
+monitoring, elastic re-sharding — and serving-engine failover.
 
 At 1000+ node scale the failure model is: some host dies mid-step (hardware,
-preemption), the job controller restarts the world, and training must resume
-from the last durable checkpoint with bit-identical data order. This module
-implements that contract and lets tests *inject* the failures:
+preemption), the job controller restarts the world, and work must resume from
+the last durable state with bit-identical order. This module implements that
+contract for BOTH runtimes and lets tests *inject* the failures:
 
 * ``TrainRunner.run`` — step loop with periodic checkpoints; any exception
   (including injected ``SimulatedFailure``) can be survived by calling
   ``run`` again: it restores the latest checkpoint and replays the step-keyed
   data stream (see ``repro.data.pipeline.make_batch`` determinism contract).
+* ``ExecutorSupervisor`` — the serving-side analog: wraps a ``ServingEngine``
+  factory, snapshots host truth before every tick, converts launch failures
+  (injected via ``FailurePlan.at_sites`` through the executor's
+  ``failure_hook``, or detected by a tick-wall-time timeout) into a failover:
+  build a fresh engine, ``restore`` the pre-tick snapshot (device caches
+  re-materialize by token replay), redo the interrupted tick. The durable
+  state is the snapshot, not a file — serving state is small and rebuilt
+  from tokens, so "checkpoint" degenerates to a host-side struct.
 * ``StragglerMonitor`` — per-step wall-time EWMA; steps slower than
   ``threshold x median`` are flagged; the mitigation hook is pluggable (on a
   real pod: re-shard away from the slow host / enable backup execution).
@@ -19,8 +27,9 @@ implements that contract and lets tests *inject* the failures:
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -57,14 +66,38 @@ class StragglerMonitor:
 
 @dataclass
 class FailurePlan:
-    """Deterministic failure injection: fail when ``step in at_steps`` (once each)."""
+    """Deterministic failure injection, by training step or by launch site.
+
+    ``at_steps`` is the training-loop form: fail when ``step in at_steps``
+    (once each). ``at_sites`` is the serving form: ``(site, occurrence)``
+    pairs, occurrence 1-based — ``("verify", 3)`` kills the third verify
+    launch the plan ever sees. Occurrence counts are GLOBAL across
+    failovers: the redone tick's launches re-increment them, so a plan is
+    one fixed schedule over the whole chaos run, not per-engine state.
+    """
     at_steps: tuple = ()
+    at_sites: Tuple[Tuple[str, int], ...] = ()
     _fired: set = field(default_factory=set)
+    site_counts: Dict[str, int] = field(default_factory=dict)
+    _site_fired: set = field(default_factory=set)
 
     def maybe_fail(self, step: int):
         if step in self.at_steps and step not in self._fired:
             self._fired.add(step)
             raise SimulatedFailure(f"injected node failure at step {step}")
+
+    def maybe_fail_site(self, site: str):
+        """Count one launch at ``site``; raise if a planned pair matches."""
+        n = self.site_counts.get(site, 0) + 1
+        self.site_counts[site] = n
+        if (site, n) in self.at_sites and (site, n) not in self._site_fired:
+            self._site_fired.add((site, n))
+            raise SimulatedFailure(
+                f"injected executor failure at {site} launch #{n}")
+
+    @property
+    def fired_sites(self) -> set:
+        return set(self._site_fired)
 
 
 class TrainRunner:
@@ -133,3 +166,186 @@ class TrainRunner:
 def elastic_reshard(state, shardings):
     """Re-place a live state pytree onto new shardings (mesh change)."""
     return jax.tree_util.tree_map(lambda a, s: jax.device_put(a, s), state, shardings)
+
+
+class ExecutorSupervisor:
+    """Failover seam around a ``ServingEngine``: snapshot every tick, rebuild
+    on launch failure, resume with exact replay.
+
+    ``engine_factory`` builds a geometry-compatible engine (same modes,
+    batch size, paged layout, sample seed — the ``restore`` contract). It is
+    called once up front and once per failover; a factory that round-robins
+    pre-warmed standby engines makes failover cost just the replay (restore
+    fully resets an engine, so two engines can ping-pong indefinitely).
+
+    Failures surface two ways: an exception in ``recover_on`` raised out of
+    the tick (the injected-``SimulatedFailure`` path — a real integration
+    would map device/RPC errors here), or a completed tick whose wall time
+    exceeded ``tick_timeout_s`` (the hung-executor path; its device results
+    are DISCARDED — the snapshot restore redoes the tick on the standby).
+    Either way the recovery is the same: tear down, rebuild from the
+    pre-tick snapshot, redo the tick. Uncommitted speculative work needs no
+    bookkeeping — the snapshot predates the draft, so redoing the tick
+    re-drafts and re-verifies it. Requests observe only added latency.
+
+    ``failure_plan.maybe_fail_site`` (and then ``launch_hook``) is armed as
+    the engine executor's ``failure_hook``, firing at every instrumented
+    launch boundary: ``decode``, ``paged_decode``, ``verify``,
+    ``tree_verify``, ``prefill``. Replay launches are deliberately NOT
+    instrumented, so a planned failure cannot re-fire mid-recovery; site
+    occurrence counts keep advancing across failovers (one global schedule).
+    """
+
+    def __init__(self, engine_factory: Callable[[], Any], *,
+                 failure_plan: Optional[FailurePlan] = None,
+                 tick_timeout_s: Optional[float] = None,
+                 max_failovers: int = 8,
+                 recover_on: Tuple[type, ...] = (SimulatedFailure,),
+                 launch_hook: Optional[Callable[[str], None]] = None):
+        self.factory = engine_factory
+        self.plan = failure_plan
+        self.tick_timeout_s = tick_timeout_s
+        self.max_failovers = max_failovers
+        self.recover_on = tuple(recover_on)
+        self.launch_hook = launch_hook
+        self.failovers = 0
+        self.failover_log: List[Dict[str, Any]] = []
+        self._policy = None
+        self._pending_first_token: Optional[Tuple[Dict[str, Any], float]] = None
+        self.engine = engine_factory()
+        self._arm()
+
+    def _arm(self) -> None:
+        self.engine.executor.failure_hook = self._on_launch
+
+    def _on_launch(self, site: str) -> None:
+        if self.plan is not None:
+            self.plan.maybe_fail_site(site)
+        if self.launch_hook is not None:
+            self.launch_hook(site)
+
+    def attach_policy(self, policy) -> None:
+        """Register the SLO policy so failover rebinds it to the new
+        engine's controller (its telemetry source)."""
+        self._policy = policy
+
+    def _failover(self, snap, cause: str, detect_s: float) -> None:
+        self.failovers += 1
+        if self.failovers > self.max_failovers:
+            raise RuntimeError(
+                f"supervisor exceeded {self.max_failovers} failovers "
+                f"(last cause: {cause})")
+        t_detect = time.perf_counter()
+        # the failed engine's hook is disarmed so a lingering reference
+        # can't keep consuming the plan's occurrence schedule
+        self.engine.executor.failure_hook = None
+        t0 = time.perf_counter()
+        self.engine = self.factory()
+        rebuild_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        self.engine.restore(snap)
+        replay_s = time.perf_counter() - t0
+        self.engine.check_paged_invariants()
+        self._arm()
+        if self._policy is not None:
+            self._policy.controller = self.engine.ctrl
+        entry = dict(step=self.engine.step_count, cause=cause,
+                     detect_s=detect_s, rebuild_s=rebuild_s,
+                     replay_s=replay_s, first_token_s=None)
+        self.failover_log.append(entry)
+        self._pending_first_token = (entry, t_detect)
+
+    def tick(self, now_s: float = 0.0) -> float:
+        """One supervised engine tick: snapshot, attempt, recover, redo.
+
+        Returns the successful attempt's measured device time (the virtual
+        clock advances by served work only; recovery cost is reported
+        separately in ``failover_log``).
+        """
+        snap = self.engine.snapshot()
+        while True:
+            gen0 = self.engine._generated_total()
+            t0 = time.perf_counter()
+            try:
+                dt = self.engine.step(now_s=now_s)
+            except self.recover_on as e:
+                self._failover(snap, f"{type(e).__name__}: {e}",
+                               time.perf_counter() - t0)
+                continue
+            wall = time.perf_counter() - t0
+            if self.tick_timeout_s is not None and wall > self.tick_timeout_s:
+                self._failover(
+                    snap, f"tick wall time {wall:.3f}s exceeded timeout "
+                          f"{self.tick_timeout_s}s", wall)
+                continue
+            break
+        if (self._pending_first_token is not None
+                and self.engine._generated_total() > gen0):
+            entry, t_detect = self._pending_first_token
+            entry["first_token_s"] = time.perf_counter() - t_detect
+            self._pending_first_token = None
+        return dt
+
+    def run_trace(self, trace: Sequence[Any], *,
+                  budget_fn: Optional[Callable[[float], float]] = None,
+                  policy=None, max_steps: int = 100_000) -> Dict[str, Any]:
+        """Drive an arrival trace through supervised ticks (virtual clock).
+
+        The supervised mirror of ``ServingEngine.run`` — same clock and SLO
+        plumbing, but every tick goes through ``tick`` so the loop survives
+        failovers (``self.engine`` is re-read each iteration because a
+        failover swaps it out from under the loop).
+        """
+        if (policy is None) != (budget_fn is None):
+            raise ValueError("policy and budget_fn must be passed together")
+        if policy is not None:
+            self.attach_policy(policy)
+        pending: Deque[Any] = deque(sorted(trace, key=lambda r: r.arrival_s))
+        clock = 0.0
+        busy = 0.0
+        eng = self.engine
+        completed0 = len(eng.completed)
+        expired0 = len(eng.expired)
+        generated0 = eng._generated_total()
+        steps0 = eng.step_count
+        bp0 = eng.backpressure_events
+        failovers0 = self.failovers
+        log0 = len(self.failover_log)
+        while True:
+            eng = self.engine
+            if not ((pending or eng.queue or eng.n_active)
+                    and eng.step_count - steps0 < max_steps):
+                break
+            while pending and pending[0].arrival_s <= clock:
+                eng.submit(pending.popleft())
+            if not eng.queue and not eng.n_active:
+                clock = pending[0].arrival_s
+                continue
+            if policy is not None and budget_fn is not None:
+                qd = {c: len(q) for c, q in eng._queues.items()}
+                mode = policy.choose(budget_fn(clock), queue_depths=qd)
+                if mode.name != eng.admission_mode.name:
+                    eng.admission_decision_log.append(
+                        dict(step=eng.step_count, **policy.last_decision))
+                eng.set_admission_mode(mode)
+                if eng.speculative is not None:
+                    eng._retune_spec(policy, qd)
+            dt = self.tick(now_s=clock)
+            busy += dt
+            clock += dt
+        eng = self.engine
+        total_generated = eng._generated_total() - generated0
+        new_log = self.failover_log[log0:]
+        return {
+            "completed": len(eng.completed) - completed0,
+            "expired": len(eng.expired) - expired0,
+            "generated_tokens": total_generated,
+            "busy_s": busy,
+            "clock_s": clock,
+            "sustained_tokens_per_s":
+                total_generated / busy if busy > 0 else 0.0,
+            "failovers": self.failovers - failovers0,
+            "recovery_s": [e["rebuild_s"] + e["replay_s"] for e in new_log],
+            "first_token_s": [e["first_token_s"] for e in new_log],
+            "backpressure_events": eng.backpressure_events - bp0,
+        }

@@ -216,8 +216,16 @@ class RadixCache:
     def n_nodes(self) -> int:
         return len(self.held_pages())
 
+    def freeable_pages(self) -> List[int]:
+        """Pages ONLY the tree references (refcount 1): what eviction could
+        actually return to the pool right now. Backpressure telemetry — a
+        deferral with many freeable pages means the admission budget, not
+        physical memory, is the binding constraint."""
+        return [p for p in self.held_pages() if self.alloc.refcount[p] == 1]
+
     def stats(self) -> Dict[str, float]:
         total = self.hits + self.misses
         return {"nodes": self.n_nodes, "hits": self.hits,
                 "misses": self.misses,
+                "freeable": len(self.freeable_pages()),
                 "hit_rate": self.hits / total if total else 0.0}

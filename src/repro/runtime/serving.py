@@ -91,6 +91,7 @@ old per-(depth, width) grouping.
 """
 from __future__ import annotations
 
+import copy
 import statistics
 import time
 from collections import deque
@@ -144,12 +145,19 @@ class Request:
     max_new_tokens: int
     arrival_s: float = 0.0
     slo_class: str = "batch"  # "interactive" admits ahead of "batch"
+    # absolute deadline: still queued past this instant -> retired with the
+    # terminal "expired" status instead of starving silently (None = no TTL)
+    deadline_s: Optional[float] = None
     # runtime state (engine-owned)
     generated: List[int] = field(default_factory=list)
     fed: int = 0  # tokens fed so far (prompt + generated)
     mode_name: str = ""
     admitted_step: int = -1
     finished_s: float = -1.0
+    status: str = "queued"  # queued | active | done | expired
+    # admitted through the compiled prefill path (vs token-by-token feed);
+    # snapshot replay must rebuild the slot through the SAME path
+    prefilled: bool = False
 
     @property
     def done(self) -> bool:
@@ -375,6 +383,19 @@ class LocalExecutor:
     policy = "local"
     dp = 1
     tp = 1
+    # fault-tolerance seam: ``ExecutorSupervisor`` installs a callable here
+    # and the engine announces every launch boundary through
+    # ``check_failure`` — a chaos plan (or a real health check) can convert
+    # any site into an executor loss the supervisor recovers from
+    failure_hook: Optional[Callable[[str], None]] = None
+
+    def check_failure(self, site: str) -> None:
+        """Announce a launch boundary (``site`` in {"decode",
+        "paged_decode", "verify", "tree_verify", "prefill"}) to the
+        installed failure hook, if any. Raising from the hook simulates the
+        executor dying before that launch ran."""
+        if self.failure_hook is not None:
+            self.failure_hook(site)
 
     def bind(self, cfg: ModelConfig, batch_size: int, cache_capacity: int,
              paged: Optional[PagedLayout] = None) -> "LocalExecutor":
@@ -618,6 +639,12 @@ class _GroupPaging:
         self.pages: List[List[int]] = [[] for _ in range(n_slots)]
         self.scratch: List[int] = []
         self.radix: Optional[RadixCache] = None
+        # admission control: worst-case page reservation per slot, booked
+        # when a request is admitted and released with the slot — admissions
+        # that would overbook the pool are deferred (backpressure) instead
+        # of hitting the mid-flight exhaustion hard error
+        self.budget: List[int] = [0] * n_slots
+        self.budgeted = 0
         if self.fixed:
             for i in range(n_slots):
                 self.pages[i] = [self.alloc.alloc()
@@ -654,9 +681,30 @@ class _GroupPaging:
             self.table[i, len(self.pages[i])] = p
             self.pages[i].append(p)
 
+    @property
+    def reservable(self) -> int:
+        """Pages admissions may budget against: the pool minus scratch.
+
+        Radix-held pages are NOT subtracted — eviction reclaims them on
+        demand, so they are slack, not commitment.
+        """
+        return self.alloc.n_pages - len(self.scratch)
+
+    def can_reserve(self, need: int) -> bool:
+        return self.fixed or self.budgeted + need <= self.reservable
+
+    def reserve(self, i: int, need: int) -> None:
+        """Book slot ``i``'s worst-case page demand against the pool."""
+        if self.fixed:
+            return  # fixed groups permanently own their pages
+        self.budgeted += need - self.budget[i]
+        self.budget[i] = need
+
     def release(self, i: int) -> None:
         """Drop slot ``i``'s references; its table row falls back to scratch."""
         self.host_pos[i] = 0
+        self.budgeted -= self.budget[i]
+        self.budget[i] = 0
         if self.fixed:
             return
         for p in self.pages[i]:
@@ -730,6 +778,18 @@ class _GroupPaging:
                 tail = {int(x) for x in row[len(own):]}
                 assert tail <= {self.scratch[i]}, \
                     f"slot {i}: tail maps non-scratch pages {tail}"
+        assert self.budgeted == sum(self.budget), (
+            f"admission budget drift: {self.budgeted} booked vs "
+            f"per-slot sum {sum(self.budget)}")
+        if not self.fixed:
+            assert self.budgeted <= self.reservable, (
+                f"admission overbooked: {self.budgeted} > "
+                f"{self.reservable} reservable pages")
+            for i in range(self.n_slots):
+                assert self.budget[i] == 0 \
+                    or len(self.pages[i]) <= self.budget[i], \
+                    f"slot {i} maps {len(self.pages[i])} pages over its " \
+                    f"admission budget {self.budget[i]}"
 
     def stats(self) -> Dict[str, float]:
         out = {"n_pages": self.alloc.n_pages,
@@ -737,7 +797,9 @@ class _GroupPaging:
                "free": self.alloc.n_free,
                "occupancy": self.alloc.occupancy(),
                "peak_in_use": self.alloc.peak_in_use,
-               "allocs": self.alloc.allocs}
+               "allocs": self.alloc.allocs,
+               "budgeted": self.budgeted,
+               "reservable": self.reservable}
         if self.radix is not None:
             out.update({f"radix_{k}": v
                         for k, v in self.radix.stats().items()})
@@ -771,6 +833,48 @@ class _DepthGroup:
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
+
+
+@dataclass
+class GroupSnapshot:
+    """Host-side truth of one depth group (see ``EngineSnapshot``)."""
+
+    depth: int
+    slots: List[Optional[Request]]  # deep copies — snapshot owns them
+    widths: List[float]
+    spec_k: int
+    spec_tree: Optional[Tuple[int, ...]]
+    spec_off_until: int
+    accept_window: List[float]
+    accept_window_maxlen: Optional[int]
+
+
+@dataclass
+class EngineSnapshot:
+    """Everything ``ServingEngine.restore`` needs to rebuild serving state
+    on a fresh executor — and nothing device-resident.
+
+    Device caches are deliberately NOT captured: every committed token is
+    known host-side (``(prompt + generated)[:fed]`` per slot, cache position
+    == ``fed``), so restore re-materializes each live slot by replaying its
+    committed stream through the compiled paths that produced it.
+    Uncommitted speculative work (drafts in flight when the snapshot was
+    cut) is not state either — the next tick re-drafts and re-verifies it.
+    ``paging_stats`` is informational (pre-failure occupancy for logs); the
+    page tables themselves are rebuilt exactly by the replay.
+    """
+
+    step_count: int
+    admission_mode: str
+    queues: Dict[str, List[Request]]
+    completed: List[Request]
+    expired: List[Request]
+    groups: Dict[int, GroupSnapshot]
+    counters: Dict[str, float]
+    logs: Dict[str, list]
+    telemetry: Dict[str, Dict]
+    spec_telemetry: Dict
+    paging_stats: Dict[int, Dict[str, float]]
 
 
 class ServingEngine:
@@ -907,6 +1011,12 @@ class ServingEngine:
         self._queues: Dict[str, Deque[Request]] = {c: deque()
                                                    for c in SLO_CLASSES}
         self.completed: List[Request] = []
+        # deadline-retired requests (terminal "expired" status, never admitted)
+        self.expired: List[Request] = []
+        # graceful pool-exhaustion degradation: admissions the page budget
+        # deferred, logged instead of raising out of the tick loop
+        self.backpressure_log: Deque[Dict] = deque(maxlen=4096)
+        self.backpressure_events = 0
         self.admission_mode: MorphMode = self.ctrl.modes[-1]
         # (step#, from, to, queued interactive, queued batch) per switch;
         # bounded like the controller's switch_log so an oscillating SLO
@@ -1032,7 +1142,54 @@ class ServingEngine:
         if need > self.cache_capacity:
             raise ValueError(f"request {req.rid} needs {need} cache slots, "
                              f"capacity is {self.cache_capacity}")
+        if self.paged is not None:
+            # reject-at-submit: a request whose worst case overflows the
+            # page budget of EVERY depth group can never be admitted —
+            # deferring it would starve it forever (transient shortage is
+            # handled at admission time by deferral instead)
+            dyn = [g for g in self.groups.values()
+                   if g.paging is not None and not g.paging.fixed]
+            if dyn:
+                needs = [self._worst_case_pages(g, req) for g in dyn]
+                resv = min(g.paging.reservable for g in dyn)
+                if min(needs) > resv:
+                    raise ValueError(
+                        f"request {req.rid} can never be admitted: its "
+                        f"worst case needs {min(needs)} kv pages but only "
+                        f"{resv} are reservable (raise --kv-pages or shrink "
+                        f"the request)")
         self._queues[req.slo_class].append(req)
+
+    def _worst_case_pages(self, g: _DepthGroup, req: Request) -> int:
+        """Pages slot-admitting ``req`` into ``g`` can ever map at once.
+
+        The highest decode write position is ``prompt + new - 2`` (the last
+        generated token is never fed) plus the deepest draft shape the group
+        could speculate past it; prefill admission maps ``plen // ps + 1``
+        pages up front, which can exceed the decode bound for tiny
+        ``max_new_tokens``.
+        """
+        pg = g.paging
+        headroom = 0
+        plan = self._spec_plan.get(g.depth)
+        if self.speculative is not None and plan is not None:
+            shapes = list(plan.ks) + [len(br) for br in plan.trees]
+            headroom = max(shapes, default=0)
+        last = len(req.prompt) + req.max_new_tokens - 2 + headroom
+        need = max(last, len(req.prompt)) // pg.ps + 1
+        return min(need, pg.cap_pages)
+
+    def _reserve_pages(self, g: _DepthGroup, slot: int, req: Request) -> bool:
+        """Book ``req``'s worst-case page demand for ``slot``; False = the
+        pool cannot cover it right now (caller defers the admission)."""
+        pg = g.paging
+        if pg is None or pg.fixed:
+            return True
+        need = self._worst_case_pages(g, req)
+        if not pg.can_reserve(need):
+            return False
+        pg.reserve(slot, need)
+        return True
 
     def _pop_next(self) -> Optional[Request]:
         for cls in SLO_CLASSES:
@@ -1059,7 +1216,31 @@ class ServingEngine:
         return (len(req.prompt) >= self.prefill_threshold
                 and not self.cfg.is_encdec and not self.cfg.frontend)
 
+    def _expire_queued(self, now_s: float) -> None:
+        """Retire queued requests past their deadline (both SLO classes).
+
+        Terminal ``expired`` status — the request is never admitted and
+        never completes; serving it after its TTL would waste launches the
+        live queue could use. In-flight requests are never expired: their
+        cache state is paid for, finishing is strictly cheaper than the
+        admission it displaced.
+        """
+        for cls in SLO_CLASSES:
+            q = self._queues[cls]
+            if not any(r.deadline_s is not None for r in q):
+                continue
+            kept: Deque[Request] = deque()
+            for r in q:
+                if r.deadline_s is not None and now_s > r.deadline_s:
+                    r.status = "expired"
+                    r.finished_s = now_s
+                    self.expired.append(r)
+                else:
+                    kept.append(r)
+            self._queues[cls] = kept
+
     def _admit(self, now_s: float = 0.0) -> None:
+        self._expire_queued(now_s)
         g = self.groups[self.admission_mode.depth]
         mask = np.zeros(self.batch_size, bool)
         prefills = []
@@ -1067,8 +1248,22 @@ class ServingEngine:
             req = self._pop_next()
             if req is None:
                 break
+            if not self._reserve_pages(g, slot, req):
+                # graceful degradation: the page pool cannot cover this
+                # request's worst case right now — defer it (head of its
+                # class queue, FIFO order kept) and log a backpressure
+                # event; completions release budget and it admits later
+                self._queues[req.slo_class].appendleft(req)
+                pg = g.paging
+                self.backpressure_log.append(dict(
+                    step=self.step_count, rid=req.rid,
+                    need=self._worst_case_pages(g, req),
+                    budgeted=pg.budgeted, reservable=pg.reservable))
+                self.backpressure_events += 1
+                break
             g.slots[slot] = req
             g.widths[slot] = self.admission_mode.width
+            req.status = "active"
             req.mode_name = self.admission_mode.name
             req.admitted_step = self.step_count
             if self._use_prefill(req):
@@ -1084,13 +1279,26 @@ class ServingEngine:
         for slot, req in prefills:
             self._admit_prefill(g, slot, req, now_s)
 
-    def _admit_prefill(self, g: _DepthGroup, slot: int, req: Request,
-                       now_s: float) -> None:
-        """Consume the whole prompt in one compiled prefill + adoption."""
+    def _complete(self, g: _DepthGroup, slot: int, req: Request,
+                  now_s: float) -> None:
+        """Retire a finished request: terminal status, slot + pages freed."""
+        req.finished_s = now_s
+        req.status = "done"
+        self.completed.append(req)
+        g.slots[slot] = None
         if g.paging is not None:
-            self._admit_prefill_paged(g, slot, req, now_s)
-            return
-        plen = len(req.prompt)
+            g.paging.release(slot)
+
+    def _prefill_launch(self, g: _DepthGroup, slot: int,
+                        prompt: Tuple[int, ...]):
+        """One compiled whole-prompt consume + dense slot adoption.
+
+        The launch-only half of prefill admission, shared with snapshot
+        replay (``_replay_prefill``) so a restored slot's prompt K/V comes
+        from the SAME executable its admission used. Returns the prompt's
+        last-position logits.
+        """
+        plen = len(prompt)
         key = (plen, g.depth)
         fn = self._prefills.get(key)
         if fn is None:
@@ -1103,46 +1311,28 @@ class ServingEngine:
                 self._prefills.clear()
             fn = self.executor.prefill_fn(plen, g.depth)
             self._prefills[key] = fn
-        t0 = time.perf_counter()
-        toks = self.executor.put(np.asarray([req.prompt], np.int32))
+        toks = self.executor.put(np.asarray([prompt], np.int32))
         slot_op = self.executor.put(np.int32(slot))
         logits, pre = fn(self.params, toks, slot_op)
         g.cache = self._adopt(g.cache, pre, slot_op)
-        # the prefill's last-position logits yield the first generated token
-        # (same contract as the decode step that eats the last prompt token);
-        # under sampled serving it must come from the slot's sample stream,
-        # not argmax — both admission paths serve the same distribution
-        if self.temperature > 0:
-            s_op = self.executor.put(np.uint32(self.step_count))
-            nxt = int(np.asarray(self._sample_fn(
-                logits[:, 0], g.keys[slot:slot + 1], self._temp_op, s_op))[0])
-        else:
-            nxt = int(np.asarray(jnp.argmax(logits[0, 0, : self.cfg.vocab_size])))
-        jax.block_until_ready(g.cache)
-        self.prefill_s += time.perf_counter() - t0
-        self.prefills += 1
-        self.prefill_prompt_tokens += plen
-        req.fed = plen
-        req.generated.append(nxt)
-        if req.done:
-            req.finished_s = now_s
-            self.completed.append(req)
-            g.slots[slot] = None
+        return logits
 
-    def _admit_prefill_paged(self, g: _DepthGroup, slot: int, req: Request,
-                             now_s: float) -> None:
-        """Paged whole-prompt admission with shared-prefix block reuse.
+    def _prefill_launch_paged(self, g: _DepthGroup, slot: int,
+                              prompt: Tuple[int, ...]):
+        """Paged whole-prompt consume with shared-prefix block reuse.
 
         The prompt's full pages are radix-matched under (depth, width): a
         resident prefix is mapped into the slot's table (incref'd, write-
         masked — the fused prefill recomputes identical K/V for those
         positions but does NOT write them, so many slots share one physical
         block). Fresh pages cover the rest; afterwards the prompt's full
-        pages are inserted into the tree for the next arrival.
+        pages are inserted into the tree for the next arrival. Shared with
+        snapshot replay, which re-establishes the same sharing. Returns the
+        prompt's last-position logits.
         """
         pg = g.paging
         ps = pg.ps
-        plen = len(req.prompt)
+        plen = len(prompt)
         rkey = (g.depth, g.widths[slot])
         if pg.fixed:
             # sliding window: the dense prefill already emits the ROLLED
@@ -1156,7 +1346,7 @@ class ServingEngine:
         else:
             ncp = min(plen // ps + 1, pg.cap_pages)
             n_full = min(plen // ps, ncp)
-            chunks = [tuple(req.prompt[j * ps:(j + 1) * ps])
+            chunks = [tuple(prompt[j * ps:(j + 1) * ps])
                       for j in range(n_full)]
             shared = pg.radix.match(rkey, chunks)
             for p in shared:
@@ -1175,8 +1365,7 @@ class ServingEngine:
                 self._prefills.clear()
             fn = self.executor.prefill_adopt_fn(plen, g.depth, ncp)
             self._prefills[key] = fn
-        t0 = time.perf_counter()
-        toks = self.executor.put(np.asarray([req.prompt], np.int32))
+        toks = self.executor.put(np.asarray([prompt], np.int32))
         slot_op = self.executor.put(np.int32(slot))
         logits, g.cache = fn(
             self.params, toks, slot_op, g.cache,
@@ -1184,6 +1373,22 @@ class ServingEngine:
             self.executor.put(wmask))
         if not pg.fixed:
             pg.radix.insert(rkey, chunks, pages_list[:n_full])
+        return logits
+
+    def _admit_prefill(self, g: _DepthGroup, slot: int, req: Request,
+                       now_s: float) -> None:
+        """Consume the whole prompt in one compiled prefill + adoption."""
+        self.executor.check_failure("prefill")
+        t0 = time.perf_counter()
+        if g.paging is not None:
+            logits = self._prefill_launch_paged(g, slot, req.prompt)
+        else:
+            logits = self._prefill_launch(g, slot, req.prompt)
+        req.prefilled = True
+        # the prefill's last-position logits yield the first generated token
+        # (same contract as the decode step that eats the last prompt token);
+        # under sampled serving it must come from the slot's sample stream,
+        # not argmax — both admission paths serve the same distribution
         if self.temperature > 0:
             s_op = self.executor.put(np.uint32(self.step_count))
             nxt = int(np.asarray(self._sample_fn(
@@ -1193,14 +1398,11 @@ class ServingEngine:
         jax.block_until_ready(g.cache)
         self.prefill_s += time.perf_counter() - t0
         self.prefills += 1
-        self.prefill_prompt_tokens += plen
-        req.fed = plen
+        self.prefill_prompt_tokens += len(req.prompt)
+        req.fed = len(req.prompt)
         req.generated.append(nxt)
         if req.done:
-            req.finished_s = now_s
-            self.completed.append(req)
-            g.slots[slot] = None
-            pg.release(slot)
+            self._complete(g, slot, req, now_s)
 
     def _spec_select(self, g: _DepthGroup):
         """The draft shape to speculate with this tick: ``("tree",
@@ -1246,6 +1448,11 @@ class ServingEngine:
         for slot bookkeeping."""
         plan = self._spec_plan[g.depth]
         kind, shape = sel
+        # failure boundary BEFORE any host page bookkeeping mutates: an
+        # injected loss here leaves the tick entirely un-executed, which is
+        # what makes the supervisor's pre-tick snapshot an exact replay point
+        self.executor.check_failure("tree_verify" if kind == "tree"
+                                    else "verify")
         if kind == "tree":
             draft = self.ctrl.aux_step(
                 tree_draft_compile_key(plan.draft_depth, shape))
@@ -1319,11 +1526,7 @@ class ServingEngine:
                     req.generated.append(int(out_h[i, j]))
                     produced += 1
             if req.done:
-                req.finished_s = now_s
-                self.completed.append(req)
-                g.slots[i] = None
-                if pg is not None:
-                    pg.release(i)
+                self._complete(g, i, req, now_s)
             elif pg is not None:
                 # rollback: pages grown for rejected draft positions free
                 pg.trim(i)
@@ -1376,6 +1579,7 @@ class ServingEngine:
             if g.paging is not None:
                 spent += self._paged_tick(g, active_ix, now_s)
                 continue
+            self.executor.check_failure("decode")
             toks = np.zeros((self.batch_size, 1), np.int32)
             for i in active_ix:
                 toks[i, 0] = g.slots[i].next_input()
@@ -1407,9 +1611,7 @@ class ServingEngine:
                 if req.fed >= len(req.prompt) and not req.done:
                     req.generated.append(int(nxt[i]))
                 if req.done:
-                    req.finished_s = now_s
-                    self.completed.append(req)
-                    g.slots[i] = None
+                    self._complete(g, i, req, now_s)
         self.ticks_with_work += ticked
         self.step_count += 1
         return spent
@@ -1424,6 +1626,7 @@ class ServingEngine:
         the smallest compiled table width covering every active slot, so
         variable-length slots re-trace nothing.
         """
+        self.executor.check_failure("paged_decode")
         pg = g.paging
         needed = 1
         for i in active_ix:
@@ -1468,10 +1671,7 @@ class ServingEngine:
             if req.fed >= len(req.prompt) and not req.done:
                 req.generated.append(int(nxt[i]))
             if req.done:
-                req.finished_s = now_s
-                self.completed.append(req)
-                g.slots[i] = None
-                pg.release(i)
+                self._complete(g, i, req, now_s)
         return dt
 
     # -- page-pool accounting ----------------------------------------------
@@ -1487,6 +1687,280 @@ class ServingEngine:
         """Per-depth-group pool occupancy + radix telemetry (empty if dense)."""
         return {d: g.paging.stats() for d, g in self.groups.items()
                 if g.paging is not None}
+
+    # -- snapshot / restore (fault tolerance) -------------------------------
+
+    def snapshot(self) -> EngineSnapshot:
+        """Capture the host-side truth needed to rebuild device state.
+
+        Cheap (a deep copy of request metadata + scalar counters; nothing
+        device-resident), so a supervisor can cut one before EVERY tick —
+        that per-tick cadence is what makes failover replay exact: the
+        interrupted tick is redone wholesale, automatically re-enqueuing any
+        speculative work the failure interrupted. Raises for enc-dec /
+        frontend archs: replay re-feeds committed tokens, and their prompts
+        carry non-token operands the engine does not retain.
+        """
+        if self.cfg.is_encdec or self.cfg.frontend:
+            raise ValueError(
+                "snapshot/restore needs a token-only decoder (enc-dec / "
+                "frontend prompts carry non-token operands replay cannot "
+                "re-feed)")
+        groups = {}
+        for d, g in self.groups.items():
+            groups[d] = GroupSnapshot(
+                depth=d,
+                slots=copy.deepcopy(g.slots),
+                widths=list(g.widths),
+                spec_k=g.spec_k,
+                spec_tree=g.spec_tree,
+                spec_off_until=g.spec_off_until,
+                accept_window=list(g.accept_window),
+                accept_window_maxlen=g.accept_window.maxlen,
+            )
+        counters = dict(
+            prefills=self.prefills, prefill_s=self.prefill_s,
+            prefill_prompt_tokens=self.prefill_prompt_tokens,
+            decode_launches=self.decode_launches,
+            per_mode_launch_equiv=self.per_mode_launch_equiv,
+            ticks_with_work=self.ticks_with_work,
+            spec_draft_launches=self.spec_draft_launches,
+            spec_verify_launches=self.spec_verify_launches,
+            spec_tree_launches=self.spec_tree_launches,
+            spec_generated_tokens=self.spec_generated_tokens,
+            backpressure_events=self.backpressure_events,
+        )
+        logs = dict(
+            admission_switch_log=list(self.admission_switch_log),
+            admission_decision_log=copy.deepcopy(
+                list(self.admission_decision_log)),
+            spec_fallback_log=list(self.spec_fallback_log),
+            backpressure_log=copy.deepcopy(list(self.backpressure_log)),
+        )
+        return EngineSnapshot(
+            step_count=self.step_count,
+            admission_mode=self.admission_mode.name,
+            queues={c: copy.deepcopy(list(q))
+                    for c, q in self._queues.items()},
+            completed=copy.deepcopy(self.completed),
+            expired=copy.deepcopy(self.expired),
+            groups=groups,
+            counters=counters,
+            logs=logs,
+            telemetry=self.ctrl.telemetry_state(),
+            spec_telemetry=copy.deepcopy(self.spec_telemetry),
+            paging_stats=self.page_pool_stats(),
+        )
+
+    def restore(self, snap: EngineSnapshot) -> None:
+        """Rebuild this engine's full serving state from ``snap``.
+
+        The engine must be geometry-compatible with the snapshot's source:
+        same mode table, batch size, capacity, paged layout, speculative
+        plan and sample seed — i.e. another instance from the same factory
+        (per-slot PRNG keys regenerate deterministically from the seed, and
+        restoring ``step_count`` keeps every slot's ``fold_step`` sample
+        stream intact). All existing state is discarded, so a warm standby
+        can absorb failovers repeatedly. Device caches are re-materialized
+        by ``_replay_group``; counters, logs and telemetry are applied LAST
+        so replay launches never leak into the restored accounting — the
+        redone tick re-earns its increments and the post-recovery totals
+        match a fault-free run.
+        """
+        if snap.admission_mode not in self.ctrl.mode_by_name:
+            raise ValueError(f"snapshot admission mode "
+                             f"{snap.admission_mode!r} not in this engine's "
+                             f"mode table")
+        if set(snap.groups) != set(self.groups):
+            raise ValueError(f"snapshot depth groups "
+                             f"{sorted(snap.groups)} do not match this "
+                             f"engine's {sorted(self.groups)}")
+        for gs in snap.groups.values():
+            if len(gs.slots) != self.batch_size:
+                raise ValueError(f"snapshot batch size {len(gs.slots)} != "
+                                 f"engine batch size {self.batch_size}")
+        self.step_count = snap.step_count
+        mode = self.ctrl.mode_by_name[snap.admission_mode]
+        self.admission_mode = mode
+        self.ctrl.force_mode(mode)
+        self._queues = {c: deque(copy.deepcopy(snap.queues.get(c, [])))
+                        for c in SLO_CLASSES}
+        self.completed = copy.deepcopy(snap.completed)
+        self.expired = copy.deepcopy(snap.expired)
+        for d, gs in snap.groups.items():
+            g = self.groups[d]
+            g.slots = copy.deepcopy(gs.slots)
+            g.widths = list(gs.widths)
+            g.spec_k = gs.spec_k
+            g.spec_tree = gs.spec_tree
+            g.spec_off_until = gs.spec_off_until
+            g.accept_window = deque(gs.accept_window,
+                                    maxlen=gs.accept_window_maxlen)
+            g.cache = self.executor.init_cache()
+            if self.paged is not None:
+                g.paging = _GroupPaging(self.paged, self.cfg,
+                                        self.batch_size,
+                                        self.cache_capacity)
+                for i, r in enumerate(g.slots):
+                    if r is not None:
+                        booked = self._reserve_pages(g, i, r)
+                        assert booked, (
+                            f"restore: slot {i} budget cannot be re-booked "
+                            f"on a fresh pool")
+            self._replay_group(g)
+        c = snap.counters
+        self.prefills = c["prefills"]
+        self.prefill_s = c["prefill_s"]
+        self.prefill_prompt_tokens = c["prefill_prompt_tokens"]
+        self.decode_launches = c["decode_launches"]
+        self.per_mode_launch_equiv = c["per_mode_launch_equiv"]
+        self.ticks_with_work = c["ticks_with_work"]
+        self.spec_draft_launches = c["spec_draft_launches"]
+        self.spec_verify_launches = c["spec_verify_launches"]
+        self.spec_tree_launches = c["spec_tree_launches"]
+        self.spec_generated_tokens = c["spec_generated_tokens"]
+        self.backpressure_events = c["backpressure_events"]
+        self.admission_switch_log = deque(snap.logs["admission_switch_log"],
+                                          maxlen=4096)
+        self.admission_decision_log = deque(
+            copy.deepcopy(snap.logs["admission_decision_log"]), maxlen=4096)
+        self.spec_fallback_log = deque(snap.logs["spec_fallback_log"],
+                                       maxlen=4096)
+        self.backpressure_log = deque(
+            copy.deepcopy(snap.logs["backpressure_log"]), maxlen=4096)
+        self.ctrl.load_telemetry_state(snap.telemetry)
+        self.spec_telemetry = copy.deepcopy(snap.spec_telemetry)
+
+    def _replay_prefill(self, g: _DepthGroup, slot: int,
+                        req: Request) -> None:
+        # same executable + page mapping the original admission used, so the
+        # prompt K/V (and any radix block sharing) comes back identical; the
+        # replay is not a new admission — no counters, no sampling (the
+        # first generated token is already in ``req.generated``)
+        if g.paging is not None:
+            self._prefill_launch_paged(g, slot, req.prompt)
+        else:
+            self._prefill_launch(g, slot, req.prompt)
+
+    def _replay_launch(self, g: _DepthGroup, toks: np.ndarray,
+                       joined: List[int]) -> None:
+        """One lockstep decode launch of the replay (same executables as
+        normal ticks: the per-depth dense step or the bucketed paged step).
+        Advances every slot's device position by one; paged host mirrors
+        advance with it. Only JOINED slots get page mappings grown — a
+        not-yet-joined slot's garbage writes land on its scratch page,
+        exactly like a free slot's do on normal ticks."""
+        active = self._active_for(g.widths)
+        pg = g.paging
+        if pg is not None:
+            needed = 1
+            for i in joined:
+                pos = int(pg.host_pos[i])
+                pg.ensure_slot(i, pos)
+                for src, dst in pg.cow_pairs(i, pos, pos):
+                    g.cache = self._copy_page(
+                        g.cache, self.executor.put(np.int32(src)),
+                        self.executor.put(np.int32(dst)))
+                needed = max(needed, min(pos // pg.ps + 1, pg.cap_pages))
+            bucket = self.paged.bucket_for(self.cfg, self.cache_capacity,
+                                           needed)
+            fn = self.ctrl.aux_step(paged_decode_compile_key(g.depth,
+                                                             bucket))
+            _, g.cache = fn(self.params, g.cache, self.executor.put(toks),
+                            active, self.executor.put(
+                                pg.table[:, :bucket].copy()))
+            pg.host_pos += 1  # mirror the device counter (ALL slots advance)
+        else:
+            fn = self.ctrl.step_for(self._any_mode_at(g.depth))
+            _, g.cache = fn(self.params, g.cache, self.executor.put(toks),
+                            active)
+        self.ctrl.stats["dispatches"] += 1
+
+    def _replay_group(self, g: _DepthGroup) -> None:
+        """Re-materialize one depth group's device cache from host truth.
+
+        A live slot's committed stream is ``(prompt + generated)[:fed]``
+        (cache position always equals ``fed``). Prefill-admitted slots
+        replay their prompt through the SAME compiled prefill+adopt path
+        admission used; everything token-fed — short prompts, and every
+        decode- or verify-committed generation — is re-fed through the
+        group's own decode executable at the slot's admitted width. That
+        split is load-bearing: prefill is width-blind (full-width K/V), so
+        a narrow slot's token-fed history MUST come back through the
+        width-gated decode path or its cache would hold the wrong values.
+
+        Feeds are staggered to END together: slot ``i`` joins the lockstep
+        launches at tick ``T - tail_i`` (reset to position 0, or prefill+
+        adopt to position ``plen``) and feeds its remaining committed
+        tokens in order, so every launch advances all joined slots' device
+        positions together and each slot lands exactly at ``pos == fed``.
+        Not-yet-joined and free slots take garbage writes meanwhile (dense:
+        position-masked after their reset/adopt; paged: routed to scratch
+        pages) — identical to how normal admission recycles slots.
+        """
+        live = [(i, r) for i, r in enumerate(g.slots) if r is not None]
+        pg = g.paging
+        if not live:
+            return
+        tails: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+        for i, r in live:
+            committed = (tuple(r.prompt) + tuple(r.generated))[:r.fed]
+            if r.prefilled:
+                tails[i] = (len(r.prompt), committed[len(r.prompt):])
+            else:
+                tails[i] = (0, committed)
+        T = max(len(t) for _, t in tails.values())
+        joined: List[int] = []
+        for t in range(T):
+            mask = np.zeros(self.batch_size, bool)
+            for i, (start, tail) in tails.items():
+                if T - len(tail) != t:
+                    continue
+                r = g.slots[i]
+                if r.prefilled:
+                    self._replay_prefill(g, i, r)  # pos := plen
+                else:
+                    mask[i] = True  # pos := 0
+                    if pg is not None:
+                        pg.host_pos[i] = 0
+                joined.append(i)
+            if mask.any():
+                g.cache = self._reset(g.cache, self.executor.put(mask))
+            toks = np.zeros((self.batch_size, 1), np.int32)
+            for i in joined:
+                _, tail = tails[i]
+                toks[i, 0] = tail[t - (T - len(tail))]
+            self._replay_launch(g, toks, joined)
+        # slots with nothing to feed: fed == 0 (plain reset) or a prefilled
+        # prompt with no generation fed past it (adopt after the launches so
+        # the lockstep advances can't disturb its position)
+        end_mask = np.zeros(self.batch_size, bool)
+        for i, (start, tail) in tails.items():
+            if tail:
+                continue
+            r = g.slots[i]
+            if r.prefilled:
+                self._replay_prefill(g, i, r)
+            else:
+                end_mask[i] = True
+                if pg is not None:
+                    pg.host_pos[i] = 0
+        # free slots took garbage position advances during the lockstep
+        # launches; rewind them (admission would reset them anyway — this
+        # keeps device and host mirrors exact for the invariant checks)
+        for i in range(self.batch_size):
+            if g.slots[i] is None:
+                end_mask[i] = True
+                if pg is not None:
+                    pg.host_pos[i] = 0
+        if end_mask.any():
+            g.cache = self._reset(g.cache, self.executor.put(end_mask))
+        jax.block_until_ready(g.cache)
+        if pg is not None:
+            for i, r in live:
+                assert int(pg.host_pos[i]) == r.fed, (
+                    f"replay drift: slot {i} at pos {int(pg.host_pos[i])} "
+                    f"!= fed {r.fed}")
 
     # -- driving loops ------------------------------------------------------
 
@@ -1538,6 +2012,8 @@ class ServingEngine:
         spec_v0 = self.spec_verify_launches
         spec_t0 = self.spec_tree_launches
         spec_tok0 = self.spec_generated_tokens
+        expired0 = len(self.expired)
+        bp0 = self.backpressure_events
         while (pending or self.queue or self.n_active) \
                 and self.step_count - steps0 < max_steps:
             while pending and pending[0].arrival_s <= clock:
@@ -1592,6 +2068,9 @@ class ServingEngine:
                  / max(self.spec_verify_launches - spec_v0, 1)
                  if self.spec_verify_launches > spec_v0 else 0.0),
             "spec_fallbacks": len(self.spec_fallback_log),
+            # robustness telemetry: deadline expiries + page-pool deferrals
+            "expired": len(self.expired) - expired0,
+            "backpressure_events": self.backpressure_events - bp0,
         }
 
     def _retune_spec(self, policy: "SLOPolicy",

@@ -1,0 +1,213 @@
+"""Chaos-trace harness: deterministic FailurePlan-driven executor failures
+injected at every launch boundary (plain decode, linear-spec verify, tree
+verify, paged decode, prefill adoption) under a seeded Poisson trace. After
+every failover the supervisor rebuilds a standby engine from the pre-tick
+snapshot and redoes the tick, so the properties asserted here are strict:
+committed token streams BIT-IDENTICAL to the fault-free run, page refcount
+invariants after each recovery, zero requests dropped or double-completed,
+and launch/prefill/spec counters landing exactly on the fault-free totals.
+Dense and paged caches, locally and on a 2x4 CPU mesh subprocess."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.model import init_params
+from repro.models.paged import PagedLayout
+from repro.runtime.fault_tolerance import ExecutorSupervisor, FailurePlan
+from repro.runtime.serving import Request, ServingEngine, poisson_trace
+from repro.runtime.speculative import SpecConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CFG = smoke_config("tinyllama-1.1b")
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _make_factory(paged=None, speculative=None):
+    def factory():
+        eng = ServingEngine(PARAMS, CFG, batch_size=3, cache_capacity=32,
+                            prefill_threshold=4, speculative=speculative,
+                            paged=paged)
+        eng.warmup()
+        return eng
+    return factory
+
+
+def _trace(n=10, seed=5):
+    # rate 1e6: every arrival lands effectively at t=0, so the admission /
+    # tick sequence is independent of measured step latencies — the chaos
+    # run and the fault-free run walk the same schedule and their outputs
+    # are comparable token-for-token
+    return poisson_trace(n, rate_per_s=1e6, seed=seed, vocab=CFG.vocab_size,
+                         prompt_len=(1, 9), interactive_frac=0.3)
+
+
+def _fault_free(factory, trace):
+    """Reference run through a COUNTING supervisor: yields the expected
+    streams/counters plus per-site launch totals for placing failures."""
+    counter = FailurePlan()
+    sup = ExecutorSupervisor(factory, failure_plan=counter)
+    sup.run_trace(trace)
+    assert sup.failovers == 0
+    eng = sup.engine
+    out = {r.rid: tuple(r.generated) for r in eng.completed}
+    counters = (eng.step_count, eng.decode_launches, eng.prefills,
+                eng.spec_verify_launches, eng.spec_generated_tokens)
+    return out, counters, dict(counter.site_counts)
+
+
+def _plan_from_totals(totals, sites):
+    """>= 3 failures at distinct launch boundaries, placed at occurrences
+    the fault-free run proves reachable (redone ticks only inflate counts,
+    so any fault-free occurrence is guaranteed to fire under chaos)."""
+    at = []
+    for site in sites:
+        n = totals.get(site, 0)
+        assert n >= 1, f"trace never launched at {site!r}: {totals}"
+        at.append((site, min(2, n)))
+    assert len(at) >= 3
+    return FailurePlan(at_sites=tuple(at))
+
+
+def _run_chaos(factory, trace, plan):
+    """Ping-pong two pre-warmed standbys through the chaos run (restore
+    fully resets an engine, so two of them can absorb any failover count);
+    paged invariants re-check after every recovery inside the supervisor."""
+    engines = [factory(), factory()]
+    idx = [0]
+
+    def pingpong():
+        idx[0] ^= 1
+        return engines[idx[0]]
+
+    sup = ExecutorSupervisor(pingpong, failure_plan=plan,
+                             max_failovers=len(plan.at_sites))
+    summary = sup.run_trace(trace)
+    return sup, summary
+
+
+def _assert_exact(sup, summary, plan, ref_out, ref_counters, trace):
+    eng = sup.engine
+    assert summary["failovers"] == len(plan.at_sites)
+    assert plan.fired_sites == set(plan.at_sites), \
+        f"planned failures did not all fire: {plan.fired_sites}"
+    out = {r.rid: tuple(r.generated) for r in eng.completed}
+    assert out == ref_out, "committed streams diverged from fault-free run"
+    # no request dropped or double-completed
+    rids = [r.rid for r in eng.completed]
+    assert sorted(rids) == sorted({r.rid for r in trace})
+    assert not eng.expired
+    # counter exactness: the redone ticks re-earned exactly the increments
+    # the failed ticks lost
+    got = (eng.step_count, eng.decode_launches, eng.prefills,
+           eng.spec_verify_launches, eng.spec_generated_tokens)
+    assert got == ref_counters, (got, ref_counters)
+    eng.check_paged_invariants()
+
+
+def test_chaos_dense_linear_spec():
+    """Dense cache, linear speculation: failures at the plain-decode,
+    linear-verify and prefill-adoption boundaries."""
+    factory = _make_factory(speculative=SpecConfig(ks=(2,)))
+    trace = _trace()
+    ref_out, ref_counters, totals = _fault_free(factory, _trace())
+    plan = _plan_from_totals(totals, ["decode", "verify", "prefill"])
+    sup, summary = _run_chaos(factory, trace, plan)
+    _assert_exact(sup, summary, plan, ref_out, ref_counters, trace)
+    assert all(rs > 0 for rs in summary["recovery_s"])
+
+
+def test_chaos_paged_tree_spec():
+    """Paged cache, token-tree speculation: failures at the paged-decode,
+    tree-verify and (paged) prefill-adoption boundaries; page refcounts
+    audited after every recovery and at the end."""
+    layout = PagedLayout(page_size=4)
+    factory = _make_factory(paged=layout,
+                            speculative=SpecConfig(ks=(), trees=((2, 1),)))
+    trace = _trace()
+    ref_out, ref_counters, totals = _fault_free(factory, _trace())
+    plan = _plan_from_totals(totals,
+                             ["paged_decode", "tree_verify", "prefill"])
+    sup, summary = _run_chaos(factory, trace, plan)
+    _assert_exact(sup, summary, plan, ref_out, ref_counters, trace)
+    # slots all released: only scratch + radix-retained pages stay in use
+    for g in sup.engine.groups.values():
+        pg = g.paging
+        held = pg.radix.held_pages() if pg.radix else []
+        assert pg.alloc.n_in_use == len(pg.scratch) + len(held)
+
+
+_MESH_CHAOS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+from repro.configs import smoke_config
+from repro.launch.mesh import make_serve_mesh
+from repro.models.model import init_params
+from repro.models.paged import PagedLayout
+from repro.runtime.fault_tolerance import ExecutorSupervisor, FailurePlan
+from repro.runtime.serving import MeshExecutor, ServingEngine
+from repro.runtime.speculative import SpecConfig
+
+from tests.test_chaos import _trace
+
+cfg = smoke_config("tinyllama-1.1b")
+params = init_params(jax.random.PRNGKey(0), cfg)
+mesh = make_serve_mesh(2, 4)
+
+def factory():
+    eng = ServingEngine(params, cfg, batch_size=3, cache_capacity=32,
+                        prefill_threshold=4,
+                        speculative=SpecConfig(ks=(2,)),
+                        paged=PagedLayout(page_size=4),
+                        executor=MeshExecutor(mesh))
+    eng.warmup()
+    return eng
+
+# fault-free reference on engine A, counting launch sites as it goes
+counter = FailurePlan()
+sup0 = ExecutorSupervisor(factory, failure_plan=counter)
+sup0.run_trace(_trace(6))
+eng_a = sup0.engine
+ref = {r.rid: tuple(r.generated) for r in eng_a.completed}
+totals = dict(counter.site_counts)
+sites = ["verify", "paged_decode", "prefill"]
+assert all(totals.get(s, 0) >= 1 for s in sites), totals
+plan = FailurePlan(at_sites=tuple((s, 1) for s in sites))
+
+# chaos run ping-pongs engine A (restore resets it) with a fresh engine B
+engines = [eng_a, factory()]
+idx = [0]
+def pingpong():
+    idx[0] ^= 1
+    return engines[idx[0]]
+
+sup = ExecutorSupervisor(pingpong, failure_plan=plan, max_failovers=3)
+summary = sup.run_trace(_trace(6))
+assert summary["failovers"] == 3, summary
+assert plan.fired_sites == set(plan.at_sites), plan.fired_sites
+out = {r.rid: tuple(r.generated) for r in sup.engine.completed}
+assert out == ref, (out, ref)
+sup.engine.check_paged_invariants()
+print("MESH_CHAOS_OK")
+"""
+
+
+def test_chaos_mesh_subprocess():
+    """dp2 x tp4 CPU mesh: three injected failures (linear verify, paged
+    decode, prefill adoption) on a sharded paged engine recover to streams
+    bit-identical to the mesh fault-free run."""
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [os.path.join(REPO, "src"), REPO,
+         os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep))
+    res = subprocess.run([sys.executable, "-c", _MESH_CHAOS_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=REPO, timeout=900)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "MESH_CHAOS_OK" in res.stdout

@@ -1,0 +1,304 @@
+"""Fault-tolerance primitives and the serving snapshot/restore contract:
+FailurePlan step/site injection semantics, StragglerMonitor warmup window,
+TrainRunner bit-identical resume, ServingEngine.snapshot()/restore() exact
+replay (dense + paged, prefill + token-feed + narrow-width slots in flight),
+and ExecutorSupervisor failover mechanics (timeout detection, failover caps,
+policy rebinding). The end-to-end chaos traces live in test_chaos.py."""
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models.model import init_params
+from repro.models.paged import PagedLayout
+from repro.runtime.fault_tolerance import (
+    ExecutorSupervisor,
+    FailurePlan,
+    SimulatedFailure,
+    StragglerMonitor,
+    TrainRunner,
+)
+from repro.runtime.serving import Request, ServingEngine
+from repro.runtime.speculative import SpecConfig
+
+
+# ---------------------------------------------------------------------------
+# seed primitives
+# ---------------------------------------------------------------------------
+
+
+def test_failure_plan_fires_once_per_step():
+    plan = FailurePlan(at_steps=(3, 5))
+    for step in range(8):
+        if step in (3, 5):
+            with pytest.raises(SimulatedFailure):
+                plan.maybe_fail(step)
+        plan.maybe_fail(step)  # second visit to the same step never re-fires
+    plan.maybe_fail(3)
+    plan.maybe_fail(5)
+
+
+def test_failure_plan_site_occurrences_are_global():
+    """(site, occurrence) pairs fire once, occurrences count 1-based per
+    site, and counts keep advancing across failovers (one global schedule,
+    not per-engine state)."""
+    plan = FailurePlan(at_sites=(("verify", 2), ("decode", 1)))
+    with pytest.raises(SimulatedFailure, match="decode launch #1"):
+        plan.maybe_fail_site("decode")
+    plan.maybe_fail_site("decode")  # occurrence 2: not planned
+    plan.maybe_fail_site("verify")  # occurrence 1: not planned
+    with pytest.raises(SimulatedFailure, match="verify launch #2"):
+        plan.maybe_fail_site("verify")
+    plan.maybe_fail_site("verify")  # occurrence 3 and beyond never re-fire
+    assert plan.site_counts == {"decode": 2, "verify": 3}
+    assert plan.fired_sites == {("decode", 1), ("verify", 2)}
+
+
+def test_straggler_monitor_flags_only_past_warmup():
+    """Under 5 samples nothing flags, however extreme the outlier; past the
+    warmup window the threshold applies."""
+    mon = StragglerMonitor(threshold=2.0)
+    assert not mon.observe(0, 100.0)  # huge, but sample #1
+    for i in range(1, 4):
+        assert not mon.observe(i, 0.1)
+    # 5th sample: median of [100, .1, .1, .1, .1] is 0.1 -> 0.5 flags
+    assert mon.observe(4, 0.5)
+    assert mon.flagged == [4]
+    assert not mon.observe(5, 0.1)
+
+
+def test_train_runner_resumes_bit_identical(tmp_path):
+    """run_with_restarts after injected failures lands on exactly the state
+    of an uninterrupted run: the checkpoint restores and the step-keyed data
+    stream replays in the same order (no step skipped or double-applied)."""
+    cfg = smoke_config("tinyllama-1.1b")
+    dc = DataConfig(seed=7, global_batch=2, seq_len=8)
+
+    def step_fn(state, batch):
+        # deterministic, order-sensitive: folds the step's batch into a
+        # running modular digest (int32 — exactly checkpoint-representable),
+        # so any replay drift changes the result
+        s = int(np.asarray(batch["tokens"], np.int64).sum())
+        acc = (int(state["acc"]) * 31 + s) % 2147483647
+        new = {"acc": np.int32(acc), "n": np.int32(int(state["n"]) + 1)}
+        return new, {"sum": float(s)}
+
+    def init_state():
+        return {"acc": np.int32(0), "n": np.int32(0)}
+
+    r1 = TrainRunner(cfg, step_fn, init_state, dc,
+                     str(tmp_path / "ref"), ckpt_every=2)
+    s1 = r1.run(9)
+    r2 = TrainRunner(cfg, step_fn, init_state, dc,
+                     str(tmp_path / "chaos"), ckpt_every=2,
+                     failure_plan=FailurePlan(at_steps=(3, 7)))
+    s2 = r2.run_with_restarts(9)
+    assert s1["n"] == s2["n"] == 9
+    np.testing.assert_array_equal(np.asarray(s1["acc"]),
+                                  np.asarray(s2["acc"]))
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore
+# ---------------------------------------------------------------------------
+
+CFG = smoke_config("tinyllama-1.1b")
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _factory(paged=None, speculative=None, batch=3):
+    eng = ServingEngine(PARAMS, CFG, batch_size=batch, cache_capacity=32,
+                        prefill_threshold=4, speculative=speculative,
+                        paged=paged)
+    eng.warmup()
+    return eng
+
+
+def _mixed_trace(n=7):
+    """Short + long prompts (token-feed AND prefill admission), mixed SLO
+    classes — the population snapshot/restore must handle."""
+    return [Request(rid=rid,
+                    prompt=tuple(1 + (rid * 7 + j) % (CFG.vocab_size - 1)
+                                 for j in range(1 + rid % 7)),
+                    max_new_tokens=4 + rid % 3,
+                    slo_class="interactive" if rid % 2 else "batch")
+            for rid in range(n)]
+
+
+def _drain(eng):
+    while eng.queue or eng.n_active:
+        eng.step()
+        if eng.paged is not None:
+            eng.check_paged_invariants()
+    return {r.rid: tuple(r.generated) for r in eng.completed}
+
+
+@pytest.mark.parametrize("paged", [None, PagedLayout(page_size=4)],
+                         ids=["dense", "paged"])
+def test_snapshot_restore_mid_flight_is_exact(paged):
+    """Snapshot an engine with slots mid-generation (prefilled and token-fed,
+    a NARROW width among them), restore onto a fresh engine, finish there:
+    every committed stream is bit-identical to the uninterrupted run, and
+    counters/telemetry carry over exactly."""
+    ref = _factory(paged)
+    narrow = ref.ctrl.modes[0]
+    wide = ref.ctrl.modes[-1]
+
+    def drive_head(eng):
+        trace = _mixed_trace()
+        eng.set_admission_mode(eng.ctrl.mode_by_name[narrow.name])
+        eng.submit(trace[0])
+        eng.step()  # narrow slot in flight: replay must honor its width
+        eng.set_admission_mode(eng.ctrl.mode_by_name[wide.name])
+        for r in trace[1:]:
+            eng.submit(r)
+        for _ in range(3):
+            eng.step()
+
+    drive_head(ref)
+    ref_out = _drain(ref)
+
+    a = _factory(paged)
+    drive_head(a)
+    snap = a.snapshot()
+    b = _factory(paged)
+    b.restore(snap)
+    if paged is not None:
+        b.check_paged_invariants()
+    # restored host truth matches the source engine exactly
+    assert b.step_count == a.step_count
+    assert b.decode_launches == a.decode_launches
+    assert b.prefills == a.prefills
+    assert b.admission_mode.name == a.admission_mode.name
+    for d, g in b.groups.items():
+        ga = a.groups[d]
+        assert [r.rid if r else None for r in g.slots] == \
+            [r.rid if r else None for r in ga.slots]
+        assert g.widths == ga.widths
+        if g.paging is not None:
+            # free slots' position mirrors may drift (they're reset at the
+            # next admission either way); live slots must land exactly
+            for i, r in enumerate(g.slots):
+                if r is not None:
+                    assert g.paging.host_pos[i] == ga.paging.host_pos[i]
+                    assert g.paging.host_pos[i] == r.fed
+            assert g.paging.budget == ga.paging.budget
+    out = _drain(b)
+    assert out == ref_out
+    assert b.decode_launches == ref.decode_launches
+    assert b.prefills == ref.prefills
+
+
+def test_snapshot_restore_with_speculation():
+    """Speculative engines restore too: the snapshot carries the spec knobs
+    and acceptance window, and the finished streams stay bit-identical."""
+    spec = SpecConfig(ks=(2,))
+    ref = _factory(PagedLayout(page_size=4), speculative=spec)
+    for r in _mixed_trace():
+        ref.submit(r)
+    ref_out = _drain(ref)
+    assert ref.spec_verify_launches > 0
+
+    a = _factory(PagedLayout(page_size=4), speculative=spec)
+    for r in _mixed_trace():
+        a.submit(r)
+    for _ in range(4):
+        a.step()
+    b = _factory(PagedLayout(page_size=4), speculative=spec)
+    b.restore(a.snapshot())
+    b.check_paged_invariants()
+    assert b.groups[max(b.groups)].spec_k == a.groups[max(a.groups)].spec_k
+    out = _drain(b)
+    assert out == ref_out
+    assert b.spec_verify_launches == ref.spec_verify_launches
+    assert b.spec_generated_tokens == ref.spec_generated_tokens
+
+
+def test_restore_can_repeat_and_rewind():
+    """One snapshot restores the SAME engine repeatedly (the deep copies are
+    per-restore), rewinding it to the capture point each time."""
+    eng = _factory()
+    for r in _mixed_trace(4):
+        eng.submit(r)
+    for _ in range(2):
+        eng.step()
+    snap = eng.snapshot()
+    first = _drain(eng)
+    eng.restore(snap)
+    assert _drain(eng) == first
+    eng.restore(snap)
+    assert _drain(eng) == first
+
+
+def test_restore_validates_geometry():
+    eng = _factory(batch=3)
+    other = _factory(batch=2)
+    with pytest.raises(ValueError, match="batch size"):
+        other.restore(eng.snapshot())
+
+
+# ---------------------------------------------------------------------------
+# supervisor mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_timeout_failover_discards_slow_tick():
+    """A tick exceeding tick_timeout_s triggers failover even though it
+    completed: its results are discarded and the redo produces identical
+    streams (the hung-executor detection path). Short prompts only — every
+    executable these ticks touch is compiled in warmup, so the injected
+    sleep is the only way a tick crosses the (generous) timeout."""
+    def short_trace():
+        return [Request(rid=rid, prompt=(1 + rid, 2 + rid),
+                        max_new_tokens=4) for rid in range(4)]
+
+    ref = _factory()
+    for r in short_trace():
+        ref.submit(r)
+    ref_out = _drain(ref)
+
+    slept = []
+
+    def slow_once(site):
+        if not slept:
+            slept.append(site)
+            time.sleep(2.0)
+
+    sup = ExecutorSupervisor(_factory, tick_timeout_s=1.0,
+                             launch_hook=slow_once)
+    for r in short_trace():
+        sup.engine.submit(r)
+    while sup.engine.queue or sup.engine.n_active:
+        sup.tick()
+    assert sup.failovers == 1
+    assert "exceeded timeout" in sup.failover_log[0]["cause"]
+    assert {r.rid: tuple(r.generated)
+            for r in sup.engine.completed} == ref_out
+
+
+def test_supervisor_enforces_max_failovers():
+    plan = FailurePlan(at_sites=(("decode", 1), ("decode", 2)))
+    sup = ExecutorSupervisor(_factory, failure_plan=plan, max_failovers=1)
+    sup.engine.submit(Request(rid=0, prompt=(3,), max_new_tokens=6))
+    with pytest.raises(RuntimeError, match="exceeded 1 failovers"):
+        while sup.engine.queue or sup.engine.n_active:
+            sup.tick()
+
+
+def test_supervisor_records_recovery_latency():
+    """The failover log carries detection/rebuild/replay timings and the
+    detection -> first-post-recovery-token latency the benchmark reports."""
+    plan = FailurePlan(at_sites=(("decode", 2),))
+    sup = ExecutorSupervisor(_factory, failure_plan=plan)
+    for r in _mixed_trace(4):
+        sup.engine.submit(r)
+    while sup.engine.queue or sup.engine.n_active:
+        sup.tick()
+    assert sup.failovers == 1
+    e = sup.failover_log[0]
+    assert e["rebuild_s"] > 0 and e["replay_s"] > 0
+    assert e["first_token_s"] is not None and e["first_token_s"] > 0

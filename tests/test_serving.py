@@ -382,9 +382,14 @@ def _check_engine_invariants(eng, submitted):
     done_rids = [r.rid for r in eng.completed]
     assert len(done_rids) == len(set(done_rids)), "request completed twice"
     assert not (set(live_rids) & set(done_rids)), "completed request in slot"
+    expired_rids = [r.rid for r in eng.expired]
+    assert len(expired_rids) == len(set(expired_rids)), "expired twice"
+    assert not (set(expired_rids) & set(done_rids + live_rids)), \
+        "expired request still live or completed"
     queued_rids = [r.rid for r in eng.queue]
-    # conservation: every submitted request is queued, in a slot, or done
-    assert sorted(queued_rids + live_rids + done_rids) == \
+    # conservation: every submitted request is queued, in a slot, done, or
+    # retired past its deadline — never silently dropped
+    assert sorted(queued_rids + live_rids + done_rids + expired_rids) == \
         sorted(submitted.keys()), "request leaked"
     for r in live:
         assert len(r.generated) < submitted[r.rid], \
@@ -632,3 +637,86 @@ else:
     @pytest.mark.parametrize("seed", range(20))
     def test_radix_allocator_properties(seed):
         _radix_trial(seed)
+
+
+# ---------------------------------------------------------------------------
+# request deadlines (TTL) + pool backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_queued_requests_expire_past_deadline():
+    """Queued requests past their TTL retire with terminal 'expired' status
+    (both SLO classes); in-flight requests are never expired; everything
+    else completes and conservation holds."""
+    cfg, eng = _engine(batch=1)
+    eng.submit(Request(rid=0, prompt=(3, 4), max_new_tokens=6,
+                       deadline_s=10.0,  # admitted immediately: never expires
+                       slo_class="interactive"))
+    eng.submit(Request(rid=1, prompt=(5,), max_new_tokens=2,
+                       deadline_s=0.5, slo_class="interactive"))
+    eng.submit(Request(rid=2, prompt=(6,), max_new_tokens=2,
+                       deadline_s=0.5, slo_class="batch"))
+    eng.submit(Request(rid=3, prompt=(7,), max_new_tokens=2))  # no deadline
+    eng.step(now_s=0.0)  # rid 0 takes the only slot, others queue
+    assert eng.n_active == 1 and len(eng.queue) == 3
+    eng.step(now_s=1.0)  # sweep: rids 1 and 2 are past deadline
+    assert sorted(r.rid for r in eng.expired) == [1, 2]
+    assert all(r.status == "expired" and r.finished_s == 1.0
+               for r in eng.expired)
+    while eng.queue or eng.n_active:
+        eng.step(now_s=2.0)
+    assert sorted(r.rid for r in eng.completed) == [0, 3]
+    assert all(r.status == "done" for r in eng.completed)
+    assert all(len(r.generated) == r.max_new_tokens for r in eng.completed)
+
+
+def test_expired_requests_surface_in_run_summary():
+    """run() reports the expiry count as a delta; expired requests don't
+    stall the drain loop."""
+    cfg, eng = _engine(batch=1)
+    trace = [Request(rid=0, prompt=(3, 4), max_new_tokens=8, arrival_s=0.0),
+             Request(rid=1, prompt=(5,), max_new_tokens=2, arrival_s=0.0,
+                     deadline_s=1e-9)]
+    summary = eng.run(trace)
+    assert summary["expired"] == 1
+    assert summary["completed"] == 1
+    assert [r.rid for r in eng.expired] == [1]
+
+
+def test_pool_backpressure_defers_admission():
+    """A paged admission the pool cannot cover is DEFERRED with a logged
+    backpressure event (queue order kept), then admitted once completions
+    release budget — the tick loop never sees the exhaustion hard error."""
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    # batch 2 -> 2 scratch pages; 4-page pool leaves 2 reservable: one
+    # 2-page request fits, a second must wait for the first to finish
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32,
+                        paged=PagedLayout(page_size=4, n_pages=4))
+    eng.warmup()
+    eng.submit(Request(rid=0, prompt=(3, 4), max_new_tokens=6))
+    eng.submit(Request(rid=1, prompt=(5, 6), max_new_tokens=6))
+    eng.step()
+    assert eng.n_active == 1, "second admission must defer, not crash"
+    assert eng.backpressure_events >= 1
+    ev = eng.backpressure_log[0]
+    assert ev["rid"] == 1 and ev["need"] > ev["reservable"] - ev["budgeted"]
+    assert [r.rid for r in eng.queue] == [1], "deferred request keeps place"
+    while eng.queue or eng.n_active:
+        eng.step()
+        eng.check_paged_invariants()
+    assert sorted(r.rid for r in eng.completed) == [0, 1]
+    assert all(len(r.generated) == 6 for r in eng.completed)
+
+
+def test_impossible_request_rejected_at_submit():
+    """A request whose worst case can NEVER fit the pool fails loudly at
+    submit (deferring it would starve it forever)."""
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32,
+                        paged=PagedLayout(page_size=4, n_pages=4))
+    eng.warmup()
+    with pytest.raises(ValueError, match="never be admitted"):
+        eng.submit(Request(rid=0, prompt=tuple(range(1, 12)),
+                           max_new_tokens=8))

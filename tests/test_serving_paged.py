@@ -190,20 +190,29 @@ def test_paged_layout_validation():
 
 
 def test_pool_exhaustion_is_a_hard_error():
-    """An undersized explicit pool fails loudly at admission (after trying
-    radix eviction), not by silently corrupting another slot's pages."""
+    """The exhaustion failure ladder: a request that can NEVER fit the pool
+    is rejected loudly at submit (deferral would starve it forever); one
+    that transiently doesn't fit is deferred by admission backpressure (see
+    test_serving.py); and mid-flight underflow stays a hard error — it
+    means the worst-case budget accounting is wrong, and failing loudly
+    beats silently corrupting another slot's pages."""
     cfg = _cfg("full")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    # 2 scratch pages + 1 spare: a 3-page prompt cannot be admitted
+    # 2 scratch pages + 1 spare: a 3-page prompt can never be admitted
     eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32,
                         prefill_threshold=4,
                         paged=PagedLayout(page_size=4, n_pages=3))
     eng.warmup()
-    eng.submit(Request(rid=0,
-                       prompt=tuple(range(1, 12)), max_new_tokens=4))
+    with pytest.raises(ValueError, match="never be admitted"):
+        eng.submit(Request(rid=0,
+                           prompt=tuple(range(1, 12)), max_new_tokens=4))
+    # mid-flight: growing a slot past what live slots left in the pool hits
+    # the allocator's hard error (exercised directly — the engine's budget
+    # reservations exist precisely to make this unreachable from step())
+    g = next(iter(eng.groups.values()))
     with pytest.raises(RuntimeError, match="exhausted"):
-        while eng.queue or eng.n_active:
-            eng.step()
+        for _ in range(4):
+            g.paging._alloc_page()
 
 
 _MESH_PAGED_SCRIPT = r"""
