@@ -1,13 +1,165 @@
 """Kernel micro-benchmarks (interpret mode on CPU: correctness-shaped timing;
-the derived fields carry the TPU-relevant tile/skip accounting)."""
+the derived fields carry the TPU-relevant tile/skip accounting).
+
+The fused-superkernel section times the full smoke-model decode / verify /
+tree-verify steps with ``fused=True`` vs ``fused=False`` and records the
+graph-level launch accounting (primitive counts per attention layer) plus
+the tree-draft position-count win. Everything lands in the tracked baseline
+``benchmarks/results/BENCH_kernels.json``.
+"""
 from __future__ import annotations
+
+import json
+import os
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import RESULTS_DIR, emit, time_decode, time_fn
+from repro.configs import smoke_config
+from repro.core import elastic
 from repro.kernels import flash_attention_bshd, morph_matmul, ssd_scan_bshn
+from repro.kernels import fused_decode as FD
 from repro.kernels.morph_matmul import trace_count
+from repro.models.model import (decode_step, init_decode_cache, init_params,
+                                verify_step, verify_tree)
+from repro.runtime.speculative import (tree_draft_position_count,
+                                       tree_rescore_position_count,
+                                       tree_topology)
+
+BENCH_JSON = os.path.join(RESULTS_DIR, "BENCH_kernels.json")
+
+
+def _count_eqns(jaxpr) -> int:
+    """Total primitive count, recursing into nested jaxprs — a backend-
+    independent proxy for launch count (each primitive is at least one op
+    in the lowered module; the fused path collapses the per-layer attention
+    op sequence into one pallas_call)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += 1
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):  # ClosedJaxpr
+                n += _count_eqns(v.jaxpr)
+            elif hasattr(v, "eqns"):  # raw Jaxpr
+                n += _count_eqns(v)
+    return n
+
+
+def fused_section() -> Dict[str, Dict]:
+    """Fused superkernel vs the unfused op sequence: full-model step latency
+    (CPU ref/interpret — correctness-shaped), primitive-count accounting,
+    and the tree-draft position-count rewrite. Returns the derived records
+    keyed for BENCH_kernels.json."""
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, cap = 4, 32
+    active = elastic.active_widths_batch(cfg, [0.5, 1.0, 0.5, 1.0])
+    out: Dict[str, Dict] = {}
+
+    def _steps(fused):
+        dec = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg, active=active,
+                                                  fused=fused),
+                      donate_argnums=(1,))
+        ver = jax.jit(lambda p, c, t: verify_step(p, c, t, cfg, active=active,
+                                                  fused=fused)[0])
+        topo = tree_topology((2, 1))
+        tre = jax.jit(lambda p, c, t: verify_tree(p, c, t, cfg, tree=topo,
+                                                  active=active,
+                                                  fused=fused)[0])
+        return dec, ver, tre, topo
+
+    fns = {tag: _steps(tag == "fused") for tag in ("unfused", "fused")}
+    topo = fns["fused"][3]
+    tok1 = jnp.ones((B, 1), jnp.int32)
+    tok3 = jnp.ones((B, 3), jnp.int32)
+    tokT = jnp.ones((B, topo.n_nodes), jnp.int32)
+
+    # INTERLEAVED best-of-5 medians over 9 iters each: CPU step latency at
+    # this scale is dominated by dispatch noise and slow drift (GC, turbo,
+    # co-tenants), and the ci.sh fused gate compares these numbers —
+    # pairing each fused sample with an adjacent unfused one keeps the
+    # comparison honest
+    samples: Dict[str, Dict[str, list]] = {
+        tag: {"decode": [], "verify": [], "tree_verify": []} for tag in fns}
+    for _ in range(5):
+        for tag, (dec, ver, tre, _t) in fns.items():
+            cache = init_decode_cache(cfg, B, cap, per_slot=True)
+            samples[tag]["decode"].append(
+                time_decode(dec, params, cache, tok1, warmup=3, iters=9))
+            cache = init_decode_cache(cfg, B, cap, per_slot=True)
+            samples[tag]["verify"].append(
+                time_fn(lambda v=ver, c=cache: v(params, c, tok3),
+                        warmup=3, iters=9))
+            samples[tag]["tree_verify"].append(
+                time_fn(lambda t=tre, c=cache: t(params, c, tokT),
+                        warmup=3, iters=9))
+    lat = {tag: {f"{kind}_us": min(vals) * 1e6
+                 for kind, vals in kinds.items()}
+           for tag, kinds in samples.items()}
+
+    eqns: Dict[str, Dict[str, int]] = {}
+    for tag, (dec, ver, tre, _t) in fns.items():
+        cache = init_decode_cache(cfg, B, cap, per_slot=True)
+        eqns[tag] = {
+            "decode": _count_eqns(
+                jax.make_jaxpr(dec)(params, cache, tok1).jaxpr),
+            "verify": _count_eqns(
+                jax.make_jaxpr(ver)(params, cache, tok3).jaxpr),
+            "tree_verify": _count_eqns(
+                jax.make_jaxpr(tre)(params, cache, tokT).jaxpr),
+        }
+    # per-layer launch accounting: the full-model graphs above are identical
+    # on CPU (impl=auto routes to the ref mirror), so count the ATTENTION
+    # LAYER's graph under the actual pallas lowering vs the unfused mirror —
+    # the superkernel collapses the QKV/attend/dequant/out-proj op sequence
+    # into one pallas_call (+ the cache write-back)
+    lp = jax.tree_util.tree_map(lambda a: a[0], params["stack"])["pos0"]["attn"]
+    lcache = init_decode_cache(cfg, 2, cap, per_slot=True)
+    gc = jax.tree_util.tree_map(lambda a: a[0], lcache["stack"])["pos0"]
+    lc = {k: v for k, v in gc.items() if not k.startswith("cross_")}
+    lx = jnp.ones((2, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    lpos = lcache["pos"]
+    layer_eqns = {
+        impl: _count_eqns(jax.make_jaxpr(
+            lambda: FD.fused_decode_step(
+                lp, lx, lc, lpos, cfg, impl=impl,
+                interpret=(impl == "pallas") or None))().jaxpr)
+        for impl in ("pallas", "ref")
+    }
+
+    for kind in ("decode", "verify", "tree_verify"):
+        rec = {
+            "fused_us": round(lat["fused"][f"{kind}_us"], 1),
+            "unfused_us": round(lat["unfused"][f"{kind}_us"], 1),
+            "speedup": round(lat["unfused"][f"{kind}_us"]
+                             / max(lat["fused"][f"{kind}_us"], 1e-9), 2),
+            "graph_primitives_fused": eqns["fused"][kind],
+            "graph_primitives_unfused": eqns["unfused"][kind],
+            "attn_layer_primitives_pallas": layer_eqns["pallas"],
+            "attn_layer_primitives_unfused": layer_eqns["ref"],
+            "fused_kernel_launches_per_layer": 1,
+            "backend": jax.default_backend(),
+            "impl": FD.default_impl(),
+        }
+        out[f"fused_{kind}"] = rec
+        emit(f"kernel/fused_{kind}/{cfg.name}",
+             lat["fused"][f"{kind}_us"], rec)
+
+    # tree-draft position accounting: the KV-carrying draft feeds each node
+    # once (O(n_nodes)) instead of re-scoring every level prefix (O(n^2)-ish)
+    drafts = {}
+    for br in ((2, 1), (2, 2), (3, 2, 1), (2, 2, 2, 2)):
+        new = tree_draft_position_count(br)
+        old = tree_rescore_position_count(br)
+        drafts["x".join(map(str, br))] = {
+            "positions_kv_carry": new, "positions_rescore": old,
+            "n_nodes": tree_topology(br).n_nodes,
+        }
+    out["tree_draft_positions"] = drafts
+    emit("kernel/tree_draft_positions", 0.0, drafts)
+    return out
 
 
 def run() -> None:
@@ -55,6 +207,16 @@ def run() -> None:
     t = time_fn(lambda: ssd_scan_bshn(xs, dts, A, B_, C_, chunk=64,
                                       interpret=True), iters=3)
     emit("kernel/ssd_scan/s256", t * 1e6, {"chunk": 64, "state": 16})
+
+    fused = fused_section()
+
+    # the tracked kernel baseline: fused-vs-unfused step latency, graph
+    # primitive accounting, and the tree-draft position-count rewrite
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"backend": jax.default_backend(), "sections": fused},
+                  f, indent=2, sort_keys=True)
+    print(f"[kernel_bench] wrote {BENCH_JSON}")
 
 
 if __name__ == "__main__":

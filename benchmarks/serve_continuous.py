@@ -41,9 +41,16 @@ under a (data, model) mesh via MeshExecutor), reporting tokens/s and
 launches-per-tick per mesh. On CPU the 8 devices are forced via XLA_FLAGS,
 which must happen before jax initializes — hence the import-time check.
 
+  10. fused           -> the paged + token-tree trace served with the
+     per-op decode/verify path vs every attention step routed through the
+     kernels.fused_decode superkernel (ServingEngine(fused=True));
+     asserts token identity + zero superkernel re-traces after warmup.
+     Runs alone via ``--fused`` (the ci.sh --fused-smoke entry point).
+
   PYTHONPATH=src python benchmarks/serve_continuous.py [arch] [n_requests]
   PYTHONPATH=src python benchmarks/serve_continuous.py --mesh [arch] [n_requests]
   PYTHONPATH=src python benchmarks/serve_continuous.py --failover [arch] [n_requests]
+  PYTHONPATH=src python benchmarks/serve_continuous.py --fused [arch] [n_requests]
 """
 from __future__ import annotations
 
@@ -74,12 +81,13 @@ BENCH_JSON = os.path.join(RESULTS_DIR, "BENCH_serving.json")
 
 def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         batch: int = 4, capacity: int = 32,
-        phases: Sequence[str] = ("core", "failover")) -> None:
+        phases: Sequence[str] = ("core", "failover", "fused")) -> None:
     """Run the serving benchmark. ``phases`` selects the groups: ``core``
     is the SLO/mixed-width/prefill/speculative/paged suite (phases 1-8 in
-    the module docstring), ``failover`` the fault-injection recovery phase.
-    Results merge into ``BENCH_serving.json`` so a subset run refreshes
-    only its own entries."""
+    the module docstring), ``failover`` the fault-injection recovery phase,
+    ``fused`` the fused-superkernel engine pair (the ci.sh --fused-smoke
+    entry point). Results merge into ``BENCH_serving.json`` so a subset run
+    refreshes only its own entries."""
     cfg = smoke_config(arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
     bench: Dict[str, Dict] = {}
@@ -88,13 +96,15 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         bench[name.rsplit("/", 1)[-1]] = derived
         emit(name, us, derived)
 
-    unknown = set(phases) - {"core", "failover"}
+    unknown = set(phases) - {"core", "failover", "fused"}
     if unknown:
         raise ValueError(f"unknown benchmark phases: {sorted(unknown)}")
     if "core" in phases:
         _core_phases(cfg, params, record, n_requests, batch, capacity)
     if "failover" in phases:
         _failover_phase(cfg, params, record, n_requests, batch, capacity)
+    if "fused" in phases:
+        _fused_phase(cfg, params, record, n_requests, batch, capacity)
 
     # the tracked serving baseline: every phase's derived metrics, one file.
     # Merged with what's already on disk so a phase-subset run (ci.sh
@@ -435,6 +445,60 @@ def _failover_phase(cfg, params, record, n_requests, batch, capacity) -> None:
     })
 
 
+def _fused_phase(cfg, params, record, n_requests, batch, capacity) -> None:
+    """Fused-superkernel serving: the same paged + token-tree speculative
+    trace served with the unfused per-op decode/verify path and with every
+    attention decode/verify/tree-verify routed through the
+    kernels.fused_decode superkernel (``ServingEngine(fused=True)``).
+    Token identity and the zero-retrace invariant (one superkernel trace
+    per depth x bucket, across mixed widths) are asserted; the reporting
+    surface is the fused engine's tokens/s vs the unfused baseline."""
+    from repro.kernels import fused_decode as FD
+
+    trace = poisson_trace(max(6, n_requests // 2), rate_per_s=1e6, seed=53,
+                          prompt_len=(1, 6), new_tokens=(4, 8),
+                          vocab=cfg.vocab_size, interactive_frac=0.3)
+
+    def serve(fused):
+        eng = ServingEngine(params, cfg, batch_size=batch,
+                            cache_capacity=capacity, prefill_threshold=4,
+                            speculative=SpecConfig(ks=(), trees=((2, 1),)),
+                            paged=PagedLayout(page_size=4), fused=fused)
+        eng.warmup()
+        traces0 = FD.trace_count()
+        for r in trace:
+            eng.submit(Request(rid=r.rid, prompt=r.prompt,
+                               max_new_tokens=r.max_new_tokens))
+        busy = 0.0
+        while eng.queue or eng.n_active:
+            busy += eng.step()
+        assert eng.ctrl.stats["compiles"] == eng.compiles_after_warmup, \
+            "fused serving must not recompile after warmup"
+        assert FD.trace_count() == traces0, \
+            "superkernel re-traced after warmup"
+        return eng, busy
+
+    base_eng, base_busy = serve(False)
+    fused_eng, fused_busy = serve(True)
+    base_out = {r.rid: tuple(r.generated) for r in base_eng.completed}
+    fused_out = {r.rid: tuple(r.generated) for r in fused_eng.completed}
+    assert fused_out == base_out, \
+        "fused serving must be token-identical to the unfused path"
+    fused_eng.check_paged_invariants()
+    gen = sum(len(r.generated) for r in fused_eng.completed)
+    record(f"serve_continuous/{cfg.name}/fused", 0.0, {
+        "token_identical": True,
+        "impl": FD.default_impl(),
+        "tokens_per_s_fused": round(gen / fused_busy, 1) if fused_busy else 0.0,
+        "tokens_per_s_unfused": round(gen / base_busy, 1) if base_busy else 0.0,
+        "decode_launches": fused_eng.decode_launches,
+        "spec_tree_launches": fused_eng.spec_tree_launches,
+        "prefills": fused_eng.prefills,
+        "executables": fused_eng.ctrl.stats["compiles"],
+        "recompiles_after_warmup": 0,
+    })
+
+
 def run_mesh(arch: str = "tinyllama-1.1b", n_requests: int = 12,
              batch: int = 4, capacity: int = 32) -> None:
     """Sharded axis: one trace, served at dp x tp in {1x1, 2x4, 8x1}.
@@ -494,5 +558,7 @@ if __name__ == "__main__":
         run_mesh(arch, max(6, n // 2))
     elif "--failover" in sys.argv:
         run(arch, n, phases=("failover",))
+    elif "--fused" in sys.argv:
+        run(arch, n, phases=("fused",))
     else:
         run(arch, n)

@@ -36,6 +36,14 @@
 #                                # failover, dense + paged, incl. a 2x4 CPU
 #                                # mesh subprocess) + snapshot/restore and
 #                                # seed fault_tolerance primitive tests
+#   scripts/ci.sh --fused-smoke  # additionally run the fused-superkernel
+#                                # shard: bit-exact fused-vs-unfused
+#                                # decode/verify/tree-verify equivalence +
+#                                # zero-retrace tests, the fused serving
+#                                # phase (token identity vs the per-op
+#                                # path), and the kernel bench with a
+#                                # fused <= unfused step-latency gate on
+#                                # the CPU ref path
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -49,6 +57,7 @@ SPEC_SMOKE=0
 TREE_SMOKE=0
 PAGED_SMOKE=0
 CHAOS_SMOKE=0
+FUSED_SMOKE=0
 for arg in "$@"; do
     case "$arg" in
         --bench-smoke) BENCH_SMOKE=1 ;;
@@ -57,9 +66,56 @@ for arg in "$@"; do
         --tree-smoke) TREE_SMOKE=1 ;;
         --paged-smoke) PAGED_SMOKE=1 ;;
         --chaos-smoke) CHAOS_SMOKE=1 ;;
+        --fused-smoke) FUSED_SMOKE=1 ;;
         *) echo "ci.sh: unknown argument '$arg'" >&2; exit 2 ;;
     esac
 done
+
+if [ "$FUSED_SMOKE" -eq 1 ]; then
+    echo "CI: fused-smoke shard (decode/verify superkernel)"
+    FUSED_TIMEOUT="${CI_FUSED_TIMEOUT:-1200}"
+    # bit-exact fused-vs-unfused equivalence (plain / SWA / kv-quant, dense
+    # + paged, mixed widths), pallas-vs-ref kernel checks, zero-retrace
+    # invariants, and the engine-level token-identity tests (incl. the 2x4
+    # CPU mesh subprocess case)
+    if ! FUSED_SMOKE=1 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        timeout "$FUSED_TIMEOUT" \
+        python -m pytest -q tests/test_fused_decode.py; then
+        echo "CI: FAIL (fused superkernel tests)"
+        exit 1
+    fi
+    # fused serving phase (token identity vs the per-op path, recorded into
+    # benchmarks/results/BENCH_serving.json)
+    if ! FUSED_SMOKE=1 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        timeout "$FUSED_TIMEOUT" \
+        python -c "from benchmarks import serve_continuous; serve_continuous.run(n_requests=6, phases=('fused',))"; then
+        echo "CI: FAIL (serve_continuous fused bench-smoke)"
+        exit 1
+    fi
+    # kernel bench (writes BENCH_kernels.json) + the latency gate: on the
+    # CPU ref path fused and unfused lower to the same graph, so the fused
+    # step must stay within noise (<= 1.25x) of the unfused step
+    if ! FUSED_SMOKE=1 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        timeout "$FUSED_TIMEOUT" python - <<'PY'
+from benchmarks import kernel_bench
+kernel_bench.run()
+import json
+with open(kernel_bench.BENCH_JSON) as f:
+    sections = json.load(f)["sections"]
+for kind in ("fused_decode", "fused_verify", "fused_tree_verify"):
+    rec = sections[kind]
+    assert rec["fused_us"] <= rec["unfused_us"] * 1.25, \
+        f"{kind}: fused {rec['fused_us']}us > unfused {rec['unfused_us']}us"
+    assert rec["attn_layer_primitives_pallas"] < rec["attn_layer_primitives_unfused"], \
+        f"{kind}: superkernel did not shrink the attention layer graph"
+print("fused latency gate OK")
+PY
+    then
+        echo "CI: FAIL (kernel bench fused latency gate)"
+        exit 1
+    fi
+    echo "CI: fused-smoke OK"
+fi
 
 if [ "$CHAOS_SMOKE" -eq 1 ]; then
     echo "CI: chaos-smoke shard (fault-tolerant serving)"

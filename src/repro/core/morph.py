@@ -265,7 +265,8 @@ def make_serve_controller(params, cfg: ModelConfig,
                           param_shardings=None, cache_shardings=None,
                           activation_specs=None, verify_activation_specs=None,
                           speculative=None, paged_page_size: int = 0,
-                          paged_buckets: Tuple[int, ...] = ()) -> MorphController:
+                          paged_buckets: Tuple[int, ...] = (),
+                          fused: bool = False) -> MorphController:
     """Serving controller: ONE jitted decode executable per *depth*.
 
     Each executable's signature is ``step(params, cache, tokens, active)``:
@@ -313,6 +314,13 @@ def make_serve_controller(params, cfg: ModelConfig,
     the full table width. The per-depth mode table is still registered (and
     warmed without tracing) but a paged engine dispatches the bucketed aux
     keys instead.
+
+    ``fused=True`` routes every attention decode/verify/tree-verify through
+    the ``kernels.fused_decode`` superkernel (one launch per attention layer
+    step instead of QKV + attention + dequant + output). It is a pure
+    closure flag — compile keys, the aux table, and the zero-re-trace
+    invariants are unchanged: the fused op takes the same traced width/page
+    operands the unfused path does.
     """
     trace_counter = {"n": 0}
     if mesh is not None:
@@ -336,12 +344,12 @@ def make_serve_controller(params, cfg: ModelConfig,
             trace_counter["n"] += 1  # executes at trace time only
             if mesh is None:
                 return decode_step(p, cache, tokens, cfg, depth=depth,
-                                   active=active)
+                                   active=active, fused=fused)
             # the context manager runs at trace time, which is when the
             # `constrain` calls inside decode_step consult it
             with _sh.activation_sharding(mesh, aspecs):
                 return decode_step(p, cache, tokens, cfg, depth=depth,
-                                   active=active)
+                                   active=active, fused=fused)
 
         if mesh is None:
             return jax.jit(step, donate_argnums=(1,))
@@ -359,11 +367,11 @@ def make_serve_controller(params, cfg: ModelConfig,
                 if mesh is None:
                     return decode_step(p, cache, tokens, cfg, depth=depth,
                                        active=active, pages=pages,
-                                       page_size=paged_page_size)
+                                       page_size=paged_page_size, fused=fused)
                 with _sh.activation_sharding(mesh, aspecs):
                     return decode_step(p, cache, tokens, cfg, depth=depth,
                                        active=active, pages=pages,
-                                       page_size=paged_page_size)
+                                       page_size=paged_page_size, fused=fused)
 
             if mesh is None:
                 return lambda: jax.jit(step, donate_argnums=(1,))
@@ -400,7 +408,7 @@ def make_serve_controller(params, cfg: ModelConfig,
 
         def draft_factory(draft_depth: int, k: int):
             fn = _spec.make_draft_step(cfg, draft_depth, k, top_k,
-                                       page_size=paged_page_size)
+                                       page_size=paged_page_size, fused=fused)
 
             def _run(args):
                 trace_counter["n"] += 1  # executes at trace time only
@@ -428,7 +436,7 @@ def make_serve_controller(params, cfg: ModelConfig,
 
         def verify_factory(depth: int, k: int):
             fn = _spec.make_verify_step(cfg, depth, k, top_k,
-                                        page_size=paged_page_size)
+                                        page_size=paged_page_size, fused=fused)
 
             def _run(args):
                 trace_counter["n"] += 1  # executes at trace time only
@@ -458,7 +466,8 @@ def make_serve_controller(params, cfg: ModelConfig,
 
         def tree_draft_factory(draft_depth: int, branching):
             fn = _spec.make_tree_draft_step(cfg, draft_depth, branching,
-                                            top_k, page_size=paged_page_size)
+                                            top_k, page_size=paged_page_size,
+                                            fused=fused)
 
             def _run(args):
                 trace_counter["n"] += 1  # executes at trace time only
@@ -489,7 +498,8 @@ def make_serve_controller(params, cfg: ModelConfig,
 
         def tree_verify_factory(depth: int, branching):
             fn = _spec.make_tree_verify_step(cfg, depth, branching, top_k,
-                                             page_size=paged_page_size)
+                                             page_size=paged_page_size,
+                                             fused=fused)
 
             def _run(args):
                 trace_counter["n"] += 1  # executes at trace time only

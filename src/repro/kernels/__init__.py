@@ -1,4 +1,5 @@
 from repro.kernels.flash_decode import flash_decode, flash_decode_ref
+from repro.kernels.fused_decode import fused_decode_step, fused_verify
 from repro.kernels.ops import (
     default_interpret,
     flash_attention_bshd,
@@ -11,6 +12,8 @@ __all__ = [
     "flash_attention_bshd",
     "flash_decode",
     "flash_decode_ref",
+    "fused_decode_step",
+    "fused_verify",
     "morph_matmul",
     "ssd_scan_bshn",
 ]

@@ -386,7 +386,7 @@ def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, dtype):
 
 
 def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False,
-               active=None, pages=None, page_size=0):
+               active=None, pages=None, page_size=0, fused=False):
     """One-token decode. x: (B,1,d); cache dict; pos: scalar int32 or (B,)
     per-slot positions (continuous batching: each batch slot is an independent
     request at its own sequence offset).
@@ -408,7 +408,16 @@ def mha_decode(params, x, cache, pos, cfg: ModelConfig, *, cross=False,
 
     Returns (out, new_cache). For cross-attention the cache holds precomputed
     encoder K/V and is returned unchanged.
+
+    ``fused=True`` routes the self-attention branch through the
+    ``kernels.fused_decode`` superkernel (projection + attention + dequant in
+    one launch; ``impl="auto"``: Pallas on TPU, a bit-identical mirrored ref
+    elsewhere). Cross-attention ignores the flag (no cache write, tiny S).
     """
+    if fused and not cross:
+        from repro.kernels import fused_decode_step  # local: keep layers import-light
+        return fused_decode_step(params, x, cache, pos, cfg, active=active,
+                                 pages=pages, page_size=page_size)
     dt = x.dtype
     B = x.shape[0]
     a_q = active.get("q_dim") if active else None
@@ -538,7 +547,8 @@ def _cache_kpos(pos, n_slots: int, window: int):
 
 
 def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None,
-               node_depth=None, tree_bias=None, pages=None, page_size=0):
+               node_depth=None, tree_bias=None, pages=None, page_size=0,
+               fused=False):
     """Speculative verify attention: score S positions in one pass.
 
     x: (B, S, d) — embeddings of the last committed token followed by S-1
@@ -565,7 +575,16 @@ def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None,
     bit-identity to the dense path.
 
     Returns (out (B, S, d), {"k": k_new, "v": v_new} with (B, S, KV, hd)).
+
+    ``fused=True`` routes through the ``kernels.fused_decode`` verify
+    superkernel; tree topologies bake their ancestor mask into the kernel
+    instead of materializing this function's dense additive ``bias``.
     """
+    if fused:
+        from repro.kernels import fused_verify  # local: keep layers import-light
+        return fused_verify(params, x, cache, pos, cfg, active=active,
+                            node_depth=node_depth, tree_bias=tree_bias,
+                            pages=pages, page_size=page_size)
     dt = x.dtype
     B, S, _ = x.shape
     a_q = active.get("q_dim") if active else None
@@ -639,3 +658,88 @@ def mha_verify(params, x, cache, pos, cfg: ModelConfig, *, active=None,
                          bias=bias)
     out = morph_proj(out.reshape(B, S, cfg.q_dim), params["wo"], active_k=a_q)
     return out, {"k": k_new, "v": v_new}
+
+
+def mha_tree_level(params, x, cache, pos, cfg: ModelConfig, carry_kv, *,
+                   level, carry_depths, bias, active=None, pages=None,
+                   page_size=0):
+    """One tree-draft LEVEL of attention: frontier nodes vs cache + carry.
+
+    The KV-carrying tree draft processes each node exactly once: level
+    ``level``'s frontier embeddings ``x`` (B, nf, d) attend over the
+    committed cache plus the K/V CARRIED from earlier levels instead of
+    re-scoring the whole tree prefix per pass. ``carry_kv`` holds
+    ``{"k", "v"}`` (B, Nc, KV, hd) round-tripped K/V of already-processed
+    nodes in BFS order (rows past the readable prefix are unread zeros);
+    ``carry_depths`` is the static (f1,) depth of each readable carry row
+    and ``bias`` the static (nf, f1) ancestor-mask rows for the frontier —
+    columns [f1-nf, f1) are the frontier's own in-flight K/V.
+
+    Bit-identical to the frontier rows of ``mha_verify`` over the full
+    prefix: carried rows equal the values that pass would recompute, and
+    the extended key axis keeps the same BFS column order, so the softmax
+    reduction is unchanged. Returns (out (B, nf, d), rows {"k", "v"}
+    (B, nf, KV, hd)) with rows ROUND-TRIPPED through kv quantization (what
+    a cache read-back would return) — ready to write into the carry.
+    """
+    dt = x.dtype
+    B, nf, _ = x.shape
+    a_q = active.get("q_dim") if active else None
+    a_kv = active.get("kv_dim") if active else None
+    pos = jnp.asarray(pos, jnp.int32)
+    offs = jnp.full((nf,), level, jnp.int32)  # one level = one depth
+    qpos = pos[:, None] + offs[None, :]  # (B, nf)
+    q = constrain(_split_heads(morph_proj(x, params["wq"], active_n=a_q),
+                               cfg.n_heads, cfg.head_dim), "decode_q")
+    k_new = constrain(_split_heads(morph_proj(x, params["wk"], active_n=a_kv),
+                                   cfg.n_kv_heads, cfg.head_dim), "decode_kv")
+    v_new = constrain(_split_heads(morph_proj(x, params["wv"], active_n=a_kv),
+                                   cfg.n_kv_heads, cfg.head_dim), "decode_kv")
+    if cfg.use_rope:
+        q = rope(q, qpos, cfg.rope_theta)
+        k_new = rope(k_new, qpos, cfg.rope_theta)
+    q = constrain(q, "decode_q")
+    k_new = constrain(k_new, "decode_kv")
+    v_new = constrain(v_new, "decode_kv")
+
+    if pages is not None:
+        Sv = pages.shape[1] * page_size
+
+        def _view(buf):
+            g = jnp.take(buf, pages, axis=0)
+            return g.reshape((B, Sv) + buf.shape[2:])
+
+        kc, vc = _view(cache["k"]), _view(cache["v"])
+        if cfg.kv_quant and "k_scale" in cache:
+            kc = dequantize_kv(kc, _view(cache["k_scale"]), dt)
+            vc = dequantize_kv(vc, _view(cache["v_scale"]), dt)
+    else:
+        kc, vc = cache["k"], cache["v"]
+        if cfg.kv_quant and "k_scale" in cache:
+            kc = dequantize_kv(kc, cache["k_scale"], dt)
+            vc = dequantize_kv(vc, cache["v_scale"], dt)
+    if cfg.kv_quant and "k_scale" in cache:
+        # same round trip the verify path attends over (see mha_verify)
+        kq, ks_ = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        k_att = dequantize_kv(kq, ks_, dt)
+        v_att = dequantize_kv(vq, vs, dt)
+    else:
+        k_att, v_att = k_new, v_new
+    kc = constrain(kc.astype(dt), "decode_kv")
+    vc = constrain(vc.astype(dt), "decode_kv")
+    kpos_c = _cache_kpos(pos, kc.shape[1], cfg.sliding_window)
+    f1 = bias.shape[1]  # readable carry prefix (ancestors + frontier)
+    k_car = jnp.concatenate([carry_kv["k"][:, : f1 - nf].astype(dt), k_att], 1)
+    v_car = jnp.concatenate([carry_kv["v"][:, : f1 - nf].astype(dt), v_att], 1)
+    kpos_car = pos[:, None] + jnp.asarray(carry_depths, jnp.int32)[None, :]
+    k_ext = jnp.concatenate([kc, k_car], axis=1)
+    v_ext = jnp.concatenate([vc, v_car], axis=1)
+    kpos = jnp.concatenate([kpos_c, kpos_car], axis=1)
+    bias_full = jnp.concatenate(
+        [jnp.zeros((nf, kc.shape[1]), jnp.float32),
+         jnp.asarray(bias, jnp.float32)], axis=1)
+    out = attention_full(q, k_ext, v_ext, cfg, qpos, kpos, causal=True,
+                         bias=bias_full)
+    out = morph_proj(out.reshape(B, nf, cfg.q_dim), params["wo"], active_k=a_q)
+    return out, {"k": k_att, "v": v_att}

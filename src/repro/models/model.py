@@ -389,7 +389,7 @@ def adopt_cache_slot(cache: Cache, pre: Cache, slot) -> Cache:
 
 
 def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig,
-                  active=None, pages=None, page_size=0):
+                  active=None, pages=None, page_size=0, fused=False):
     new_cache = {}
     for p in range(cfg.period):
         lp = group_params[f"pos{p}"]
@@ -401,7 +401,7 @@ def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig,
             self_keys = {k: v for k, v in cp.items() if not k.startswith("cross_")}
             mix, upd = L.mha_decode(lp["attn"], hn, self_keys, pos, cfg,
                                     active=active, pages=pages,
-                                    page_size=page_size)
+                                    page_size=page_size, fused=fused)
             nc.update(upd)
         else:
             self_keys = {k: cp[k] for k in ("conv_x", "conv_bc", "state")}
@@ -431,7 +431,7 @@ def _group_decode(group_params, group_cache, h, pos, cfg: ModelConfig,
 
 
 def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int] = None,
-                active=None, pages=None, page_size=0):
+                active=None, pages=None, page_size=0, fused=False):
     """One-token decode. tokens: (B, 1). Returns (logits (B,1,Vp), new_cache).
 
     ``pages`` / ``page_size`` switch the attention cache to the block-paged
@@ -469,7 +469,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int]
             lambda a: jax.lax.dynamic_index_in_dim(a, g_idx, 0, keepdims=False),
             cache_stack)
         h, nc = _group_decode(gp, gc, h, pos, cfg, active=active,
-                              pages=pages, page_size=page_size)
+                              pages=pages, page_size=page_size, fused=fused)
         h = _sh.constrain(h, "residual")  # mesh serving: pin the decode stream
         cache_stack = jax.tree_util.tree_map(
             lambda full, new: jax.lax.dynamic_update_index_in_dim(
@@ -488,7 +488,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, depth: Optional[int]
 
 
 def _group_verify(group_params, group_cache, h, pos, cfg: ModelConfig,
-                  active=None, tree=None, pages=None, page_size=0):
+                  active=None, tree=None, pages=None, page_size=0,
+                  fused=False):
     """One period of layers over S speculative positions (read-only cache).
 
     Mirrors ``_group_decode`` but scores ``h`` (B, S, d) at absolute positions
@@ -510,7 +511,7 @@ def _group_verify(group_params, group_cache, h, pos, cfg: ModelConfig,
                 lp["attn"], hn, self_keys, pos, cfg, active=active,
                 node_depth=None if tree is None else tree.depths,
                 tree_bias=None if tree is None else tree.ancestor_bias,
-                pages=pages, page_size=page_size)
+                pages=pages, page_size=page_size, fused=fused)
         else:
             self_keys = {k: cp[k] for k in ("conv_x", "conv_bc", "state")}
             if tree is None:
@@ -536,7 +537,7 @@ def _group_verify(group_params, group_cache, h, pos, cfg: ModelConfig,
 
 def verify_step(params, cache, tokens, cfg: ModelConfig, *,
                 depth: Optional[int] = None, active=None, pages=None,
-                page_size=0):
+                page_size=0, fused=False):
     """Speculative-decoding verifier: score S = K+1 positions in ONE pass.
 
     ``tokens`` is (B, S): the last committed token of each slot followed by
@@ -581,7 +582,7 @@ def verify_step(params, cache, tokens, cfg: ModelConfig, *,
     def body(h, xs):
         gp, gc = xs
         h, cand = _group_verify(gp, gc, h, pos, cfg, active=active,
-                                pages=pages, page_size=page_size)
+                                pages=pages, page_size=page_size, fused=fused)
         h = _sh.constrain(h, "residual")
         return h, cand
 
@@ -596,7 +597,7 @@ def verify_step(params, cache, tokens, cfg: ModelConfig, *,
 
 def verify_tree(params, cache, tokens, cfg: ModelConfig, *, tree,
                 depth: Optional[int] = None, active=None, pages=None,
-                page_size=0):
+                page_size=0, fused=False):
     """Token-tree verifier: score a whole candidate tree in ONE pass.
 
     ``tokens`` is (B, N): the flattened token tree in BFS level order, node 0
@@ -648,7 +649,7 @@ def verify_tree(params, cache, tokens, cfg: ModelConfig, *, tree,
     def body(h, xs):
         gp, gc = xs
         h, cand = _group_verify(gp, gc, h, pos, cfg, active=active, tree=tree,
-                                pages=pages, page_size=page_size)
+                                pages=pages, page_size=page_size, fused=fused)
         h = _sh.constrain(h, "residual")
         return h, cand
 
@@ -659,6 +660,155 @@ def verify_tree(params, cache, tokens, cfg: ModelConfig, *, tree,
         norm_p = params.get("exit_norms", {}).get(f"g{depth}", norm_p)
     logits = _logits(params, h, cfg, norm_p)
     return logits, {"stack": cands}
+
+
+def _group_tree_level(group_params, group_cache, group_carry, h, pos,
+                      cfg: ModelConfig, *, level, tree, active=None,
+                      pages=None, page_size=0):
+    """One period of layers over one tree-draft level's frontier.
+
+    Mirrors ``_group_verify`` restricted to the frontier rows: attention
+    scores the frontier against the committed cache plus the K/V carried
+    from earlier levels (``layers.mha_tree_level``), the SSM recurrence
+    advances each frontier node one step from its parent's carried state
+    (``ssm.ssm_tree_level``). Returns (h, rows) where ``rows`` holds each
+    layer's new carry rows for the frontier.
+    """
+    rows = {}
+    f0, f1 = tree.level_nodes(level)
+    for p in range(cfg.period):
+        lp = group_params[f"pos{p}"]
+        cp = group_cache[f"pos{p}"]
+        cr = group_carry[f"pos{p}"]
+        kind = cfg.layer_kind(p)
+        hn = L.apply_norm(lp["norm1"], h, cfg)
+        if kind == "attn":
+            self_keys = {k: v for k, v in cp.items() if not k.startswith("cross_")}
+            mix, r = L.mha_tree_level(
+                lp["attn"], hn, self_keys, pos, cfg, cr, level=level,
+                carry_depths=tree.depths[:f1],
+                bias=tree.ancestor_bias[f0:f1, :f1], active=active,
+                pages=pages, page_size=page_size)
+        else:
+            self_keys = {k: cp[k] for k in ("conv_x", "conv_bc", "state")}
+            mix, r = SSM.ssm_tree_level(lp["ssm"], hn, self_keys, cr, cfg,
+                                        parents=tree.parents[f0:f1],
+                                        active=active)
+        rows[f"pos{p}"] = r
+        h = h + mix
+        if cfg.layer_is_moe(p):
+            hn = L.apply_norm(lp["norm2"], h, cfg)
+            y, _ = MOE.apply_moe_dense(
+                lp["moe"], hn, cfg,
+                active_topk=active.get("top_k") if active else None)
+            h = h + y
+        elif cfg.d_ff:
+            hn = L.apply_norm(lp["norm2"], h, cfg)
+            h = h + L.apply_mlp(lp["mlp"], hn, cfg,
+                                active_ff=active.get("d_ff") if active else None)
+    return h, rows
+
+
+def tree_carry_nodes(tree) -> int:
+    """Carry rows the KV-carrying tree draft allocates = nodes it processes
+    per launch: every node except the last level's (leaf logits are never
+    needed — children are only drafted for non-leaf levels)."""
+    if tree.n_levels == 0:
+        return 1
+    return tree.level_nodes(tree.n_levels - 1)[1]
+
+
+def init_tree_draft_carry(cfg: ModelConfig, batch: int, tree,
+                          depth: Optional[int] = None) -> Cache:
+    """Zeroed per-node carry for ``draft_tree_level`` (shape mirrors the
+    cache stack, depth groups only, ``tree_carry_nodes`` rows per node axis).
+
+    Attention layers carry round-tripped K/V rows; SSM layers carry
+    post-consume conv tails and recurrent state. The carry is O(n_nodes)
+    per layer — allocating it is what lets the draft drop the committed
+    cache from its scan state entirely.
+    """
+    depth = depth if depth is not None else cfg.n_groups
+    nc = tree_carry_nodes(tree)
+    dt = jnp.dtype(cfg.dtype)
+
+    def one_layer(p: int):
+        if cfg.layer_kind(p) == "attn":
+            return {
+                "k": jnp.zeros((batch, nc, cfg.n_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((batch, nc, cfg.n_kv_heads, cfg.head_dim), dt),
+            }
+        kk = cfg.ssm_conv
+        d_in = cfg.ssm_nheads * cfg.ssm_head_dim
+        return {
+            "conv_x": jnp.zeros((batch, nc, kk - 1, d_in), dt),
+            "conv_bc": jnp.zeros(
+                (batch, nc, kk - 1, 2 * cfg.ssm_ngroups * cfg.ssm_state), dt),
+            "state": jnp.zeros(
+                (batch, nc, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32),
+        }
+
+    stack = {f"pos{p}": jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (depth,) + a.shape), one_layer(p))
+        for p in range(cfg.period)}
+    return {"stack": stack}
+
+
+def draft_tree_level(params, cache, carry, tokens_lvl, cfg: ModelConfig, *,
+                     tree, level: int, depth: Optional[int] = None,
+                     active=None, pages=None, page_size=0):
+    """Score ONE level of a draft token tree, carrying KV forward.
+
+    ``tokens_lvl`` is (B, nf): the frontier tokens at ``level`` (level 0 is
+    the root — the last committed token). The committed per-slot ``cache``
+    is READ ONLY and never rides a scan carry; everything the deeper levels
+    need is written to ``carry`` (from ``init_tree_draft_carry``), whose
+    per-layer rows cover processed nodes in BFS order. Together with
+    earlier levels this reproduces ``verify_tree``'s frontier rows
+    bit-exactly while touching each node position exactly once — the draft
+    cost drops from O(sum-of-level-prefix-sizes) to O(n_nodes) positions.
+
+    Returns (logits (B, nf, Vp), new_carry).
+    """
+    if cfg.is_encdec or cfg.frontend:
+        raise NotImplementedError("draft_tree_level supports token-only decoders")
+    depth = depth if depth is not None else cfg.n_groups
+    dt = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]
+    if pos.ndim != 1:
+        raise ValueError("draft_tree_level needs a per-slot cache (pos (B,))")
+    B, nf = tokens_lvl.shape
+    f0, f1 = tree.level_nodes(level)
+    if f1 - f0 != nf:
+        raise ValueError(f"level {level} frontier is {f1 - f0} nodes, "
+                         f"tokens carry {nf}")
+    h = params["embed"][tokens_lvl].astype(dt)
+    if pos_kind(cfg) == "sinusoidal":
+        qpos = pos[:, None] + jnp.full((nf,), level, jnp.int32)[None, :]
+        h = h + L.sinusoidal_pos(qpos, cfg.d_model).astype(dt)
+
+    stack_p = jax.tree_util.tree_map(lambda a: a[:depth], params["stack"])
+    stack_c = jax.tree_util.tree_map(lambda a: a[:depth], cache["stack"])
+
+    def body(h, xs):
+        gp, gc, gcar = xs
+        h, rows = _group_tree_level(gp, gc, gcar, h, pos, cfg, level=level,
+                                    tree=tree, active=active, pages=pages,
+                                    page_size=page_size)
+        h = _sh.constrain(h, "residual")
+        return h, rows
+
+    h, rows = jax.lax.scan(body, h, (stack_p, stack_c, carry["stack"]))
+
+    norm_p = params["final_norm"]
+    if depth < cfg.n_groups:
+        norm_p = params.get("exit_norms", {}).get(f"g{depth}", norm_p)
+    logits = _logits(params, h, cfg, norm_p)
+    new_stack = jax.tree_util.tree_map(
+        lambda full, r: full.at[:, :, f0:f1].set(r.astype(full.dtype)),
+        carry["stack"], rows)
+    return logits, {"stack": new_stack}
 
 
 def commit_verify(cache, pending, n_accepted, cfg: ModelConfig,

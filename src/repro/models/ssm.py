@@ -18,6 +18,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import (apply_norm, apply_norm_masked, dense_init,
@@ -411,6 +412,86 @@ def ssm_verify_tree(params, x, cache, cfg: ModelConfig, tree, active=None):
 
     y = ys + params["D"].astype(jnp.float32)[:, None] * xh
     y = y.reshape(B, N, nh * hp) * jax.nn.silu(z.astype(jnp.float32))
+    norm = {"scale": params["ssm_norm"]["scale"][: nh * hp]}
+    if a_in is None:
+        y = apply_norm(norm, y.astype(dt_), cfg)
+    else:
+        y = apply_norm_masked(norm, y.astype(dt_), cfg, a_in)
+    out = morph_proj(y, params["out_proj"], active_k=a_in)
+    return out, {"conv_x": x_tails, "conv_bc": bc_tails, "state": states}
+
+
+def ssm_tree_level(params, x, cache, carry, cfg: ModelConfig, *, parents,
+                   active=None):
+    """One tree-draft LEVEL of the SSM recurrence: each frontier node
+    advances ONE step from its parent's carried state.
+
+    x: (B, nf, d) frontier embeddings; ``carry`` holds per-node post-consume
+    values of already-processed nodes — ``conv_x``/``conv_bc`` tails
+    (B, Nc, K-1, C) and ``state`` (B, Nc, nh, hp, n); ``parents`` is the
+    static (nf,) carry-row index of each frontier node's parent (-1 = chain
+    off the committed ``cache``, i.e. the root level). Bit-identical to the
+    frontier rows of ``ssm_verify_tree``: a node's conv window is the last
+    K entries of [parent tail, own input], exactly the tail of the full
+    path window, and the state recurrence reads the identical parent state.
+
+    Returns (y (B, nf, d), rows) with per-node ``conv_x``/``conv_bc`` tails
+    (B, nf, K-1, C) and ``state`` (B, nf, nh, hp, n) — ready to write into
+    the carry at the frontier rows.
+    """
+    dt_ = x.dtype
+    B, nf, _ = x.shape
+    nh = params["A_log"].shape[0]
+    hp = cfg.ssm_head_dim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    a_in = active.get("d_inner") if active else None
+    xs = constrain(morph_proj(x, params["w_x"], active_n=a_in), "decode_ssm")
+    z = constrain(morph_proj(x, params["w_z"], active_n=a_in), "decode_ssm")
+    bc = matmul(x, params["w_bc"], dt_)
+    dt_raw = morph_proj(x, params["w_dt"],
+                        active_n=active.get("ssm_heads") if active else None)
+
+    if int(parents[0]) < 0:  # root level: nf == 1, chain off the cache
+        x_tails_par = cache["conv_x"][:, None]
+        bc_tails_par = cache["conv_bc"][:, None]
+        states_par = cache["state"][:, None]
+    else:
+        pidx = np.asarray(parents, np.int32)
+        x_tails_par = carry["conv_x"][:, pidx]
+        bc_tails_par = carry["conv_bc"][:, pidx]
+        states_par = carry["state"][:, pidx]
+
+    def _node_conv(u, w, b, tails):
+        """u: (B, nf, C); tails: (B, nf, K-1, C) parent post-consume tails.
+        Window per node = [parent tail, own input] — the last K entries of
+        the full ancestor-path window ``_path_conv`` materializes."""
+        ext = jnp.concatenate([tails.astype(u.dtype), u[:, :, None, :]], 2)
+        y = jnp.einsum("bqkc,ck->bqc", ext.astype(jnp.float32),
+                       w.astype(jnp.float32))
+        y = (y + b.astype(jnp.float32)).astype(u.dtype)
+        return y, ext[:, :, 1:, :]
+
+    xs_conv, x_tails = _node_conv(xs, params["conv_x_w"][: nh * hp],
+                                  params["conv_x_b"][: nh * hp], x_tails_par)
+    bc_conv, bc_tails = _node_conv(bc, params["conv_bc_w"],
+                                   params["conv_bc_b"], bc_tails_par)
+
+    xs_f = jax.nn.silu(xs_conv.astype(jnp.float32))  # (B, nf, d_in)
+    bc_f = jax.nn.silu(bc_conv.astype(jnp.float32))
+    B_ = jnp.repeat(bc_f[..., : g * n].reshape(B, nf, g, n), nh // g, axis=2)
+    C_ = jnp.repeat(bc_f[..., g * n :].reshape(B, nf, g, n), nh // g, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,nf,nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs_f.reshape(B, nf, nh, hp)
+
+    decay = jnp.exp(dt * A)  # (B, nf, h)
+    upd = jnp.einsum("bqhp,bqhn->bqhpn", xh * dt[..., None], B_)
+    states = states_par.astype(jnp.float32) * decay[..., None, None] + upd
+    ys = jnp.einsum("bqhpn,bqhn->bqhp", states, C_)
+
+    y = ys + params["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(B, nf, nh * hp) * jax.nn.silu(z.astype(jnp.float32))
     norm = {"scale": params["ssm_norm"]["scale"][: nh * hp]}
     if a_in is None:
         y = apply_norm(norm, y.astype(dt_), cfg)

@@ -110,8 +110,9 @@ from repro.core.morph import (MorphController, make_serve_controller,
 from repro.core.neuroforge.analytical import estimate
 from repro.core.neuroforge.hw import V5E, HardwareSpec
 from repro.core.neuroforge.space import DesignPoint
-from repro.models.model import (adopt_cache_slot, init_decode_cache, prefill,
-                                reset_cache_slots)
+from repro.models.model import (adopt_cache_slot, commit_verify,
+                                init_decode_cache, prefill,
+                                reset_cache_slots, verify_step)
 from repro.models.paged import (PagedLayout, adopt_paged_slot, copy_page,
                                 init_paged_cache)
 from repro.parallel import sharding as SH
@@ -398,11 +399,13 @@ class LocalExecutor:
             self.failure_hook(site)
 
     def bind(self, cfg: ModelConfig, batch_size: int, cache_capacity: int,
-             paged: Optional[PagedLayout] = None) -> "LocalExecutor":
+             paged: Optional[PagedLayout] = None,
+             fused: bool = False) -> "LocalExecutor":
         self._cfg = cfg
         self._batch = batch_size
         self._cap = cache_capacity
         self._paged = paged
+        self._fused = fused
         return self
 
     # -- placement ----------------------------------------------------------
@@ -426,6 +429,7 @@ class LocalExecutor:
                         speculative: Optional[SpecConfig] = None) -> MorphController:
         return make_serve_controller(params, cfg, modes,
                                      speculative=speculative,
+                                     fused=self._fused,
                                      **self._paged_kwargs(cfg))
 
     def init_cache(self):
@@ -479,6 +483,40 @@ class LocalExecutor:
         """Jitted copy-on-write page copy (src/dst are traced scalars)."""
         return jax.jit(copy_page, donate_argnums=(0,))
 
+    def replay_chunk_fn(self, depth: int, n_tokens: int):
+        """Compiled multi-token replay: (params, cache, (B, C) committed
+        tokens, active) -> cache advanced by C positions on every slot.
+
+        One ``verify_step`` scores all C positions and ``commit_verify``
+        force-accepts them (``n_accepted = C - 1``): by the verify path's
+        exactness property the cache lands bit-identical to C sequential
+        decode launches, in ONE launch instead of C.
+        """
+        cfg, fused = self._cfg, self._fused
+        paged = self._paged
+
+        if paged is None:
+            def chunk(params, cache, tokens, active):
+                _, pending = verify_step(params, cache, tokens, cfg,
+                                         depth=depth, active=active,
+                                         fused=fused)
+                n_acc = jnp.full((tokens.shape[0],), n_tokens - 1, jnp.int32)
+                return commit_verify(cache, pending, n_acc, cfg)
+
+            return jax.jit(chunk, donate_argnums=(1,))
+
+        ps = paged.page_size
+
+        def chunk(params, cache, tokens, active, pages):
+            _, pending = verify_step(params, cache, tokens, cfg,
+                                     depth=depth, active=active,
+                                     pages=pages, page_size=ps, fused=fused)
+            n_acc = jnp.full((tokens.shape[0],), n_tokens - 1, jnp.int32)
+            return commit_verify(cache, pending, n_acc, cfg, pages=pages,
+                                 page_size=ps)
+
+        return jax.jit(chunk, donate_argnums=(1,))
+
 
 class MeshExecutor(LocalExecutor):
     """SPMD execution backend: the same ops, compiled under a TP/DP mesh.
@@ -501,8 +539,10 @@ class MeshExecutor(LocalExecutor):
         self._rep = NamedSharding(mesh, P())
 
     def bind(self, cfg: ModelConfig, batch_size: int, cache_capacity: int,
-             paged: Optional[PagedLayout] = None) -> "MeshExecutor":
-        super().bind(cfg, batch_size, cache_capacity, paged=paged)
+             paged: Optional[PagedLayout] = None,
+             fused: bool = False) -> "MeshExecutor":
+        super().bind(cfg, batch_size, cache_capacity, paged=paged,
+                     fused=fused)
         self.policy = self._policy_arg or SH.serve_policy(cfg, self.tp)
         if paged is not None:
             cstruct = jax.eval_shape(
@@ -536,7 +576,7 @@ class MeshExecutor(LocalExecutor):
             param_shardings=self._param_sh, cache_shardings=self._cache_sh,
             activation_specs=self._aspecs,
             verify_activation_specs=self._vspecs, speculative=speculative,
-            **self._paged_kwargs(cfg))
+            fused=self._fused, **self._paged_kwargs(cfg))
 
     def init_cache(self):
         cfg, batch, cap = self._cfg, self._batch, self._cap
@@ -602,6 +642,44 @@ class MeshExecutor(LocalExecutor):
         return jax.jit(copy_page,
                        in_shardings=(self._cache_sh, self._rep, self._rep),
                        out_shardings=self._cache_sh, donate_argnums=(0,))
+
+    def replay_chunk_fn(self, depth: int, n_tokens: int):
+        cfg, fused = self._cfg, self._fused
+        paged = self._paged
+        mesh = self.mesh
+        vspecs = self._vspecs
+
+        if paged is None:
+            def chunk(params, cache, tokens, active):
+                with SH.activation_sharding(mesh, vspecs):
+                    _, pending = verify_step(params, cache, tokens, cfg,
+                                             depth=depth, active=active,
+                                             fused=fused)
+                    n_acc = jnp.full((tokens.shape[0],), n_tokens - 1,
+                                     jnp.int32)
+                    return commit_verify(cache, pending, n_acc, cfg)
+
+            return jax.jit(chunk,
+                           in_shardings=(self._param_sh, self._cache_sh,
+                                         self._rep, self._rep),
+                           out_shardings=self._cache_sh, donate_argnums=(1,))
+
+        ps = paged.page_size
+
+        def chunk(params, cache, tokens, active, pages):
+            with SH.activation_sharding(mesh, vspecs):
+                _, pending = verify_step(params, cache, tokens, cfg,
+                                         depth=depth, active=active,
+                                         pages=pages, page_size=ps,
+                                         fused=fused)
+                n_acc = jnp.full((tokens.shape[0],), n_tokens - 1, jnp.int32)
+                return commit_verify(cache, pending, n_acc, cfg, pages=pages,
+                                     page_size=ps)
+
+        return jax.jit(chunk,
+                       in_shardings=(self._param_sh, self._cache_sh,
+                                     self._rep, self._rep, self._rep),
+                       out_shardings=self._cache_sh, donate_argnums=(1,))
 
 
 # ---------------------------------------------------------------------------
@@ -900,7 +978,8 @@ class ServingEngine:
                  speculative: Optional[SpecConfig] = None,
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0,
-                 paged: Optional[PagedLayout] = None):
+                 paged: Optional[PagedLayout] = None,
+                 fused: bool = False):
         if paged is not None:
             if cfg.is_encdec or cfg.frontend:
                 raise ValueError(
@@ -946,8 +1025,13 @@ class ServingEngine:
         self.temperature = float(temperature)
         self.sample_seed = sample_seed
         self.paged = paged
+        # route every attention decode/verify/tree-verify through the
+        # kernels.fused_decode superkernel — a pure closure flag on the
+        # compiled steps: same compile keys, same aux table, token-identical
+        # output (see core.morph.make_serve_controller)
+        self.fused = bool(fused)
         self.executor = (executor or LocalExecutor()).bind(
-            cfg, batch_size, cache_capacity, paged=paged)
+            cfg, batch_size, cache_capacity, paged=paged, fused=self.fused)
         self.params = self.executor.place_params(params)
         self.ctrl = controller or self.executor.make_controller(
             self.params, cfg, modes, speculative=speculative)
@@ -1003,6 +1087,13 @@ class ServingEngine:
                            if paged is not None else None)
         # compiled prefills, keyed by (prompt_len, depth); ``slot`` is traced
         self._prefills: Dict[Tuple[int, int], Callable] = {}
+        # compiled replay chunks (restore-time batched history re-feed),
+        # keyed by (depth, chunk length); engine-cached rather than in the
+        # controller's aux table — they exist only for failover replay
+        self._replay_chunks: Dict[Tuple[int, int], Callable] = {}
+        # launches the chunked replay saved vs one-launch-per-token re-feed
+        # (host-only diagnostics: restore never snapshots/restores it)
+        self.replay_chunk_launches = 0
         self.prefill_threshold = prefill_threshold
         self.prefills = 0
         self.prefill_s = 0.0
@@ -1876,6 +1967,44 @@ class ServingEngine:
                             active)
         self.ctrl.stats["dispatches"] += 1
 
+    def _replay_chunk(self, g: _DepthGroup, toks: np.ndarray,
+                      joined: List[int]) -> None:
+        """One batched replay launch: C >= 2 committed tokens per joined
+        slot are verify-scored and force-committed (``n_accepted = C - 1``)
+        in ONE launch — bit-identical to C lockstep ``_replay_launch``
+        calls by the verify path's exactness property, C-1 launches
+        cheaper. Every slot's device position advances by C (non-joined
+        slots take garbage writes, exactly as they do under the
+        single-token lockstep); paged mappings are grown and privatized to
+        cover the whole C-token write range up front."""
+        C = toks.shape[1]
+        active = self._active_for(g.widths)
+        pg = g.paging
+        extra = ()
+        if pg is not None:
+            for i in joined:
+                pos = int(pg.host_pos[i])
+                pg.ensure_slot(i, pos + C - 1)
+                for src, dst in pg.cow_pairs(i, pos, pos + C - 1):
+                    g.cache = self._copy_page(
+                        g.cache, self.executor.put(np.int32(src)),
+                        self.executor.put(np.int32(dst)))
+            # chunk executables are engine-cached per (depth, C), not
+            # bucketed: replay always ships the full-width table, like the
+            # speculative executables do
+            extra = (self.executor.put(pg.table[:, :pg.cap_pages].copy()),)
+        key = (g.depth, C)
+        fn = self._replay_chunks.get(key)
+        if fn is None:
+            fn = self.executor.replay_chunk_fn(g.depth, C)
+            self._replay_chunks[key] = fn
+        g.cache = fn(self.params, g.cache, self.executor.put(toks), active,
+                     *extra)
+        if pg is not None:
+            pg.host_pos += C  # mirror the device counter (ALL slots advance)
+        self.ctrl.stats["dispatches"] += 1
+        self.replay_chunk_launches += 1
+
     def _replay_group(self, g: _DepthGroup) -> None:
         """Re-materialize one depth group's device cache from host truth.
 
@@ -1910,8 +2039,15 @@ class ServingEngine:
             else:
                 tails[i] = (0, committed)
         T = max(len(t) for _, t in tails.values())
+        # committed history is known in full up front, so between join
+        # events the lockstep feed is batched: up to ``c_max`` tokens ride
+        # ONE verify-scored, force-committed launch (``_replay_chunk``)
+        # instead of one decode launch each. The verify window is bounded
+        # by the sliding window (commit's rolling scatter must not alias).
+        c_max = max(min(8, self.cfg.sliding_window or 8), 1)
         joined: List[int] = []
-        for t in range(T):
+        t = 0
+        while t < T:
             mask = np.zeros(self.batch_size, bool)
             for i, (start, tail) in tails.items():
                 if T - len(tail) != t:
@@ -1926,11 +2062,22 @@ class ServingEngine:
                 joined.append(i)
             if mask.any():
                 g.cache = self._reset(g.cache, self.executor.put(mask))
-            toks = np.zeros((self.batch_size, 1), np.int32)
-            for i in joined:
-                _, tail = tails[i]
-                toks[i, 0] = tail[t - (T - len(tail))]
-            self._replay_launch(g, toks, joined)
+            # feed until the next slot joins (or the end), in chunks
+            waiting = [T - len(tail) for i2, (_, tail) in tails.items()
+                       if i2 not in joined]
+            t_next = min([w for w in waiting if w > t], default=T)
+            while t < t_next:
+                C = min(c_max, t_next - t)
+                toks = np.zeros((self.batch_size, C), np.int32)
+                for i in joined:
+                    _, tail = tails[i]
+                    off = t - (T - len(tail))
+                    toks[i, :] = tail[off:off + C]
+                if C == 1:
+                    self._replay_launch(g, toks, joined)
+                else:
+                    self._replay_chunk(g, toks, joined)
+                t += C
         # slots with nothing to feed: fed == 0 (plain reset) or a prefilled
         # prompt with no generation fed past it (adopt after the launches so
         # the lockstep advances can't disturb its position)

@@ -47,8 +47,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.model import (commit_verify, decode_step, verify_step,
-                                verify_tree)
+from repro.models.model import (commit_verify, decode_step, draft_tree_level,
+                                init_tree_draft_carry, tree_carry_nodes,
+                                verify_step, verify_tree)
 from repro.runtime import sampling
 
 
@@ -377,8 +378,24 @@ def accept_tree(logits, draft_logits, tokens, topo: TreeTopology, keys,
 # ---------------------------------------------------------------------------
 
 
+def tree_draft_position_count(branching: Tuple[int, ...]) -> int:
+    """Positions the KV-carrying tree draft processes per launch: each node
+    exactly once, skipping the last level (leaf logits never feed a child
+    sample) — O(n_nodes). The pre-carry level-rescoring draft re-scored the
+    whole prefix per level, O(sum-of-level-prefix-sizes)."""
+    return tree_carry_nodes(tree_topology(tuple(branching)))
+
+
+def tree_rescore_position_count(branching: Tuple[int, ...]) -> int:
+    """Positions the OLD level-rescoring draft touched per launch (kept as
+    the benchmark baseline the carry rewrite is measured against)."""
+    topo = tree_topology(tuple(branching))
+    return sum(tree_topology(topo.branching[:level]).n_nodes
+               for level in range(topo.n_levels))
+
+
 def make_draft_step(cfg: ModelConfig, draft_depth: int, k: int,
-                    top_k: int = 0, page_size: int = 0):
+                    top_k: int = 0, page_size: int = 0, fused: bool = False):
     """Build the K-token drafting function for one (draft_depth, K).
 
     Signature: ``draft(params, cache, tok0, active, keys, temperature, step)
@@ -405,7 +422,8 @@ def make_draft_step(cfg: ModelConfig, draft_depth: int, k: int,
             cache_c, tok = carry
             logits, cache_c = decode_step(params, cache_c, tok, cfg,
                                           depth=draft_depth, active=active,
-                                          pages=pages, page_size=page_size)
+                                          pages=pages, page_size=page_size,
+                                          fused=fused)
             lg = logits[:, 0]
             kj = jax.vmap(lambda kk: jax.random.fold_in(kk, j))(kd)
             nxt = sampling.sample_tokens(lg, kj, temperature, vocab, top_k)
@@ -419,7 +437,7 @@ def make_draft_step(cfg: ModelConfig, draft_depth: int, k: int,
 
 
 def make_verify_step(cfg: ModelConfig, depth: int, k: int, top_k: int = 0,
-                     page_size: int = 0):
+                     page_size: int = 0, fused: bool = False):
     """Build the fused verify+accept+commit function for one (depth, K).
 
     Signature: ``verify(params, cache, tokens (B, K+1), draft_logits, active,
@@ -435,7 +453,8 @@ def make_verify_step(cfg: ModelConfig, depth: int, k: int, top_k: int = 0,
                temperature, step, pages=None):
         logits, pending = verify_step(params, cache, tokens, cfg,
                                       depth=depth, active=active,
-                                      pages=pages, page_size=page_size)
+                                      pages=pages, page_size=page_size,
+                                      fused=fused)
         keys_l = sampling.fold_step(keys, step)
         out, n_acc = accept_speculative(logits, draft_logits, tokens, keys_l,
                                         temperature, cfg.vocab_size, top_k)
@@ -448,24 +467,34 @@ def make_verify_step(cfg: ModelConfig, depth: int, k: int, top_k: int = 0,
 
 def make_tree_draft_step(cfg: ModelConfig, draft_depth: int,
                          branching: Tuple[int, ...], top_k: int = 0,
-                         page_size: int = 0):
+                         page_size: int = 0, fused: bool = False):
     """Build the token-tree drafting function for one (draft_depth, tree).
 
     Signature: ``draft(params, cache, tok0, active, keys, temperature, step)
     -> (tree_tokens (B, N), draft_logits (B, N, Vp))`` with node 0 = tok0.
-    The tree grows level by level: each level scores the tree built so far
-    with a READ-ONLY multi-position ``verify_tree`` pass at the draft depth
-    (ancestor-masked extended-KV attention over the committed cache — the
-    cache is never written and, unlike the linear draft's scan, never copied
-    into a scan carry: non-destructive drafting), then samples each frontier
-    node's children from its exit-head logits. At temperature 0 the children
-    are the top-b distinct tokens (deterministic greedy expansion); at
-    temperature > 0 they are i.i.d. samples from the draft distribution
-    (per-child stream ids keep sibling draws independent — the property the
-    multi-candidate acceptance rule needs). One executable serves both: the
-    temperature is a runtime operand selecting between the two candidate
-    sets with ``jnp.where``.
+    The tree grows level by level, CARRYING KV forward: each level runs a
+    read-only ``draft_tree_level`` pass over only the frontier nodes, whose
+    attention extends the committed cache with the K/V (and SSM state)
+    carried from earlier levels — so a launch touches each node position
+    exactly once, O(n_nodes) total (``tree_draft_position_count``), instead
+    of re-scoring the whole tree prefix per level. The committed cache is
+    never written and never copied into a scan carry (the O(n_nodes)
+    per-layer carry from ``init_tree_draft_carry`` is the only new state):
+    non-destructive drafting, bit-identical logits to the re-scoring pass.
+    Each frontier node's children are then sampled from its exit-head
+    logits. At temperature 0 the children are the top-b distinct tokens
+    (deterministic greedy expansion); at temperature > 0 they are i.i.d.
+    samples from the draft distribution (per-child stream ids keep sibling
+    draws independent — the property the multi-candidate acceptance rule
+    needs). One executable serves both: the temperature is a runtime
+    operand selecting between the two candidate sets with ``jnp.where``.
+
+    ``fused`` is accepted for signature parity with the other factories;
+    the level pass runs the reference einsum path either way (its extended
+    carry geometry is not a fused-kernel shape), so fused and unfused
+    engines draft identical trees by construction.
     """
+    del fused  # level passes are reference-path either way (see docstring)
     topo = tree_topology(tuple(branching))
     vocab = cfg.vocab_size
 
@@ -478,16 +507,17 @@ def make_tree_draft_step(cfg: ModelConfig, draft_depth: int,
         tokens = jnp.zeros((B, topo.n_nodes), jnp.int32)
         tokens = tokens.at[:, 0].set(tok0[:, 0])
         dlg = jnp.zeros((B, topo.n_nodes, cfg.padded_vocab()), jnp.float32)
+        carry = init_tree_draft_carry(cfg, B, topo, depth=draft_depth)
         for level, b in enumerate(topo.branching):
-            sub = tree_topology(topo.branching[:level])
-            lg_pass, _ = verify_tree(params, cache,
-                                     tokens[:, :sub.n_nodes], cfg, tree=sub,
-                                     depth=draft_depth, active=active,
-                                     pages=pages, page_size=page_size)
-            f0, f1 = sub.level_nodes(level)
-            dlg = dlg.at[:, f0:f1].set(lg_pass[:, f0:f1].astype(jnp.float32))
+            f0, f1 = topo.level_nodes(level)
+            lg_lvl, carry = draft_tree_level(params, cache, carry,
+                                             tokens[:, f0:f1], cfg,
+                                             tree=topo, level=level,
+                                             depth=draft_depth, active=active,
+                                             pages=pages, page_size=page_size)
+            dlg = dlg.at[:, f0:f1].set(lg_lvl.astype(jnp.float32))
             for nf in range(f0, f1):
-                lg_n = lg_pass[:, nf]  # (B, Vp)
+                lg_n = lg_lvl[:, nf - f0]  # (B, Vp)
                 lg_m = sampling.top_k_mask(
                     lg_n[..., :vocab].astype(jnp.float32), top_k)
                 top_toks = jax.lax.top_k(lg_m, b)[1].astype(jnp.int32)
@@ -504,7 +534,7 @@ def make_tree_draft_step(cfg: ModelConfig, draft_depth: int,
 
 def make_tree_verify_step(cfg: ModelConfig, depth: int,
                           branching: Tuple[int, ...], top_k: int = 0,
-                          page_size: int = 0):
+                          page_size: int = 0, fused: bool = False):
     """Build the fused tree verify+accept+commit for one (depth, tree).
 
     Signature: ``verify(params, cache, tree_tokens (B, N), draft_logits,
@@ -522,7 +552,8 @@ def make_tree_verify_step(cfg: ModelConfig, depth: int,
                temperature, step, pages=None):
         logits, pending = verify_tree(params, cache, tokens, cfg, tree=topo,
                                       depth=depth, active=active,
-                                      pages=pages, page_size=page_size)
+                                      pages=pages, page_size=page_size,
+                                      fused=fused)
         keys_l = sampling.fold_step(keys, step)
         out, path, n_acc = accept_tree(logits, draft_logits, tokens, topo,
                                        keys_l, temperature, cfg.vocab_size,

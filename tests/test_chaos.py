@@ -142,6 +142,59 @@ def test_chaos_paged_tree_spec():
         assert pg.alloc.n_in_use == len(pg.scratch) + len(held)
 
 
+@pytest.mark.parametrize("paged,spec", [
+    (None, SpecConfig(ks=(2,))),
+    (PagedLayout(page_size=4), SpecConfig(ks=(), trees=((2, 1),))),
+], ids=["dense_linear", "paged_tree"])
+def test_restore_replay_batching_exact(paged, spec):
+    """Restore re-feeds committed history through the verify path in
+    CHUNKS: the standby's rebuild issues strictly fewer launches than the
+    one-decode-per-token lockstep would, and the restored engine's
+    continued streams and counters still land exactly on the
+    uninterrupted run's."""
+    factory = _make_factory(paged=paged, speculative=spec)
+    trace = _trace(8, seed=11)
+    a = factory()
+    for r in trace:
+        a.submit(r)
+    for _ in range(8):  # mid-flight: live slots carry multi-token histories
+        a.step()
+    snap = a.snapshot()
+
+    b = factory()
+    d0 = b.ctrl.stats["dispatches"]
+    b.restore(snap)
+    d1 = b.ctrl.stats["dispatches"]
+    # what the old per-token lockstep would have launched: per group, the
+    # longest live slot tail (prefilled slots re-feed only their generation)
+    lockstep = 0
+    for gs in snap.groups.values():
+        tails = [r.fed - (len(r.prompt) if r.prefilled else 0)
+                 for r in gs.slots if r is not None]
+        lockstep += max(tails, default=0)
+    assert lockstep >= 2, "trace never built a multi-token history"
+    assert b.replay_chunk_launches > 0, "replay never took the chunk path"
+    assert d1 - d0 < lockstep, (d1 - d0, lockstep)
+    b.check_paged_invariants()
+
+    # continue both engines on the same schedule: bit-identical streams,
+    # counters landing exactly on the uninterrupted totals
+    for eng in (a, b):
+        n = 0
+        while (eng.queue or eng.n_active) and n < 500:
+            eng.step()
+            n += 1
+    out_a = {r.rid: tuple(r.generated) for r in a.completed}
+    out_b = {r.rid: tuple(r.generated) for r in b.completed}
+    assert out_a == out_b, "streams diverged after chunked-replay restore"
+    ca = (a.step_count, a.decode_launches, a.prefills,
+          a.spec_verify_launches, a.spec_generated_tokens)
+    cb = (b.step_count, b.decode_launches, b.prefills,
+          b.spec_verify_launches, b.spec_generated_tokens)
+    assert ca == cb, (ca, cb)
+    b.check_paged_invariants()
+
+
 _MESH_CHAOS_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

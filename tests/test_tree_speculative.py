@@ -340,6 +340,54 @@ def test_tree_draft_is_non_destructive_no_cache_copy(arch):
     assert any(c >= big for c in lin_carries), \
         "expected the linear draft's scan to carry the cache (baseline)"
 
+    # KV-carrying draft: scan state is O(n_nodes), INDEPENDENT of the
+    # committed cache size — doubling capacity must not move a single
+    # carry byte-size (the linear draft's cache-sized carry, by contrast,
+    # grows with capacity)
+    cache2 = init_decode_cache(cfg, B, 64, per_slot=True)
+    jx_tree2 = jax.make_jaxpr(tree_fn)(params, cache2, tok0, None, keys,
+                                       jnp.float32(0.0), jnp.uint32(0))
+    assert sorted(tree_carries) == \
+        sorted(_scan_carry_byte_sizes(jx_tree2.jaxpr)), \
+        "tree draft scan state scales with committed cache capacity"
+    cap_scales = sorted(
+        int(np.prod(a.shape, initial=1)) * a.dtype.itemsize
+        for a in jax.tree_util.tree_leaves(cache2["stack"])) \
+        != cache_leaf_bytes
+    if cap_scales:  # SSM-only caches are capacity-independent to begin with
+        jx_lin2 = jax.make_jaxpr(linear_fn)(params, cache2, tok0, None, keys,
+                                            jnp.float32(0.0), jnp.uint32(0))
+        assert sorted(lin_carries) != \
+            sorted(_scan_carry_byte_sizes(jx_lin2.jaxpr)), \
+            "baseline lost its cache-sized carry — tighten the tree assertion"
+
+
+def test_tree_draft_position_count_is_o_n_nodes():
+    """The KV-carrying draft processes each non-leaf node exactly once —
+    O(n_nodes) positions per launch — strictly fewer than the pre-carry
+    level-rescoring pass (O(sum-of-level-prefix-sizes)) for any schedule
+    deeper than one level."""
+    from repro.models.model import init_tree_draft_carry, tree_carry_nodes
+
+    cfg = smoke_config("tinyllama-1.1b")
+    for br in TOPOLOGIES + [(3, 2, 1), (2, 2, 2, 2)]:
+        topo = SP.tree_topology(br)
+        new = SP.tree_draft_position_count(br)
+        old = SP.tree_rescore_position_count(br)
+        f0, f1 = topo.level_nodes(topo.n_levels)
+        assert new == topo.n_nodes - (f1 - f0)  # every node but the leaves
+        assert new <= old
+        if topo.n_levels >= 2:
+            assert new < old, f"{br}: carry draft did not reduce positions"
+        # the carry allocation is exactly the processed-node count per layer
+        carry = init_tree_draft_carry(cfg, 2, topo, depth=1)
+        for leaf in jax.tree_util.tree_leaves(carry):
+            assert leaf.shape[2] == tree_carry_nodes(topo) == new
+    assert SP.tree_draft_position_count((2, 2)) == 3
+    assert SP.tree_rescore_position_count((2, 2)) == 4
+    assert SP.tree_draft_position_count((3, 2, 1)) == 10
+    assert SP.tree_rescore_position_count((3, 2, 1)) == 15
+
 
 def test_tree_draft_leaves_committed_cache_unchanged():
     """Value-level counterpart of the jaxpr check: a draft launch must not
