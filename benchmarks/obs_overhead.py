@@ -1,0 +1,136 @@
+"""Paired-sampling overhead gate for the observability layer.
+
+Two identical dense engines serve the same decode-heavy schedule — one with
+the default (disabled) trace recorder, one with tracing enabled — and every
+round measures one decode step of EACH, alternating which goes first so
+ambient machine noise (frequency scaling, cache state, GC) cancels instead
+of biasing one side. The gate statistic is the median of the per-pair
+step-time differences (each round's delta cancels that round's ambient
+noise) over the disabled p50: it must stay within 3% (``--gate`` asserts
+it; the plain run only reports). This is the
+acceptance bound the ISSUE sets for the tracing hot path: one predictable
+branch when disabled, and when enabled a couple of dict builds per launch —
+both invisible next to a model step.
+
+Results land in ``benchmarks/results/BENCH_obs.json``.
+
+  PYTHONPATH=src python benchmarks/obs_overhead.py [arch] [n_steps]
+  PYTHONPATH=src python benchmarks/obs_overhead.py --gate   # assert <3%
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, emit
+from repro.configs import smoke_config
+from repro.models.model import init_params
+from repro.runtime.observability import Observability
+from repro.runtime.serving import Request, ServingEngine
+
+BENCH_JSON = os.path.join(RESULTS_DIR, "BENCH_obs.json")
+TOLERANCE = 0.03  # <3% p50 decode-step overhead with tracing enabled
+
+
+def _engine(params, cfg, obs, batch: int, capacity: int) -> ServingEngine:
+    eng = ServingEngine(params, cfg, batch_size=batch,
+                        cache_capacity=capacity, prefill_threshold=1_000_000,
+                        observability=obs)
+    eng.warmup()
+    return eng
+
+
+def _fill(eng: ServingEngine, cfg, batch: int, new_tokens: int) -> None:
+    # short prompts (below the prefill threshold) + long generations keep
+    # every slot busy on the PLAIN decode path for the whole measurement
+    for i in range(batch):
+        eng.submit(Request(rid=i, prompt=(1 + i % (cfg.vocab_size - 1),),
+                           max_new_tokens=new_tokens))
+    eng.step()  # admit everything; first tick excluded from samples
+
+
+def run(arch: str = "tinyllama-1.1b", n_steps: int = 200, batch: int = 4,
+        capacity: int = 256, gate: bool = False) -> Dict[str, float]:
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    capacity = min(capacity, 8 + n_steps + 8)
+    new_tokens = capacity - 4  # never completes inside the sampled window
+
+    eng_off = _engine(params, cfg, Observability(), batch, capacity)
+    eng_on = _engine(params, cfg, Observability(trace=True), batch, capacity)
+    _fill(eng_off, cfg, batch, new_tokens)
+    _fill(eng_on, cfg, batch, new_tokens)
+    for _ in range(5):  # shared warmup: page in both engines' hot paths
+        eng_off.step()
+        eng_on.step()
+
+    off_ms: List[float] = []
+    on_ms: List[float] = []
+
+    def one(eng, out):
+        t0 = time.perf_counter()
+        eng.step()
+        out.append((time.perf_counter() - t0) * 1e3)
+
+    for i in range(n_steps):
+        if eng_off.n_active < batch or eng_on.n_active < batch:
+            break
+        # alternate measurement order so drift cancels across the pair
+        first, second = ((eng_off, off_ms), (eng_on, on_ms))[:: 1 if i % 2 == 0 else -1]
+        one(*first)
+        one(*second)
+
+    assert len(off_ms) >= 50, \
+        f"too few paired samples for a stable p50: {len(off_ms)}"
+    assert eng_on._rec.events, "the enabled recorder must have traced spans"
+    assert eng_off._rec.events == [], "the disabled recorder must stay empty"
+    p50_off = float(np.quantile(off_ms, 0.5, method="inverted_cdf"))
+    p50_on = float(np.quantile(on_ms, 0.5, method="inverted_cdf"))
+    # the gate statistic is the median of the PER-PAIR differences: each
+    # round measures both engines back to back, so the difference cancels
+    # whatever the machine was doing that round, where the two marginal
+    # p50s would each absorb it independently and jitter the ratio
+    delta_p50 = float(np.quantile(np.asarray(on_ms) - np.asarray(off_ms),
+                                  0.5, method="inverted_cdf"))
+    overhead = delta_p50 / p50_off
+
+    derived = {
+        "n_pairs": len(off_ms),
+        "disabled_p50_ms": round(p50_off, 4),
+        "enabled_p50_ms": round(p50_on, 4),
+        "disabled_p95_ms": round(float(np.quantile(off_ms, 0.95,
+                                                   method="inverted_cdf")), 4),
+        "enabled_p95_ms": round(float(np.quantile(on_ms, 0.95,
+                                                  method="inverted_cdf")), 4),
+        "paired_delta_p50_ms": round(delta_p50, 5),
+        "p50_overhead_frac": round(overhead, 5),
+        "tolerance": TOLERANCE,
+        "trace_events": len(eng_on._rec.events),
+        "gated": gate,
+    }
+    emit(f"obs_overhead/{cfg.name}", p50_on * 1e3, derived)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"arch": cfg.name, "batch": batch, **derived}, f, indent=2,
+                  sort_keys=True)
+    print(f"[obs_overhead] wrote {BENCH_JSON}")
+    if gate:
+        assert overhead <= TOLERANCE, (
+            f"tracing overhead gate: median paired delta {delta_p50:+.4f}ms "
+            f"on disabled p50 {p50_off:.4f}ms ({overhead:+.2%} > "
+            f"{TOLERANCE:.0%})")
+        print(f"[obs_overhead] gate OK: {overhead:+.2%} <= {TOLERANCE:.0%}")
+    return derived
+
+
+if __name__ == "__main__":
+    argv = [a for a in sys.argv[1:] if not a.startswith("--")]
+    arch = argv[0] if argv else "tinyllama-1.1b"
+    n = int(argv[1]) if len(argv) > 1 else 200
+    run(arch, n, gate="--gate" in sys.argv)

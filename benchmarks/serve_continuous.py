@@ -368,6 +368,9 @@ def _core_phases(cfg, params, record, n_requests, batch, capacity) -> None:
         "executables": engine.ctrl.stats["compiles"],
         "telemetry": {k: {kk: round(vv, 2) for kk, vv in v.items()}
                       for k, v in engine.ctrl.telemetry_summary().items()},
+        # full registry snapshot (counters / lazy gauges / histogram
+        # percentiles): the tracked observability surface of this run
+        "metrics": engine.export_metrics(),
     })
 
 

@@ -36,6 +36,13 @@
 #                                # failover, dense + paged, incl. a 2x4 CPU
 #                                # mesh subprocess) + snapshot/restore and
 #                                # seed fault_tolerance primitive tests
+#   scripts/ci.sh --obs-smoke    # additionally run the observability
+#                                # shard: registry/trace-recorder tests
+#                                # (percentiles vs numpy, Chrome trace
+#                                # schema + chaos token accounting,
+#                                # snapshot/restore metric carry, SLO
+#                                # catch-up) + the paired-sampling tracing
+#                                # overhead gate (<3% p50 decode step)
 #   scripts/ci.sh --fused-smoke  # additionally run the fused-superkernel
 #                                # shard: bit-exact fused-vs-unfused
 #                                # decode/verify/tree-verify equivalence +
@@ -58,6 +65,7 @@ TREE_SMOKE=0
 PAGED_SMOKE=0
 CHAOS_SMOKE=0
 FUSED_SMOKE=0
+OBS_SMOKE=0
 for arg in "$@"; do
     case "$arg" in
         --bench-smoke) BENCH_SMOKE=1 ;;
@@ -67,9 +75,31 @@ for arg in "$@"; do
         --paged-smoke) PAGED_SMOKE=1 ;;
         --chaos-smoke) CHAOS_SMOKE=1 ;;
         --fused-smoke) FUSED_SMOKE=1 ;;
+        --obs-smoke) OBS_SMOKE=1 ;;
         *) echo "ci.sh: unknown argument '$arg'" >&2; exit 2 ;;
     esac
 done
+
+if [ "$OBS_SMOKE" -eq 1 ]; then
+    echo "CI: obs-smoke shard (observability layer)"
+    OBS_TIMEOUT="${CI_OBS_TIMEOUT:-1200}"
+    # registry primitives (exact percentiles vs numpy, Prometheus/JSON
+    # export), Chrome trace schema + chaos-run token accounting,
+    # snapshot/restore metric carry, SLO failover catch-up
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$OBS_TIMEOUT" \
+        python -m pytest -q tests/test_observability.py; then
+        echo "CI: FAIL (observability tests)"
+        exit 1
+    fi
+    # paired-sampling tracing overhead gate: enabled p50 decode step must
+    # stay within 3% of disabled (writes BENCH_obs.json)
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" timeout "$OBS_TIMEOUT" \
+        python -m benchmarks.obs_overhead --gate; then
+        echo "CI: FAIL (tracing overhead gate)"
+        exit 1
+    fi
+    echo "CI: obs-smoke OK"
+fi
 
 if [ "$FUSED_SMOKE" -eq 1 ]; then
     echo "CI: fused-smoke shard (decode/verify superkernel)"

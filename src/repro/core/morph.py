@@ -96,12 +96,17 @@ class ModeTelemetry:
         return self._quantile(0.95)
 
     @property
+    def p99_s(self) -> float:
+        return self._quantile(0.99)
+
+    @property
     def tokens_per_s(self) -> float:
         return self.tokens / self.total_s if self.total_s > 0 else 0.0
 
     def summary(self) -> Dict[str, float]:
         return {"steps": self.steps, "tokens": self.tokens,
                 "p50_ms": self.p50_s * 1e3, "p95_ms": self.p95_s * 1e3,
+                "p99_ms": self.p99_s * 1e3,
                 "tokens_per_s": self.tokens_per_s}
 
     def state_dict(self) -> Dict:
@@ -148,10 +153,23 @@ class MorphController:
         self.stats = {"compiles": 0, "dispatches": 0, "switches": 0}
         self.telemetry: Dict[str, ModeTelemetry] = {m.name: ModeTelemetry()
                                                    for m in self.modes}
-        # (dispatch#, from, to) per set_mode change; bounded for long serves
-        self.switch_log: Deque[Tuple[int, str, str]] = deque(maxlen=4096)
+        # per-set_mode-change structured event stream; bounded for long
+        # serves. Lazy import: repro.runtime imports this module at package
+        # init, so the reverse import must wait until construction time.
+        from repro.runtime.observability import EventStream
+        self.switch_events = EventStream(
+            "controller_mode_switch", ("dispatch", "from_mode", "to_mode"))
         self.last_step_s = 0.0  # latency of the most recent timed_step
+        # injectable for deterministic tests / virtual-clock supervision
+        # (the serving engine points it at its Observability clock)
+        self.clock: Callable[[], float] = time.perf_counter
         self._mode = self.modes[-1]  # full model by default
+
+    @property
+    def switch_log(self):
+        """Legacy tuple view of ``switch_events``: (dispatch#, from, to)."""
+        from repro.runtime.observability import _TupleView
+        return _TupleView(self.switch_events)
 
     @property
     def mode(self) -> MorphMode:
@@ -162,8 +180,9 @@ class MorphController:
             raise KeyError(f"mode {mode.name} not in deployed mode table")
         if mode.name != self._mode.name:
             self.stats["switches"] += 1
-            self.switch_log.append(
-                (self.stats["dispatches"], self._mode.name, mode.name))
+            self.switch_events.emit(dispatch=self.stats["dispatches"],
+                                    from_mode=self._mode.name,
+                                    to_mode=mode.name)
         self._mode = mode
 
     def _get(self, mode: MorphMode) -> Callable:
@@ -223,10 +242,10 @@ class MorphController:
         """
         m = self._mode if mode is None else mode
         self.stats["dispatches"] += 1
-        t0 = time.perf_counter()
+        t0 = self.clock()
         out = self._get(m)(*args, **kw)
         jax.block_until_ready(out)
-        dt = time.perf_counter() - t0
+        dt = self.clock() - t0
         self.telemetry[m.name].record(dt, tokens)
         self.last_step_s = dt
         return out

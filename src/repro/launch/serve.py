@@ -31,6 +31,12 @@ timings are printed per failover). ``--deadline-s`` gives every request a
 TTL on the virtual serving clock; requests queued past it finish as
 ``expired`` instead of occupying slots.
 
+Observability: ``--trace-out trace.json`` records every launch and request
+lifecycle as Chrome trace-event JSON (open in Perfetto or chrome://tracing);
+``--metrics-dump`` prints the end-of-run metrics registry as Prometheus
+exposition text plus a JSON snapshot. Both survive failovers — the whole run
+shares one recorder/registry.
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
       --tokens 64 --switch-every 16 --mesh 2x4
@@ -38,6 +44,7 @@ Example:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -72,6 +79,7 @@ from repro.launch.mesh import make_serve_mesh
 from repro.models.model import init_params
 from repro.models.paged import PagedLayout
 from repro.runtime.fault_tolerance import ExecutorSupervisor, FailurePlan
+from repro.runtime.observability import Observability
 from repro.runtime.serving import (MeshExecutor, Request, ServingEngine,
                                    SLOPolicy)
 from repro.runtime.speculative import SpecConfig
@@ -143,6 +151,14 @@ def main(argv=None):
                          "a slower tick is treated as a hung executor — its "
                          "results are discarded and the tick is redone on a "
                          "rebuilt engine")
+    ap.add_argument("--trace-out", default="",
+                    help="enable the trace recorder and write Chrome "
+                         "trace-event JSON (open in Perfetto or "
+                         "chrome://tracing) to this path at end of run: "
+                         "per-launch spans + per-request lifecycle lanes")
+    ap.add_argument("--metrics-dump", action="store_true",
+                    help="print the end-of-run metrics registry as "
+                         "Prometheus exposition text plus a JSON snapshot")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -209,6 +225,10 @@ def main(argv=None):
             paged.validate(cfg, capacity)
         except ValueError as e:
             ap.error(str(e))
+    # one Observability shared by every engine this run builds (failover
+    # standbys included), so the trace and metrics cover the whole run
+    obs = Observability(trace=bool(args.trace_out))
+
     def build_engine():
         return ServingEngine(params, cfg, batch_size=args.batch,
                              cache_capacity=capacity, modes=modes,
@@ -216,7 +236,8 @@ def main(argv=None):
                              prefill_threshold=args.prefill_threshold,
                              speculative=speculative,
                              temperature=args.temperature, top_k=args.top_k,
-                             sample_seed=args.seed, paged=paged)
+                             sample_seed=args.seed, paged=paged,
+                             observability=obs)
 
     engine = build_engine()
     mesh_note = (f" mesh=dp{dp}xtp{tp} policy={engine.executor.policy}"
@@ -325,6 +346,18 @@ def main(argv=None):
                   f"peak {st['peak_in_use']} allocs {st['allocs']} "
                   f"radix hit-rate {st['radix_hit_rate'] * 100:.0f}% "
                   f"({st['radix_nodes']} nodes)")
+    if args.trace_out:
+        obs.recorder.write(args.trace_out)
+        n_ev = len(obs.recorder.events)
+        dropped = (f" ({obs.recorder.dropped} dropped at the event cap)"
+                   if obs.recorder.dropped else "")
+        print(f"[serve] wrote {n_ev} trace events{dropped} to "
+              f"{args.trace_out} (open in Perfetto / chrome://tracing)")
+    if args.metrics_dump:
+        print("[serve] metrics (prometheus):")
+        print(engine.metrics.prometheus_text(), end="")
+        print("[serve] metrics (json):")
+        print(json.dumps(engine.export_metrics(), indent=2, sort_keys=True))
     return 0
 
 

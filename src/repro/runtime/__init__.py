@@ -13,6 +13,13 @@ from repro.runtime.fault_tolerance import (
     TrainRunner,
     elastic_reshard,
 )
+from repro.runtime.observability import (
+    EventStream,
+    Histogram,
+    MetricsRegistry,
+    Observability,
+    TraceRecorder,
+)
 from repro.runtime.serving import (
     EngineSnapshot,
     LocalExecutor,
@@ -26,6 +33,11 @@ from repro.runtime.speculative import SpecConfig, SpecTelemetry
 
 __all__ = [
     "EngineSnapshot",
+    "EventStream",
+    "Histogram",
+    "MetricsRegistry",
+    "Observability",
+    "TraceRecorder",
     "ExecutorSupervisor",
     "LocalExecutor",
     "MeshExecutor",

@@ -13,7 +13,7 @@ contract for BOTH runtimes and lets tests *inject* the failures:
 * ``ExecutorSupervisor`` — the serving-side analog: wraps a ``ServingEngine``
   factory, snapshots host truth before every tick, converts launch failures
   (injected via ``FailurePlan.at_sites`` through the executor's
-  ``failure_hook``, or detected by a tick-wall-time timeout) into a failover:
+  ``launch_hook``, or detected by a tick-wall-time timeout) into a failover:
   build a fresh engine, ``restore`` the pre-tick snapshot (device caches
   re-materialize by token replay), redo the interrupted tick. The durable
   state is the snapshot, not a file — serving state is small and rebuilt
@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import DataConfig, make_batch
+from repro.runtime.observability import Observability
 
 
 class SimulatedFailure(RuntimeError):
@@ -189,11 +190,21 @@ class ExecutorSupervisor:
     re-drafts and re-verifies it. Requests observe only added latency.
 
     ``failure_plan.maybe_fail_site`` (and then ``launch_hook``) is armed as
-    the engine executor's ``failure_hook``, firing at every instrumented
-    launch boundary: ``decode``, ``paged_decode``, ``verify``,
-    ``tree_verify``, ``prefill``. Replay launches are deliberately NOT
-    instrumented, so a planned failure cannot re-fire mid-recovery; site
-    occurrence counts keep advancing across failovers (one global schedule).
+    the engine executor's ``launch_hook`` — the same seam the engine's trace
+    recorder observes — firing at every instrumented launch boundary:
+    ``decode``, ``paged_decode``, ``verify``, ``tree_verify``, ``prefill``.
+    Replay launches are deliberately NOT instrumented, so a planned failure
+    cannot re-fire mid-recovery; site occurrence counts keep advancing
+    across failovers (one global schedule).
+
+    Failovers land on the observability layer: a ``supervisor_failover``
+    event stream (``failover_log`` is a view of it) and a
+    ``failover_recovery_ms`` histogram the SLO policy reads to downshift
+    width during post-failover catch-up (``SLOPolicy.note_failover``).
+    ``observability`` defaults to the primary engine's, so recovery metrics
+    export from the same registry as the serving metrics; its clock times
+    detection/rebuild/replay, keeping chaos tests deterministic under an
+    injected clock.
     """
 
     def __init__(self, engine_factory: Callable[[], Any], *,
@@ -201,7 +212,8 @@ class ExecutorSupervisor:
                  tick_timeout_s: Optional[float] = None,
                  max_failovers: int = 8,
                  recover_on: Tuple[type, ...] = (SimulatedFailure,),
-                 launch_hook: Optional[Callable[[str], None]] = None):
+                 launch_hook: Optional[Callable[[str], None]] = None,
+                 observability: Optional[Observability] = None):
         self.factory = engine_factory
         self.plan = failure_plan
         self.tick_timeout_s = tick_timeout_s
@@ -209,14 +221,26 @@ class ExecutorSupervisor:
         self.recover_on = tuple(recover_on)
         self.launch_hook = launch_hook
         self.failovers = 0
-        self.failover_log: List[Dict[str, Any]] = []
         self._policy = None
         self._pending_first_token: Optional[Tuple[Dict[str, Any], float]] = None
         self.engine = engine_factory()
+        self.obs = observability or getattr(self.engine, "obs", None) \
+            or Observability()
+        self._clock = self.obs.clock
+        self.failover_events = self.obs.registry.events(
+            "supervisor_failover",
+            ("step", "cause", "detect_s", "rebuild_s", "replay_s",
+             "first_token_s"))
+        self.recovery_ms = self.obs.registry.histogram("failover_recovery_ms")
         self._arm()
 
+    @property
+    def failover_log(self):
+        """Structured failover entries (view of ``failover_events``)."""
+        return self.failover_events
+
     def _arm(self) -> None:
-        self.engine.executor.failure_hook = self._on_launch
+        self.engine.executor.launch_hook = self._on_launch
 
     def _on_launch(self, site: str) -> None:
         if self.plan is not None:
@@ -235,24 +259,29 @@ class ExecutorSupervisor:
             raise RuntimeError(
                 f"supervisor exceeded {self.max_failovers} failovers "
                 f"(last cause: {cause})")
-        t_detect = time.perf_counter()
+        t_detect = self._clock()
         # the failed engine's hook is disarmed so a lingering reference
         # can't keep consuming the plan's occurrence schedule
-        self.engine.executor.failure_hook = None
-        t0 = time.perf_counter()
+        self.engine.executor.launch_hook = None
+        t0 = self._clock()
         self.engine = self.factory()
-        rebuild_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
+        rebuild_s = self._clock() - t0
+        t0 = self._clock()
         self.engine.restore(snap)
-        replay_s = time.perf_counter() - t0
+        replay_s = self._clock() - t0
         self.engine.check_paged_invariants()
         self._arm()
+        recovery_ms = (rebuild_s + replay_s) * 1e3
+        self.recovery_ms.observe(recovery_ms)
         if self._policy is not None:
             self._policy.controller = self.engine.ctrl
+            note = getattr(self._policy, "note_failover", None)
+            if note is not None:
+                note(recovery_ms=recovery_ms)
         entry = dict(step=self.engine.step_count, cause=cause,
                      detect_s=detect_s, rebuild_s=rebuild_s,
                      replay_s=replay_s, first_token_s=None)
-        self.failover_log.append(entry)
+        self.failover_events.append(entry)
         self._pending_first_token = (entry, t_detect)
 
     def tick(self, now_s: float = 0.0) -> float:
@@ -265,14 +294,14 @@ class ExecutorSupervisor:
         snap = self.engine.snapshot()
         while True:
             gen0 = self.engine._generated_total()
-            t0 = time.perf_counter()
+            t0 = self._clock()
             try:
                 dt = self.engine.step(now_s=now_s)
             except self.recover_on as e:
                 self._failover(snap, f"{type(e).__name__}: {e}",
-                               time.perf_counter() - t0)
+                               self._clock() - t0)
                 continue
-            wall = time.perf_counter() - t0
+            wall = self._clock() - t0
             if self.tick_timeout_s is not None and wall > self.tick_timeout_s:
                 self._failover(
                     snap, f"tick wall time {wall:.3f}s exceeded timeout "
@@ -282,7 +311,7 @@ class ExecutorSupervisor:
         if (self._pending_first_token is not None
                 and self.engine._generated_total() > gen0):
             entry, t_detect = self._pending_first_token
-            entry["first_token_s"] = time.perf_counter() - t_detect
+            entry["first_token_s"] = self._clock() - t_detect
             self._pending_first_token = None
         return dt
 

@@ -88,6 +88,12 @@ class BlockAllocator:
         if self.refcount[pid] == 0:
             self._free.append(pid)
 
+    def metric_values(self) -> Dict[str, float]:
+        """Flat pool-occupancy gauges for a MetricsRegistry callback."""
+        return {"n_pages": self.n_pages, "in_use": self.n_in_use,
+                "free": self.n_free, "occupancy": self.occupancy(),
+                "peak_in_use": self.peak_in_use, "allocs": self.allocs}
+
 
 class _RadixNode:
     __slots__ = ("children", "page", "last_used")
@@ -229,3 +235,9 @@ class RadixCache:
                 "misses": self.misses,
                 "freeable": len(self.freeable_pages()),
                 "hit_rate": self.hits / total if total else 0.0}
+
+    def metric_values(self) -> Dict[str, float]:
+        """Flat radix-reuse gauges for a MetricsRegistry callback (same
+        values as ``stats`` — kept as the observability-facing alias so
+        export call sites read uniformly across allocator/radix/spec)."""
+        return self.stats()

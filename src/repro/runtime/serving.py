@@ -117,6 +117,8 @@ from repro.models.paged import (PagedLayout, adopt_paged_slot, copy_page,
                                 init_paged_cache)
 from repro.parallel import sharding as SH
 from repro.runtime import sampling
+from repro.runtime.observability import (MetricsRegistry, Observability,
+                                         _TupleView)
 from repro.runtime.paged_cache import BlockAllocator, RadixCache
 from repro.runtime.speculative import (SpecConfig, SpecTelemetry,
                                        draft_compile_key,
@@ -130,6 +132,13 @@ from repro.runtime.speculative import (SpecConfig, SpecTelemetry,
 
 
 SLO_CLASSES = ("interactive", "batch")
+
+
+def _shape_label(shape) -> str:
+    """Draft-shape label: ``k3`` linear lengths, ``t3x2x1`` tree schedules."""
+    if isinstance(shape, tuple):
+        return "t" + "x".join(str(b) for b in shape)
+    return f"k{shape}"
 
 
 # ---------------------------------------------------------------------------
@@ -223,7 +232,9 @@ class SLOPolicy:
                  batch_size: int, cache_capacity: int,
                  hw: HardwareSpec = V5E, min_samples: int = 3,
                  dp: int = 1, tp: int = 1, queue_gamma: float = 0.25,
-                 interactive_weight: float = 2.0):
+                 interactive_weight: float = 2.0,
+                 metrics: Optional[MetricsRegistry] = None,
+                 catchup_ticks: int = 8, catchup_gamma: float = 1.0):
         self.cfg = cfg
         self.controller = controller
         self.min_samples = min_samples
@@ -233,6 +244,16 @@ class SLOPolicy:
         # queued interactive request weighs than a batch one
         self.queue_gamma = queue_gamma
         self.interactive_weight = interactive_weight
+        # post-failover catch-up: for ``catchup_ticks`` choose() calls after
+        # a failover the effective budget is squeezed by the measured
+        # recovery latency (``failover_recovery_ms`` histogram p50 on
+        # ``metrics``), downshifting width while the engine re-earns the
+        # latency the recovery cost its in-flight requests
+        self.metrics = metrics
+        self.catchup_ticks = catchup_ticks
+        self.catchup_gamma = catchup_gamma
+        self._catchup_left = 0
+        self._last_recovery_ms = 0.0
         # inputs of the most recent choose() call, for admission-switch logs
         self.last_decision: Dict[str, float] = {}
         cell = ShapeCell("serve_step", seq_len=cache_capacity,
@@ -284,18 +305,58 @@ class SLOPolicy:
         latency-vs-throughput dual objective, applied at admission time).
         The decision inputs land in ``last_decision`` so the engine can log
         them on every admission switch.
+
+        During post-failover catch-up (``note_failover``) the budget is
+        squeezed further by the measured recovery latency amortized over the
+        catch-up window: recovery stole ``recovery_ms`` of serving time, so
+        the next ``catchup_ticks`` decisions act as if each tick owed back
+        its share — biasing toward narrower/shallower modes until the debt
+        drains. The penalty is recorded in ``last_decision`` and, when a
+        registry is attached, as an ``slo_catchup`` structured event.
         """
         pressure = self._queue_pressure(queue_depths)
         eff = budget_s / (1.0 + self.queue_gamma * pressure)
+        catchup_penalty = 0.0
+        if self._catchup_left > 0 and budget_s > 0:
+            debt_s = self._last_recovery_ms / 1e3 / max(self.catchup_ticks, 1)
+            catchup_penalty = min(self.catchup_gamma * debt_s / budget_s, 4.0)
+            eff /= (1.0 + catchup_penalty)
+            self._catchup_left -= 1
         mode = policy_for_budget(self.cfg, self.controller, eff,
                                  self.est_latency)
         self.last_decision = {
             "budget_s": budget_s, "effective_budget_s": eff,
             "queue_pressure": pressure, "mode": mode.name,
+            "catchup_penalty": catchup_penalty,
             "queued_interactive": (queue_depths or {}).get("interactive", 0),
             "queued_batch": (queue_depths or {}).get("batch", 0),
         }
+        if catchup_penalty > 0 and self.metrics is not None:
+            self.metrics.events(
+                "slo_catchup",
+                ("budget_s", "effective_budget_s", "catchup_penalty",
+                 "recovery_ms", "ticks_left", "mode"),
+            ).emit(budget_s=budget_s, effective_budget_s=eff,
+                   catchup_penalty=catchup_penalty,
+                   recovery_ms=self._last_recovery_ms,
+                   ticks_left=self._catchup_left, mode=mode.name)
         return mode
+
+    def note_failover(self, recovery_ms: Optional[float] = None) -> None:
+        """Start a catch-up window after an executor failover.
+
+        ``recovery_ms`` defaults to the ``failover_recovery_ms`` histogram
+        p50 on the attached registry — the supervisor records every recovery
+        there, so the policy reacts to the *typical* measured cost, not just
+        the last one.
+        """
+        if recovery_ms is None and self.metrics is not None:
+            h = self.metrics.histograms.get("failover_recovery_ms")
+            if h is not None and h.count:
+                recovery_ms = h.p50
+        self._last_recovery_ms = float(recovery_ms or 0.0)
+        self._catchup_left = self.catchup_ticks if self._last_recovery_ms > 0 \
+            else 0
 
     def choose_spec_k(self, ks: Sequence[int], accept_rate: float,
                       queue_depths: Optional[Dict[str, int]] = None) -> int:
@@ -384,19 +445,33 @@ class LocalExecutor:
     policy = "local"
     dp = 1
     tp = 1
-    # fault-tolerance seam: ``ExecutorSupervisor`` installs a callable here
-    # and the engine announces every launch boundary through
-    # ``check_failure`` — a chaos plan (or a real health check) can convert
-    # any site into an executor loss the supervisor recovers from
-    failure_hook: Optional[Callable[[str], None]] = None
+    # launch seam: one hook wraps all five launch boundaries ("decode",
+    # "paged_decode", "verify", "tree_verify", "prefill"). The
+    # ``ExecutorSupervisor`` installs chaos injection here and the engine's
+    # trace recorder observes the same announcements — a chaos plan (or a
+    # real health check) can convert any site into an executor loss the
+    # supervisor recovers from, and tracing sees exactly the launches the
+    # failure model covers.
+    launch_hook: Optional[Callable[[str], None]] = None
+
+    def launch(self, site: str) -> None:
+        """Announce a launch boundary to the installed hook, if any.
+        Raising from the hook simulates the executor dying before that
+        launch ran."""
+        if self.launch_hook is not None:
+            self.launch_hook(site)
+
+    # back-compat aliases: the seam predates the unified hook name
+    @property
+    def failure_hook(self) -> Optional[Callable[[str], None]]:
+        return self.launch_hook
+
+    @failure_hook.setter
+    def failure_hook(self, fn: Optional[Callable[[str], None]]) -> None:
+        self.launch_hook = fn
 
     def check_failure(self, site: str) -> None:
-        """Announce a launch boundary (``site`` in {"decode",
-        "paged_decode", "verify", "tree_verify", "prefill"}) to the
-        installed failure hook, if any. Raising from the hook simulates the
-        executor dying before that launch ran."""
-        if self.failure_hook is not None:
-            self.failure_hook(site)
+        self.launch(site)
 
     def bind(self, cfg: ModelConfig, batch_size: int, cache_capacity: int,
              paged: Optional[PagedLayout] = None,
@@ -870,17 +945,12 @@ class _GroupPaging:
                     f"admission budget {self.budget[i]}"
 
     def stats(self) -> Dict[str, float]:
-        out = {"n_pages": self.alloc.n_pages,
-               "in_use": self.alloc.n_in_use,
-               "free": self.alloc.n_free,
-               "occupancy": self.alloc.occupancy(),
-               "peak_in_use": self.alloc.peak_in_use,
-               "allocs": self.alloc.allocs,
-               "budgeted": self.budgeted,
-               "reservable": self.reservable}
+        out = dict(self.alloc.metric_values())
+        out["budgeted"] = self.budgeted
+        out["reservable"] = self.reservable
         if self.radix is not None:
             out.update({f"radix_{k}": v
-                        for k, v in self.radix.stats().items()})
+                        for k, v in self.radix.metric_values().items()})
         return out
 
 
@@ -953,6 +1023,7 @@ class EngineSnapshot:
     telemetry: Dict[str, Dict]
     spec_telemetry: Dict
     paging_stats: Dict[int, Dict[str, float]]
+    metrics: Optional[Dict] = None  # Observability.state_dict() of the source
 
 
 class ServingEngine:
@@ -969,6 +1040,26 @@ class ServingEngine:
     the executor.
     """
 
+    # engine counters live in the metrics registry; these attribute names
+    # are generated as property aliases over the named Counter objects after
+    # the class body (``self.prefills += 1`` keeps working everywhere).
+    # ``step_count`` and ``replay_chunk_launches`` stay plain attributes:
+    # the former is exported as a gauge, the latter is host-only replay
+    # diagnostics that snapshot/restore deliberately never carries.
+    _COUNTER_METRICS = {
+        "prefills": "engine_prefills",
+        "prefill_s": "engine_prefill_s",
+        "prefill_prompt_tokens": "engine_prefill_prompt_tokens",
+        "decode_launches": "engine_decode_launches",
+        "per_mode_launch_equiv": "engine_per_mode_launch_equiv",
+        "ticks_with_work": "engine_ticks_with_work",
+        "spec_draft_launches": "engine_spec_draft_launches",
+        "spec_verify_launches": "engine_spec_verify_launches",
+        "spec_tree_launches": "engine_spec_tree_launches",
+        "spec_generated_tokens": "engine_spec_generated_tokens",
+        "backpressure_events": "engine_backpressure_events",
+    }
+
     def __init__(self, params, cfg: ModelConfig, *, batch_size: int = 4,
                  cache_capacity: int = 64,
                  modes: Optional[Tuple[MorphMode, ...]] = None,
@@ -979,7 +1070,8 @@ class ServingEngine:
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0,
                  paged: Optional[PagedLayout] = None,
-                 fused: bool = False):
+                 fused: bool = False,
+                 observability: Optional[Observability] = None):
         if paged is not None:
             if cfg.is_encdec or cfg.frontend:
                 raise ValueError(
@@ -1030,6 +1122,19 @@ class ServingEngine:
         # compiled steps: same compile keys, same aux table, token-identical
         # output (see core.morph.make_serve_controller)
         self.fused = bool(fused)
+        # observability: one registry/recorder/clock shared down the stack.
+        # Engine counters live as registry Counters behind property aliases,
+        # the ad-hoc log deques as structured EventStreams, and every timing
+        # site reads obs.clock so an injected clock makes runs deterministic.
+        self.obs = observability or Observability()
+        self.metrics = self.obs.registry
+        self._rec = self.obs.recorder
+        self._clock = self.obs.clock
+        self._counter_objs = {m: self.metrics.counter(m)
+                              for m in self._COUNTER_METRICS.values()}
+        self._h_prefill = self.metrics.histogram("engine_prefill_ms")
+        self._h_decode = self.metrics.histogram("engine_decode_step_ms")
+        self._h_spec = self.metrics.histogram("engine_spec_tick_ms")
         self.executor = (executor or LocalExecutor()).bind(
             cfg, batch_size, cache_capacity, paged=paged, fused=self.fused)
         self.params = self.executor.place_params(params)
@@ -1065,8 +1170,26 @@ class ServingEngine:
         # acceptance telemetry per (depth, draft_depth, K) — feeds the SLO
         # policy's (draft_depth, K) choice and the fallback decision
         self.spec_telemetry: Dict[Tuple[int, int, int], SpecTelemetry] = {}
-        self.spec_fallback_log: Deque[Tuple[int, int, float, int]] = \
-            deque(maxlen=4096)  # (step, depth, window accept rate, off_until)
+        # structured event streams replacing the old ad-hoc log deques: one
+        # schema + one accessor each, same bounded memory (maxlen=4096); the
+        # legacy names remain as read-only property views below
+        reg = self.metrics
+        self._ev_spec_fallback = reg.events(
+            "engine_spec_fallback", ("step", "depth", "rate", "off_until"))
+        self._ev_backpressure = reg.events(
+            "engine_backpressure",
+            ("step", "rid", "need", "budgeted", "reservable"))
+        self._ev_admission_switch = reg.events(
+            "engine_admission_switch",
+            ("step", "from_mode", "to_mode", "queued_interactive",
+             "queued_batch"))
+        self._ev_admission_decision = reg.events(
+            "engine_admission_decision",
+            ("step", "budget_s", "effective_budget_s", "queue_pressure",
+             "mode", "queued_interactive", "queued_batch"))
+        reg.attach_events(self.ctrl.switch_events)
+        self.ctrl.clock = self._clock
+        reg.register_callback(self._metric_gauges, key="engine")
         self.spec_draft_launches = 0
         self.spec_verify_launches = 0
         self.spec_tree_launches = 0  # verify launches that scored a tree
@@ -1104,20 +1227,8 @@ class ServingEngine:
         self.completed: List[Request] = []
         # deadline-retired requests (terminal "expired" status, never admitted)
         self.expired: List[Request] = []
-        # graceful pool-exhaustion degradation: admissions the page budget
-        # deferred, logged instead of raising out of the tick loop
-        self.backpressure_log: Deque[Dict] = deque(maxlen=4096)
         self.backpressure_events = 0
         self.admission_mode: MorphMode = self.ctrl.modes[-1]
-        # (step#, from, to, queued interactive, queued batch) per switch;
-        # bounded like the controller's switch_log so an oscillating SLO
-        # budget can't grow it forever
-        self.admission_switch_log: Deque[Tuple[int, str, str, int, int]] = \
-            deque(maxlen=4096)
-        # budget-aware admission: the SLO policy's decision inputs (budget,
-        # queue-squeezed effective budget, per-class queue depths) recorded
-        # on every admission switch driven by run()'s policy loop
-        self.admission_decision_log: Deque[Dict] = deque(maxlen=4096)
         self.step_count = 0
         self.compiles_after_warmup: Optional[int] = None
         # launch accounting: actual launches (per depth group) vs what the
@@ -1141,6 +1252,64 @@ class ServingEngine:
                 self.executor.put, elastic.active_widths_batch(self.cfg, widths))
             self._active_cache[key] = active
         return active
+
+    # -- observability ------------------------------------------------------
+
+    @property
+    def spec_fallback_log(self):
+        """(step, depth, window accept rate, off_until) tuples — legacy view
+        of the ``engine_spec_fallback`` event stream."""
+        return _TupleView(self._ev_spec_fallback)
+
+    @property
+    def backpressure_log(self):
+        """Structured pool-exhaustion deferral events (dict rows)."""
+        return self._ev_backpressure
+
+    @property
+    def admission_switch_log(self):
+        """(step, from, to, queued interactive, queued batch) tuples —
+        legacy view of the ``engine_admission_switch`` event stream."""
+        return _TupleView(self._ev_admission_switch)
+
+    @property
+    def admission_decision_log(self):
+        """SLO policy decision inputs per admission switch (dict rows)."""
+        return self._ev_admission_decision
+
+    def _metric_gauges(self) -> Dict[str, float]:
+        """Export-time gauge callback: queue/slot occupancy, per-mode
+        latency percentiles, page-pool + radix accounting, and speculative
+        acceptance — pulled lazily so hot paths never push them."""
+        out = {
+            "engine_step_count": float(self.step_count),
+            "engine_active_slots": float(self.n_active),
+            "engine_queued_interactive":
+                float(len(self._queues["interactive"])),
+            "engine_queued_batch": float(len(self._queues["batch"])),
+            "engine_completed": float(len(self.completed)),
+            "engine_expired": float(len(self.expired)),
+        }
+        for name, t in self.ctrl.telemetry.items():
+            if t.steps:
+                out[f"mode_{name}_p50_ms"] = t.p50_s * 1e3
+                out[f"mode_{name}_p95_ms"] = t.p95_s * 1e3
+                out[f"mode_{name}_p99_ms"] = t.p99_s * 1e3
+        for d, stats in self.page_pool_stats().items():
+            out.update({f"kv_pool_d{d}_{k}": float(v)
+                        for k, v in stats.items()})
+        for (d, dd, s), t in self.spec_telemetry.items():
+            if t.launches:
+                out.update(t.metric_values(f"spec_d{d}_{_shape_label(s)}"))
+        return out
+
+    def export_metrics(self, events: bool = False) -> Dict:
+        """JSON-shaped snapshot of the full metrics registry."""
+        return self.metrics.to_json(events=events)
+
+    def export_trace(self) -> Dict:
+        """Chrome trace-event JSON of everything recorded so far."""
+        return self._rec.export_chrome_trace()
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -1250,6 +1419,10 @@ class ServingEngine:
                         f"{resv} are reservable (raise --kv-pages or shrink "
                         f"the request)")
         self._queues[req.slo_class].append(req)
+        if self._rec.enabled:
+            self._rec.request_begin(req.rid, slo_class=req.slo_class,
+                                    prompt_len=len(req.prompt),
+                                    max_new_tokens=req.max_new_tokens)
 
     def _worst_case_pages(self, g: _DepthGroup, req: Request) -> int:
         """Pages slot-admitting ``req`` into ``g`` can ever map at once.
@@ -1290,9 +1463,11 @@ class ServingEngine:
 
     def set_admission_mode(self, mode: MorphMode) -> None:
         if mode.name != self.admission_mode.name:
-            self.admission_switch_log.append(
-                (self.step_count, self.admission_mode.name, mode.name,
-                 len(self._queues["interactive"]), len(self._queues["batch"])))
+            self._ev_admission_switch.emit(
+                step=self.step_count, from_mode=self.admission_mode.name,
+                to_mode=mode.name,
+                queued_interactive=len(self._queues["interactive"]),
+                queued_batch=len(self._queues["batch"]))
             # the policy decision is the real "mode switch" — route it
             # through the controller so its switch stats/log record it
             # (group-drain dispatches in step() deliberately don't)
@@ -1326,6 +1501,9 @@ class ServingEngine:
                     r.status = "expired"
                     r.finished_s = now_s
                     self.expired.append(r)
+                    if self._rec.enabled:
+                        self._rec.request_end(r.rid, "expired",
+                                              tokens=len(r.generated))
                 else:
                     kept.append(r)
             self._queues[cls] = kept
@@ -1357,6 +1535,11 @@ class ServingEngine:
             req.status = "active"
             req.mode_name = self.admission_mode.name
             req.admitted_step = self.step_count
+            if self._rec.enabled:
+                self._rec.request_event(req.rid, "admit",
+                                        step=self.step_count, slot=slot,
+                                        depth=g.depth,
+                                        width=self.admission_mode.width)
             if self._use_prefill(req):
                 prefills.append((slot, req))
             else:
@@ -1379,6 +1562,9 @@ class ServingEngine:
         g.slots[slot] = None
         if g.paging is not None:
             g.paging.release(slot)
+        if self._rec.enabled:
+            self._rec.request_end(req.rid, "done",
+                                  tokens=len(req.generated))
 
     def _prefill_launch(self, g: _DepthGroup, slot: int,
                         prompt: Tuple[int, ...]):
@@ -1469,8 +1655,8 @@ class ServingEngine:
     def _admit_prefill(self, g: _DepthGroup, slot: int, req: Request,
                        now_s: float) -> None:
         """Consume the whole prompt in one compiled prefill + adoption."""
-        self.executor.check_failure("prefill")
-        t0 = time.perf_counter()
+        self.executor.launch("prefill")
+        t0 = self._clock()
         if g.paging is not None:
             logits = self._prefill_launch_paged(g, slot, req.prompt)
         else:
@@ -1487,11 +1673,20 @@ class ServingEngine:
         else:
             nxt = int(np.asarray(jnp.argmax(logits[0, 0, : self.cfg.vocab_size])))
         jax.block_until_ready(g.cache)
-        self.prefill_s += time.perf_counter() - t0
+        t1 = self._clock()
+        self.prefill_s += t1 - t0
         self.prefills += 1
         self.prefill_prompt_tokens += len(req.prompt)
+        self._h_prefill.observe((t1 - t0) * 1e3)
         req.fed = len(req.prompt)
         req.generated.append(nxt)
+        if self._rec.enabled:
+            self._rec.launch("prefill", t0, t1, depth=g.depth,
+                             rids=[req.rid], occupancy=1, tokens=1,
+                             key=[len(req.prompt), g.depth])
+            self._rec.request_event(req.rid, "prefill", t=t1,
+                                    prompt_tokens=len(req.prompt))
+            self._rec.request_event(req.rid, "first_token", t=t1)
         if req.done:
             self._complete(g, slot, req, now_s)
 
@@ -1539,11 +1734,11 @@ class ServingEngine:
         for slot bookkeeping."""
         plan = self._spec_plan[g.depth]
         kind, shape = sel
-        # failure boundary BEFORE any host page bookkeeping mutates: an
+        site = "tree_verify" if kind == "tree" else "verify"
+        # launch boundary BEFORE any host page bookkeeping mutates: an
         # injected loss here leaves the tick entirely un-executed, which is
         # what makes the supervisor's pre-tick snapshot an exact replay point
-        self.executor.check_failure("tree_verify" if kind == "tree"
-                                    else "verify")
+        self.executor.launch(site)
         if kind == "tree":
             draft = self.ctrl.aux_step(
                 tree_draft_compile_key(plan.draft_depth, shape))
@@ -1576,7 +1771,7 @@ class ServingEngine:
                         g.cache, self.executor.put(np.int32(src)),
                         self.executor.put(np.int32(dst)))
             extra = (self.executor.put(pg.table[:, :pg.cap_pages].copy()),)
-        t0 = time.perf_counter()
+        t0 = self._clock()
         if kind == "tree":
             ttoks, dlg = draft(self.params, g.cache, tok_op, active, g.keys,
                                self._temp_op, s_op, *extra)
@@ -1593,7 +1788,7 @@ class ServingEngine:
         out_h = np.asarray(out)
         n_acc_h = np.asarray(n_acc)
         jax.block_until_ready(g.cache)
-        dt = time.perf_counter() - t0
+        dt = self._clock() - t0
         self.ctrl.stats["dispatches"] += 2
         self.ctrl.last_step_s = dt
         self.spec_draft_launches += 1
@@ -1606,6 +1801,8 @@ class ServingEngine:
             # (free slots drift harmlessly — admission resets both counters)
             pg.host_pos += np.asarray(n_acc_h, np.int64) + 1
 
+        rec_on = self._rec.enabled
+        rids = [g.slots[i].rid for i in active_ix] if rec_on else None
         produced = 0
         for i in active_ix:
             req = g.slots[i]
@@ -1616,12 +1813,23 @@ class ServingEngine:
                 if req.fed >= len(req.prompt):
                     req.generated.append(int(out_h[i, j]))
                     produced += 1
+                    if rec_on and len(req.generated) == 1:
+                        self._rec.request_event(req.rid, "first_token")
             if req.done:
                 self._complete(g, i, req, now_s)
             elif pg is not None:
                 # rollback: pages grown for rejected draft positions free
                 pg.trim(i)
         self.spec_generated_tokens += produced
+        self._h_spec.observe(dt * 1e3)
+        if rec_on:
+            self._rec.launch(
+                site, t0, t0 + dt, depth=g.depth, rids=rids,
+                occupancy=len(active_ix), tokens=produced,
+                widths=[g.widths[i] for i in active_ix],
+                key=list(tree_verify_compile_key(g.depth, shape)
+                         if kind == "tree"
+                         else verify_compile_key(g.depth, shape)))
 
         # speculative tick wall time lives in the SPEC telemetry only: the
         # controller's per-mode p50 is the SLO policy's per-decode-step
@@ -1647,9 +1855,10 @@ class ServingEngine:
             # acceptance collapsed: drafts cost launches without yielding
             # tokens — fall back to plain stepping, retry after the cooloff
             g.spec_off_until = self.step_count + spec.cooloff_ticks
-            self.spec_fallback_log.append(
-                (self.step_count, g.depth,
-                 float(np.mean(g.accept_window)), g.spec_off_until))
+            self._ev_spec_fallback.emit(
+                step=self.step_count, depth=g.depth,
+                rate=float(np.mean(g.accept_window)),
+                off_until=g.spec_off_until)
             g.accept_window.clear()
         return dt
 
@@ -1670,7 +1879,7 @@ class ServingEngine:
             if g.paging is not None:
                 spent += self._paged_tick(g, active_ix, now_s)
                 continue
-            self.executor.check_failure("decode")
+            self.executor.launch("decode")
             toks = np.zeros((self.batch_size, 1), np.int32)
             for i in active_ix:
                 toks[i, 0] = g.slots[i].next_input()
@@ -1679,10 +1888,14 @@ class ServingEngine:
             # launch's active compute
             w_max = max(g.widths[i] for i in active_ix)
             mode = self._mode_by_dw[(g.depth, w_max)]
+            rec_on = self._rec.enabled
+            rids = [g.slots[i].rid for i in active_ix] if rec_on else None
+            t0 = self._clock() if rec_on else 0.0
             logits, g.cache = self.ctrl.timed_step(
                 self.params, g.cache, self.executor.put(toks), active,
                 mode=mode, tokens=len(active_ix))
             spent += self.ctrl.last_step_s
+            self._h_decode.observe(self.ctrl.last_step_s * 1e3)
             self.decode_launches += 1
             self.per_mode_launch_equiv += len(
                 {(g.depth, g.widths[i]) for i in active_ix})
@@ -1693,6 +1906,7 @@ class ServingEngine:
             else:
                 nxt = np.asarray(
                     jnp.argmax(logits[:, 0, : self.cfg.vocab_size], axis=-1))
+            produced = 0
             for i in active_ix:
                 req = g.slots[i]
                 req.fed += 1
@@ -1701,8 +1915,17 @@ class ServingEngine:
                 # also yields the first one)
                 if req.fed >= len(req.prompt) and not req.done:
                     req.generated.append(int(nxt[i]))
+                    produced += 1
+                    if rec_on and len(req.generated) == 1:
+                        self._rec.request_event(req.rid, "first_token")
                 if req.done:
                     self._complete(g, i, req, now_s)
+            if rec_on:
+                self._rec.launch(
+                    "decode", t0, t0 + self.ctrl.last_step_s, depth=g.depth,
+                    rids=rids, occupancy=len(active_ix), tokens=produced,
+                    widths=[g.widths[i] for i in active_ix],
+                    key=["decode", g.depth])
         self.ticks_with_work += ticked
         self.step_count += 1
         return spent
@@ -1717,7 +1940,7 @@ class ServingEngine:
         the smallest compiled table width covering every active slot, so
         variable-length slots re-trace nothing.
         """
-        self.executor.check_failure("paged_decode")
+        self.executor.launch("paged_decode")
         pg = g.paging
         needed = 1
         for i in active_ix:
@@ -1738,13 +1961,16 @@ class ServingEngine:
         mode = self._mode_by_dw[(g.depth, w_max)]
         fn = self.ctrl.aux_step(paged_decode_compile_key(g.depth, bucket))
         self.ctrl.stats["dispatches"] += 1
-        t0 = time.perf_counter()
+        rec_on = self._rec.enabled
+        rids = [g.slots[i].rid for i in active_ix] if rec_on else None
+        t0 = self._clock()
         logits, g.cache = fn(self.params, g.cache, self.executor.put(toks),
                              active, pages_op)
         jax.block_until_ready((logits, g.cache))
-        dt = time.perf_counter() - t0
+        dt = self._clock() - t0
         self.ctrl.telemetry[mode.name].record(dt, len(active_ix))
         self.ctrl.last_step_s = dt
+        self._h_decode.observe(dt * 1e3)
         pg.host_pos += 1  # mirror the device counter (ALL slots advance)
         self.decode_launches += 1
         self.per_mode_launch_equiv += len(
@@ -1756,13 +1982,23 @@ class ServingEngine:
         else:
             nxt = np.asarray(
                 jnp.argmax(logits[:, 0, : self.cfg.vocab_size], axis=-1))
+        produced = 0
         for i in active_ix:
             req = g.slots[i]
             req.fed += 1
             if req.fed >= len(req.prompt) and not req.done:
                 req.generated.append(int(nxt[i]))
+                produced += 1
+                if rec_on and len(req.generated) == 1:
+                    self._rec.request_event(req.rid, "first_token")
             if req.done:
                 self._complete(g, i, req, now_s)
+        if rec_on:
+            self._rec.launch(
+                "paged_decode", t0, t0 + dt, depth=g.depth, rids=rids,
+                occupancy=len(active_ix), tokens=produced, bucket=bucket,
+                widths=[g.widths[i] for i in active_ix],
+                key=list(paged_decode_compile_key(g.depth, bucket)))
         return dt
 
     # -- page-pool accounting ----------------------------------------------
@@ -1841,6 +2077,7 @@ class ServingEngine:
             telemetry=self.ctrl.telemetry_state(),
             spec_telemetry=copy.deepcopy(self.spec_telemetry),
             paging_stats=self.page_pool_stats(),
+            metrics=self.obs.state_dict(),
         )
 
     def restore(self, snap: EngineSnapshot) -> None:
@@ -1911,16 +2148,39 @@ class ServingEngine:
         self.spec_tree_launches = c["spec_tree_launches"]
         self.spec_generated_tokens = c["spec_generated_tokens"]
         self.backpressure_events = c["backpressure_events"]
-        self.admission_switch_log = deque(snap.logs["admission_switch_log"],
-                                          maxlen=4096)
-        self.admission_decision_log = deque(
-            copy.deepcopy(snap.logs["admission_decision_log"]), maxlen=4096)
-        self.spec_fallback_log = deque(snap.logs["spec_fallback_log"],
-                                       maxlen=4096)
-        self.backpressure_log = deque(
-            copy.deepcopy(snap.logs["backpressure_log"]), maxlen=4096)
+        sw = self._ev_admission_switch
+        sw.rows = deque((dict(zip(sw.fields, t))
+                         for t in snap.logs["admission_switch_log"]),
+                        maxlen=sw.rows.maxlen)
+        ad = self._ev_admission_decision
+        ad.rows = deque(copy.deepcopy(snap.logs["admission_decision_log"]),
+                        maxlen=ad.rows.maxlen)
+        fb = self._ev_spec_fallback
+        fb.rows = deque((dict(zip(fb.fields, t))
+                         for t in snap.logs["spec_fallback_log"]),
+                        maxlen=fb.rows.maxlen)
+        bp = self._ev_backpressure
+        bp.rows = deque(copy.deepcopy(snap.logs["backpressure_log"]),
+                        maxlen=bp.rows.maxlen)
         self.ctrl.load_telemetry_state(snap.telemetry)
         self.spec_telemetry = copy.deepcopy(snap.spec_telemetry)
+        if snap.metrics is not None:
+            # metrics/trace state come back wholesale LAST so any registry
+            # updates issued by the replay above are discarded — the redone
+            # tick re-earns them, keeping post-recovery exports equal to a
+            # fault-free run's
+            self.obs.load_state(snap.metrics)
+        # the gauge callback closure must be THIS engine's (a standby that
+        # absorbed the snapshot, not the dead source); key replacement evicts
+        # any stale registration sharing the registry
+        self.metrics.register_callback(self._metric_gauges, key="engine")
+        if self._rec.enabled:
+            for g in self.groups.values():
+                for r in g.slots:
+                    if r is not None:
+                        self._rec.request_event(
+                            r.rid, "failover_replay",
+                            committed=r.fed, generated=len(r.generated))
 
     def _replay_prefill(self, g: _DepthGroup, slot: int,
                         req: Request) -> None:
@@ -2274,12 +2534,21 @@ class ServingEngine:
     def spec_telemetry_summary(self) -> Dict[str, Dict[str, float]]:
         """Acceptance telemetry per (depth, draft_depth, draft shape) path
         (``k...`` linear draft lengths, ``t...`` tree branching schedules)."""
-
-        def label(shape) -> str:
-            if isinstance(shape, tuple):
-                return "t" + "x".join(str(b) for b in shape)
-            return f"k{shape}"
-
-        return {f"d{d}<-d{dd}{label(s)}": t.summary()
+        return {f"d{d}<-d{dd}{_shape_label(s)}": t.summary()
                 for (d, dd, s), t in self.spec_telemetry.items()
                 if t.launches}
+
+
+def _counter_property(metric: str) -> property:
+    def _get(self):
+        return self._counter_objs[metric].value
+
+    def _set(self, v):
+        self._counter_objs[metric].set(v)
+
+    return property(_get, _set)
+
+
+for _attr, _metric in ServingEngine._COUNTER_METRICS.items():
+    setattr(ServingEngine, _attr, _counter_property(_metric))
+del _attr, _metric

@@ -633,6 +633,16 @@ class SpecTelemetry:
             out["draft_nodes"] = self.nodes
         return out
 
+    def metric_values(self, prefix: str) -> Dict[str, float]:
+        """Flat ``{name: value}`` gauges for a MetricsRegistry callback."""
+        return {
+            f"{prefix}_launches": float(self.launches),
+            f"{prefix}_accept_rate": self.accept_rate,
+            f"{prefix}_accepted_per_launch": self.accepted_per_launch,
+            f"{prefix}_tokens_per_launch": self.tokens_per_launch,
+            f"{prefix}_tokens_per_slot_launch": self.tokens_per_slot_launch,
+        }
+
 
 def expected_tokens_per_launch(accept_rate: float, k: int) -> float:
     """E[tokens emitted per verify launch] for i.i.d. acceptance ``a``:
