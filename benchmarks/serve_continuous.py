@@ -47,10 +47,21 @@ which must happen before jax initializes — hence the import-time check.
      asserts token identity + zero superkernel re-traces after warmup.
      Runs alone via ``--fused`` (the ci.sh --fused-smoke entry point).
 
+  11. autoscale       -> a two-phase traffic shift (dense fast arrivals,
+     then sparse slow ones) served by a static SLOPolicy baseline and by
+     the online NeuroForge autoscaler (live MOGA over the executable
+     pool); asserts bit-identical committed streams, at least one adopted
+     + one retired executable under the compile-table budget, and zero
+     serving-tick stalls; reports frontier generations, compile-table
+     occupancy and tokens/s for both policies.
+     Runs alone via ``--autoscale`` (the ci.sh --autoscale-smoke entry
+     point).
+
   PYTHONPATH=src python benchmarks/serve_continuous.py [arch] [n_requests]
   PYTHONPATH=src python benchmarks/serve_continuous.py --mesh [arch] [n_requests]
   PYTHONPATH=src python benchmarks/serve_continuous.py --failover [arch] [n_requests]
   PYTHONPATH=src python benchmarks/serve_continuous.py --fused [arch] [n_requests]
+  PYTHONPATH=src python benchmarks/serve_continuous.py --autoscale [arch] [n_requests]
 """
 from __future__ import annotations
 
@@ -96,7 +107,7 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         bench[name.rsplit("/", 1)[-1]] = derived
         emit(name, us, derived)
 
-    unknown = set(phases) - {"core", "failover", "fused"}
+    unknown = set(phases) - {"core", "failover", "fused", "autoscale"}
     if unknown:
         raise ValueError(f"unknown benchmark phases: {sorted(unknown)}")
     if "core" in phases:
@@ -105,6 +116,8 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 24,
         _failover_phase(cfg, params, record, n_requests, batch, capacity)
     if "fused" in phases:
         _fused_phase(cfg, params, record, n_requests, batch, capacity)
+    if "autoscale" in phases:
+        _autoscale_phase(cfg, params, record, n_requests, batch, capacity)
 
     # the tracked serving baseline: every phase's derived metrics, one file.
     # Merged with what's already on disk so a phase-subset run (ci.sh
@@ -502,6 +515,99 @@ def _fused_phase(cfg, params, record, n_requests, batch, capacity) -> None:
     })
 
 
+def _autoscale_phase(cfg, params, record, n_requests, batch, capacity) -> None:
+    """Online NeuroForge autoscaler under a mid-run traffic shift.
+
+    A speculative engine serves dense fast arrivals then sparse slow ones,
+    once under a static fixed-mode SLOPolicy and once under the
+    AutoscalePolicy (live MOGA every tick, candidate K=4 beyond the
+    hand-warmed K=2, compile-table budget one above warmup). Asserts the
+    acceptance criteria of the autoscaler PR — adoption of a design point
+    that was not hand-warmed, retirement of a cold executable back under
+    the budget, bit-identical committed streams, zero serving-tick
+    stalls — and reports the frontier/table dynamics + tokens/s of both."""
+    import threading
+    import time
+    from dataclasses import replace as _replace
+
+    from repro.runtime.autoscale import (AutoscaleConfig, AutoscalePolicy,
+                                         Autoscaler)
+
+    def traces():  # Requests are stateful: fresh per engine
+        t1 = poisson_trace(max(8, n_requests // 2), rate_per_s=200.0, seed=61,
+                           new_tokens=(4, 8), vocab=cfg.vocab_size)
+        t2 = [_replace(r, rid=r.rid + 1000)
+              for r in poisson_trace(max(6, n_requests // 3),
+                                     rate_per_s=30.0, seed=62,
+                                     new_tokens=(4, 8), vocab=cfg.vocab_size)]
+        return t1, t2
+
+    def engine():
+        eng = ServingEngine(params, cfg, batch_size=batch,
+                            cache_capacity=capacity, prefill_threshold=4,
+                            speculative=SpecConfig(ks=(2,)))
+        eng.warmup()
+        return eng
+
+    base = engine()
+    pol0 = SLOPolicy(cfg, base.ctrl, batch_size=batch,
+                     cache_capacity=capacity)
+    t1, t2 = traces()
+    s1 = base.run(t1, policy=pol0, budget_fn=lambda t: 0.5)
+    s2 = base.run(t2, policy=pol0, budget_fn=lambda t: 0.5)
+    base_busy = s1["busy_s"] + s2["busy_s"]
+    want = {r.rid: tuple(r.generated) for r in base.completed}
+    assert base.ctrl.stats["compiles"] == base.compiles_after_warmup
+
+    eng = engine()
+    budget = eng.compiles_after_warmup + 1  # adopting K=4 adds two keys
+    asc = Autoscaler(AutoscaleConfig(interval_ticks=1, table_budget=budget,
+                                     spec_ks=(4,), pop_size=8,
+                                     generations=2, seed=0)).bind(eng)
+    policy = AutoscalePolicy(cfg, eng.ctrl, autoscaler=asc,
+                             batch_size=batch, cache_capacity=capacity,
+                             metrics=eng.metrics,
+                             pinned_mode=base.admission_mode)
+    try:
+        t1, t2 = traces()
+        a1 = eng.run(t1, policy=policy, budget_fn=lambda t: 0.5)
+        deadline = time.monotonic() + 120.0
+        while asc._pending and time.monotonic() < deadline:
+            asc._drain_publish()  # publish on this (the serving) thread
+            time.sleep(0.05)
+        asc._drain_publish()
+        a2 = eng.run(t2, policy=policy, budget_fn=lambda t: 0.5)
+        auto_busy = a1["busy_s"] + a2["busy_s"]
+        got = {r.rid: tuple(r.generated) for r in eng.completed}
+        assert got == want, \
+            "autoscaled serving must be token-identical to the static policy"
+        assert asc.stats["published"] >= 1, asc.stats
+        assert asc.stats["retired"] >= 1, asc.stats
+        assert eng.ctrl.compile_table_size <= budget
+        assert asc.stats["tick_stalls"] == 0
+        assert asc.worker_idents and \
+            threading.get_ident() not in asc.worker_idents
+        gen = sum(len(r.generated) for r in eng.completed)
+        record(f"serve_continuous/{cfg.name}/autoscale", 0.0, {
+            "token_identical": True,
+            "tokens_per_s_autoscaled": round(gen / auto_busy, 1)
+            if auto_busy else 0.0,
+            "tokens_per_s_static": round(gen / base_busy, 1)
+            if base_busy else 0.0,
+            "frontier_generations": asc.stats["generations"],
+            "front_size": len(asc.front),
+            "published_units": asc.stats["published"],
+            "published_keys": asc.stats["published_keys"],
+            "retired_units": asc.stats["retired"],
+            "compile_table": eng.ctrl.compile_table_size,
+            "compile_table_budget": budget,
+            "tick_stalls": asc.stats["tick_stalls"],
+            "executables": eng.ctrl.stats["compiles"],
+        })
+    finally:
+        asc.close()
+
+
 def run_mesh(arch: str = "tinyllama-1.1b", n_requests: int = 12,
              batch: int = 4, capacity: int = 32) -> None:
     """Sharded axis: one trace, served at dp x tp in {1x1, 2x4, 8x1}.
@@ -563,5 +669,7 @@ if __name__ == "__main__":
         run(arch, n, phases=("failover",))
     elif "--fused" in sys.argv:
         run(arch, n, phases=("fused",))
+    elif "--autoscale" in sys.argv:
+        run(arch, n, phases=("autoscale",))
     else:
         run(arch, n)

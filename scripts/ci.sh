@@ -51,6 +51,14 @@
 #                                # path), and the kernel bench with a
 #                                # fused <= unfused step-latency gate on
 #                                # the CPU ref path
+#   scripts/ci.sh --autoscale-smoke  # additionally run the online-
+#                                # autoscaler shard: the adopt/retire
+#                                # lifecycle tests (dense + paged + 2x4
+#                                # mesh subprocess, bit-identity + zero
+#                                # tick stalls), the MOGA property /
+#                                # DSE-bugfix regression tests, and the
+#                                # autoscale serving phase recorded into
+#                                # BENCH_serving.json
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -66,6 +74,7 @@ PAGED_SMOKE=0
 CHAOS_SMOKE=0
 FUSED_SMOKE=0
 OBS_SMOKE=0
+AUTOSCALE_SMOKE=0
 for arg in "$@"; do
     case "$arg" in
         --bench-smoke) BENCH_SMOKE=1 ;;
@@ -76,6 +85,7 @@ for arg in "$@"; do
         --chaos-smoke) CHAOS_SMOKE=1 ;;
         --fused-smoke) FUSED_SMOKE=1 ;;
         --obs-smoke) OBS_SMOKE=1 ;;
+        --autoscale-smoke) AUTOSCALE_SMOKE=1 ;;
         *) echo "ci.sh: unknown argument '$arg'" >&2; exit 2 ;;
     esac
 done
@@ -145,6 +155,32 @@ PY
         exit 1
     fi
     echo "CI: fused-smoke OK"
+fi
+
+if [ "$AUTOSCALE_SMOKE" -eq 1 ]; then
+    echo "CI: autoscale-smoke shard (online NeuroForge autoscaler)"
+    AUTOSCALE_TIMEOUT="${CI_AUTOSCALE_TIMEOUT:-1200}"
+    # adopt/retire lifecycle under a traffic shift (dense + paged + 2x4
+    # CPU mesh subprocess): background publish_aux adoption, cold-unit
+    # retirement under the compile-table budget, bit-identical committed
+    # streams, zero serving-tick stalls, snapshot/restore carry — plus the
+    # MOGA property tests and the DSE bugfix regressions
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        timeout "$AUTOSCALE_TIMEOUT" \
+        python -m pytest -q tests/test_autoscale.py tests/test_properties.py; then
+        echo "CI: FAIL (autoscaler / MOGA tests)"
+        exit 1
+    fi
+    # autoscale phase of the serving benchmark (frontier generations,
+    # compile-table occupancy, tokens/s vs the static-policy baseline,
+    # recorded into benchmarks/results/BENCH_serving.json)
+    if ! PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        timeout "$AUTOSCALE_TIMEOUT" \
+        python -c "from benchmarks import serve_continuous; serve_continuous.run(n_requests=8, phases=('autoscale',))"; then
+        echo "CI: FAIL (serve_continuous autoscale bench-smoke)"
+        exit 1
+    fi
+    echo "CI: autoscale-smoke OK"
 fi
 
 if [ "$CHAOS_SMOKE" -eq 1 ]; then

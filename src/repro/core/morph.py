@@ -150,6 +150,12 @@ class MorphController:
         # auxiliary executables (e.g. speculative draft/verify steps) share
         # the compile cache, compile counter and warmup with the mode table
         self._aux_factories: Dict[Hashable, Callable[[], Callable]] = {}
+        # builder kinds the serving wiring exposes for post-warmup
+        # registration (autoscaler frontier points); see make_serve_controller
+        self.aux_builders: Dict[str, Callable] = {}
+        # dispatch count at each executable's last use — the autoscaler's
+        # coldness signal for compile-table eviction
+        self.last_dispatch: Dict[Hashable, int] = {}
         self.stats = {"compiles": 0, "dispatches": 0, "switches": 0}
         self.telemetry: Dict[str, ModeTelemetry] = {m.name: ModeTelemetry()
                                                    for m in self.modes}
@@ -192,6 +198,7 @@ class MorphController:
             fn = self._factory(mode)
             self._compiled[key] = fn
             self.stats["compiles"] += 1
+        self.last_dispatch[key] = self.stats["dispatches"]
         return fn
 
     def register_aux(self, key: Hashable, factory: Callable[[], Callable]) -> None:
@@ -214,7 +221,53 @@ class MorphController:
             fn = self._aux_factories[key]()
             self._compiled[key] = fn
             self.stats["compiles"] += 1
+        self.last_dispatch[key] = self.stats["dispatches"]
         return fn
+
+    def publish_aux(self, key: Hashable, fn: Callable,
+                    factory: Optional[Callable[[], Callable]] = None) -> None:
+        """Atomically install an ALREADY-COMPILED auxiliary executable.
+
+        The autoscaler's publish-then-swap seam: a background thread traces
+        and warms ``fn``, then the serving thread installs it with two dict
+        assignments — no compile can ever land on a serving tick. Counted in
+        ``stats['compiles']`` (the trace happened, just elsewhere).
+        ``factory`` keeps a rebuild path for re-warmup after eviction.
+        """
+        if key in self._aux_factories or key in self._compiled:
+            raise KeyError(f"aux executable {key!r} already registered")
+        self._aux_factories[key] = factory if factory is not None else (lambda: fn)
+        self._compiled[key] = fn
+        self.stats["compiles"] += 1
+        self.last_dispatch[key] = self.stats["dispatches"]
+
+    def unregister_aux(self, key: Hashable) -> None:
+        """Retire an auxiliary executable: drop its factory and compiled
+        artifact (the compile-table eviction seam — ``register_aux`` treats
+        re-registration as an error, so eviction must be explicit). The mode
+        table itself is not evictable; ``stats['compiles']`` stays monotone.
+        """
+        if key not in self._aux_factories:
+            raise KeyError(f"aux executable {key!r} is not registered")
+        del self._aux_factories[key]
+        self._compiled.pop(key, None)
+        self.last_dispatch.pop(key, None)
+
+    @property
+    def compile_table_size(self) -> int:
+        """Number of live compiled executables (modes + aux)."""
+        return len(self._compiled)
+
+    def compiled_keys(self) -> Tuple[Hashable, ...]:
+        return tuple(self._compiled)
+
+    def aux_keys(self) -> Tuple[Hashable, ...]:
+        """Registered auxiliary keys (the evictable part of the table)."""
+        return tuple(self._aux_factories)
+
+    def coldness(self, key: Hashable) -> int:
+        """Dispatches elapsed since ``key`` was last used (0 = hot)."""
+        return self.stats["dispatches"] - self.last_dispatch.get(key, 0)
 
     def warmup(self) -> None:
         """Pre-compile every distinct executable (the deploy-time 'single
@@ -398,6 +451,7 @@ def make_serve_controller(params, cfg: ModelConfig,
             return lambda: jax.jit(step, in_shardings=pd_in,
                                    out_shardings=out_sh, donate_argnums=(1,))
 
+        ctrl.aux_builders["paged_decode"] = paged_factory
         for d in sorted({m.depth for m in ctrl.modes}):
             for b in paged_buckets:
                 ctrl.register_aux(paged_decode_compile_key(d, b),
@@ -546,6 +600,13 @@ def make_serve_controller(params, cfg: ModelConfig,
             return lambda: jax.jit(step, in_shardings=v_in,
                                    out_shardings=v_out, donate_argnums=(1,))
 
+        # expose the factory kinds so the autoscaler can build executables
+        # for frontier points that were never warmed by hand — same closures,
+        # same shardings, registered through publish_aux after a background
+        # compile instead of register_aux at deploy time
+        ctrl.aux_builders.update(
+            draft=draft_factory, verify=verify_factory,
+            tree_draft=tree_draft_factory, tree_verify=tree_verify_factory)
         draft_keys = sorted({(e.draft_depth, k)
                              for e in plan.values() for k in e.ks})
         for dd, k in draft_keys:

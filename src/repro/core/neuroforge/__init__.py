@@ -4,6 +4,7 @@ from repro.core.neuroforge.moga import (
     Constraints,
     Individual,
     MogaResult,
+    non_dominated,
     pareto_is_consistent,
     run_moga,
 )
@@ -20,6 +21,7 @@ __all__ = [
     "Constraints",
     "Individual",
     "MogaResult",
+    "non_dominated",
     "pareto_is_consistent",
     "run_moga",
     "DesignPoint",

@@ -267,6 +267,25 @@ def estimate(cfg: ModelConfig, cell: ShapeCell, pt: DesignPoint,
         fits=cap <= hw.hbm_bytes, detail=detail, hw=hw)
 
 
+def estimate_mode(cfg: ModelConfig, cell: ShapeCell, pt: DesignPoint, *,
+                  depth: int, width: float, hw: HardwareSpec = V5E,
+                  n_pods: int = 1) -> CostReport:
+    """Analytical estimate for a NeuroMorph ``(depth, width)`` serving mode.
+
+    Width-morphs the config at full depth, then truncates the layer stack to
+    ``depth`` groups — the same geometry ``MorphController`` compiles — so
+    reports are comparable across modes. ``pt`` should carry ``width=1.0``
+    (the morph happens here, not in ``estimate``). Shared by ``SLOPolicy``'s
+    online correction and the runtime autoscaler's blended evaluator.
+    """
+    from repro.core import elastic as _el  # late import (cycle)
+
+    cfg_m = _el.morph_config(cfg, dataclasses.replace(
+        _mode_stub, depth=cfg.n_groups, width=width))
+    cfg_m = cfg_m.scaled(n_layers=depth * cfg.period)
+    return estimate(cfg_m, cell, pt, hw=hw, n_pods=n_pods)
+
+
 # tiny helper for morph_config call above
 from repro.configs.base import MorphMode as _MM  # noqa: E402
 

@@ -121,15 +121,24 @@ def run_moga(cfg: ModelConfig, cell: ShapeCell, *, n_chips: int = 256,
              n_pods: int = 1, constraints: Optional[Constraints] = None,
              pop_size: int = 48, generations: int = 30, seed: int = 0,
              hw: HardwareSpec = V5E,
-             evaluate: Optional[Callable[[DesignPoint], CostReport]] = None) -> MogaResult:
+             evaluate: Optional[Callable[[DesignPoint], CostReport]] = None,
+             space=None,
+             objectives: Optional[Callable[[DesignPoint, CostReport],
+                                           Tuple[float, ...]]] = None) -> MogaResult:
     """NSGA-II over the design space. ``evaluate`` defaults to the analytical
     model; tests may inject a different evaluator (e.g. compiled ground truth).
+    ``space`` may replace the default ``DesignSpace`` with any object exposing
+    ``bounds()``/``decode()`` (the serving autoscaler searches a runtime pool of
+    executables rather than launch-time shardings), and ``objectives`` maps a
+    decoded point + its report to the minimized objective vector.
     """
     rng = random.Random(seed)
-    space = DesignSpace(cfg, cell, n_chips=n_chips)
+    space = space if space is not None else DesignSpace(cfg, cell, n_chips=n_chips)
     bounds = space.bounds()
     cons = constraints or Constraints()
     ev = evaluate or (lambda p: estimate(cfg, cell, p, hw=hw, n_pods=n_pods))
+    obj_fn = objectives or (lambda p, rep: (rep.latency_s, rep.hbm_capacity_per_chip,
+                                            rep.collective_s))
     n_evals = 0
     cache: Dict[Tuple[int, ...], Individual] = {}
 
@@ -141,7 +150,7 @@ def run_moga(cfg: ModelConfig, cell: ShapeCell, *, n_chips: int = 256,
         point = space.decode(genes)
         rep = ev(point)
         n_evals += 1
-        obj = (rep.latency_s, rep.hbm_capacity_per_chip, rep.collective_s)
+        obj = tuple(obj_fn(point, rep))
         viol = max(0.0, (rep.hbm_capacity_per_chip - cons.hbm_bytes) / cons.hbm_bytes)
         if cons.latency_s is not None:
             viol += max(0.0, (rep.latency_s - cons.latency_s) / cons.latency_s)
@@ -177,7 +186,12 @@ def run_moga(cfg: ModelConfig, cell: ShapeCell, *, n_chips: int = 256,
         fronts = _non_dominated_sort(pop)
         for f in fronts:
             _crowding(f)
-        children = []
+        # a few random immigrants per generation keep exploration pressure
+        # once tournament selection has converged the mating pool — without
+        # them an unlucky seed can stall on a local front and lose to
+        # random search at equal evaluation budget
+        children = [make(tuple(rng.randrange(b) for b in bounds))
+                    for _ in range(max(1, pop_size // 12))]
         while len(children) < pop_size:
             p1, p2 = tourney(pop), tourney(pop)
             child = mutate(crossover(p1.genes, p2.genes))
@@ -209,6 +223,27 @@ def run_moga(cfg: ModelConfig, cell: ShapeCell, *, n_chips: int = 256,
     unique.sort(key=lambda p: p.objectives[0])
     return MogaResult(pareto=unique, population=pop, evaluations=n_evals,
                       history=history)
+
+
+def non_dominated(pop: Sequence[Individual]) -> List[Individual]:
+    """Exact Pareto filter over an arbitrary individual pool (Deb's
+    constrained domination), deduped by genes and sorted by the first
+    objective. The serving autoscaler merges the MOGA's final population
+    with an exhaustive sweep of its (small) runtime space and refines the
+    front through this — a dominated point must never protect an
+    executable from eviction just because its dominator missed the
+    sampled population."""
+    out: List[Individual] = []
+    seen = set()
+    for i, a in enumerate(pop):
+        if a.genes in seen:
+            continue
+        if any(_dominates(b, a) for j, b in enumerate(pop) if j != i):
+            continue
+        seen.add(a.genes)
+        out.append(a)
+    out.sort(key=lambda p: p.objectives[0])
+    return out
 
 
 def pareto_is_consistent(pareto: Sequence[Individual]) -> bool:

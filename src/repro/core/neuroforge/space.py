@@ -72,12 +72,18 @@ class DesignSpace:
     n_chips: int = 256
 
     def fields(self) -> Dict[str, Tuple]:
-        pairs = [(dp, tp) for dp, tp in _factor_pairs(self.n_chips)
-                 if valid_tp(self.cfg, tp) and self.cell.global_batch % 1 == 0]
         # batch must split over dp (or be replicated for decode 2d policy)
-        pairs = [p for p in pairs if self.cell.global_batch % p[0] == 0 or
-                 self.cell.kind == "decode"]
+        pairs = [(dp, tp) for dp, tp in _factor_pairs(self.n_chips)
+                 if valid_tp(self.cfg, tp) and
+                 (self.cell.kind == "decode" or self.cell.global_batch % dp == 0)]
+        if not pairs:
+            raise ValueError(
+                f"no valid (dp, tp) factorization of {self.n_chips} chips: every "
+                f"tp fails valid_tp for {self.cfg.name!r} or dp does not divide "
+                f"global_batch={self.cell.global_batch} ({self.cell.kind} cell)")
         train = self.cell.kind == "train"
+        # Microbatch axis spans the most permissive (smallest-dp) shard; decode()
+        # clamps each individual against its own dp so large-dp points stay valid.
         per_shard = max(1, self.cell.global_batch // max(1, pairs[0][0]))
         mbs = tuple(m for m in (1, 2, 4, 8, 16, 32) if m <= max(per_shard, 1)) or (1,)
         f: Dict[str, Tuple] = {
@@ -99,6 +105,13 @@ class DesignSpace:
         f = self.fields()
         vals = {k: choices[i % len(choices)] for (k, choices), i in zip(f.items(), idx)}
         dp, tp = vals.pop("dp_tp")
+        if self.cell.kind == "train":
+            # The shared microbatch axis is sized for the smallest dp; clamp to
+            # this individual's own per-shard batch so the point stays launchable.
+            per_shard = max(1, self.cell.global_batch // max(1, dp))
+            if vals["microbatches"] > per_shard:
+                fit = [m for m in f["microbatches"] if m <= per_shard]
+                vals["microbatches"] = max(fit) if fit else 1
         return DesignPoint(dp=dp, tp=tp, **vals)
 
     def bounds(self) -> List[int]:

@@ -159,6 +159,33 @@ def main(argv=None):
     ap.add_argument("--metrics-dump", action="store_true",
                     help="print the end-of-run metrics registry as "
                          "Prometheus exposition text plus a JSON snapshot")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="online NeuroForge autoscaler: periodically re-run "
+                         "the MOGA over the live executable pool (modes x "
+                         "draft shapes x page buckets) with telemetry-"
+                         "blended objectives; frontier points compile on a "
+                         "background thread and publish atomically. "
+                         "Requires --budget-ms (the SLO loop hosts the "
+                         "autoscale tick)")
+    ap.add_argument("--autoscale-interval", type=int, default=8,
+                    help="serving ticks between MOGA generations")
+    ap.add_argument("--autoscale-table-budget", type=int, default=0,
+                    help="compile-table budget (live executables); cold "
+                         "unassigned units are retired while the table "
+                         "exceeds it (0 = no eviction)")
+    ap.add_argument("--autoscale-ks", default="",
+                    help="comma-separated candidate draft lengths the "
+                         "autoscaler may adopt beyond the warmed table, "
+                         "e.g. 4,6")
+    ap.add_argument("--autoscale-pop", type=int, default=16,
+                    help="MOGA population per online generation")
+    ap.add_argument("--autoscale-gens", type=int, default=4,
+                    help="MOGA generations per online re-run")
+    ap.add_argument("--autoscale-explore-modes", action="store_true",
+                    help="let admission move across the frontier's modes "
+                         "(default: pinned mode — adoption only changes "
+                         "draft shapes/buckets, keeping committed streams "
+                         "bit-identical to a fixed-mode run)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -272,10 +299,31 @@ def main(argv=None):
                               slo_class="interactive" if i % 3 == 0 else "batch",
                               deadline_s=args.deadline_s or None))
 
+    scaler = None
+    if args.autoscale and args.budget_ms <= 0:
+        ap.error("--autoscale requires --budget-ms (the SLO loop hosts the "
+                 "autoscale tick)")
     policy = None
     if args.budget_ms > 0:
-        policy = SLOPolicy(cfg, engine.ctrl, batch_size=args.batch,
-                           cache_capacity=capacity, dp=dp, tp=tp)
+        if args.autoscale:
+            from repro.runtime.autoscale import (AutoscaleConfig, Autoscaler,
+                                                 AutoscalePolicy)
+            ks = tuple(int(k) for k in args.autoscale_ks.split(",")
+                       if k.strip())
+            scaler = Autoscaler(AutoscaleConfig(
+                interval_ticks=args.autoscale_interval,
+                table_budget=args.autoscale_table_budget or None,
+                spec_ks=ks, explore_modes=args.autoscale_explore_modes,
+                pop_size=args.autoscale_pop,
+                generations=args.autoscale_gens,
+                seed=args.seed)).bind(engine)
+            policy = AutoscalePolicy(cfg, engine.ctrl, autoscaler=scaler,
+                                     batch_size=args.batch,
+                                     cache_capacity=capacity, dp=dp, tp=tp,
+                                     metrics=engine.metrics)
+        else:
+            policy = SLOPolicy(cfg, engine.ctrl, batch_size=args.batch,
+                               cache_capacity=capacity, dp=dp, tp=tp)
         if supervisor is not None:
             supervisor.attach_policy(policy)
 
@@ -284,6 +332,8 @@ def main(argv=None):
     while True:
         # a failover swaps the engine out from under the loop
         engine = supervisor.engine if supervisor is not None else engine
+        if scaler is not None and scaler.engine is not engine:
+            scaler.bind(engine)  # a failover swapped the engine: re-attach
         if not (engine.queue or engine.n_active):
             break
         if policy is not None:
@@ -297,8 +347,16 @@ def main(argv=None):
             busy += engine.step(now_s=busy)
     engine = supervisor.engine if supervisor is not None else engine
 
-    assert engine.ctrl.stats["compiles"] == engine.compiles_after_warmup, \
-        "runtime switch must not recompile"
+    if scaler is not None:
+        scaler._drain_publish()  # land any adoption still in flight
+        assert engine.ctrl.stats["compiles"] == \
+            engine.compiles_after_warmup + scaler.stats["published_keys"], \
+            "every post-warmup compile must come through publish_aux"
+        assert scaler.stats["tick_stalls"] == 0, \
+            "background compilation stalled a serving tick"
+    else:
+        assert engine.ctrl.stats["compiles"] == engine.compiles_after_warmup, \
+            "runtime switch must not recompile"
     if supervisor is not None:
         if failure_plan is not None:
             missed = set(failure_plan.at_sites) - failure_plan.fired_sites
@@ -339,6 +397,18 @@ def main(argv=None):
               f"launches {t['launches']}")
     if engine.spec_fallback_log:
         print(f"  spec fallbacks: {list(engine.spec_fallback_log)}")
+    if scaler is not None:
+        st = scaler.stats
+        print(f"[serve] autoscale generations={st['generations']} "
+              f"published={st['published']} retired={st['retired']} "
+              f"front={len(scaler.front)} "
+              f"table={ctrl.compile_table_size} "
+              f"tick_stalls={st['tick_stalls']}")
+        for pt, obj in zip(scaler.front, scaler.front_objectives):
+            print(f"  front d{pt.depth} w{pt.width} spec_k={pt.spec_k} "
+                  f"tree={pt.spec_tree} bucket={pt.bucket} "
+                  f"lat/tok={obj[0] * 1e3:.2f} ms")
+        scaler.close()
     if paged is not None:
         engine.check_paged_invariants()
         for depth, st in sorted(engine.page_pool_stats().items()):

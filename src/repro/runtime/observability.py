@@ -455,3 +455,27 @@ class Observability:
     def load_state(self, st: Dict[str, Any]) -> None:
         self.registry.load_state(st["registry"])
         self.recorder.load_state(st["recorder"])
+
+
+# -- autoscaler observability ------------------------------------------------
+
+# One row per autoscaler action: a MOGA generation completing ("generation"),
+# a frontier executable published from the background compiler ("publish"),
+# or a cold executable retired under the compile-table budget ("retire").
+# ``unit`` names the executable group (e.g. "linear_k4", "bucket_2"),
+# ``detail`` is free-form (front size, coldness, ...).
+AUTOSCALE_EVENT_FIELDS = ("step", "event", "unit", "generation", "detail")
+
+# Gauges the autoscaler's registry callback exports (registered under
+# key="autoscale" so a rebind after failover replaces the stale closure):
+#   autoscale_generation        completed MOGA generations
+#   autoscale_front_size        design points on the current Pareto front
+#   autoscale_compile_table     live compiled executables (modes + aux)
+#   autoscale_pending_compiles  units queued or compiling in the background
+#   autoscale_published / autoscale_retired   lifetime unit counts
+
+
+def autoscale_events(registry: MetricsRegistry) -> EventStream:
+    """The canonical autoscaler event stream on ``registry`` (get-or-create,
+    shared schema between the live autoscaler, benches and tests)."""
+    return registry.events("autoscale_events", AUTOSCALE_EVENT_FIELDS)

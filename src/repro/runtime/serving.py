@@ -107,7 +107,7 @@ from repro.configs.base import ModelConfig, MorphMode, ShapeCell
 from repro.core import elastic
 from repro.core.morph import (MorphController, make_serve_controller,
                               paged_decode_compile_key, policy_for_budget)
-from repro.core.neuroforge.analytical import estimate
+from repro.core.neuroforge.analytical import estimate, estimate_mode
 from repro.core.neuroforge.hw import V5E, HardwareSpec
 from repro.core.neuroforge.space import DesignPoint
 from repro.models.model import (adopt_cache_slot, commit_verify,
@@ -265,13 +265,23 @@ class SLOPolicy:
                          kv_quant=cfg.kv_quant, attn_chunk=cfg.attn_chunk,
                          capacity_factor=cfg.capacity_factor, width=1.0)
         self.design_point = pt
+        self._cell = cell
+        self._hw = hw
         self.analytical: Dict[str, float] = {}
         for m in controller.modes:
-            # width-morph the config, then truncate to the mode's depth; the
-            # DesignPoint keeps width=1.0 so estimate() doesn't morph twice.
-            cfg_m = elastic.morph_config(cfg, replace(m, depth=cfg.n_groups))
-            cfg_m = cfg_m.scaled(n_layers=m.depth * cfg.period)
-            self.analytical[m.name] = estimate(cfg_m, cell, pt, hw=hw).latency_s
+            self.analytical[m.name] = self._analytical_for(m)
+
+    def _analytical_for(self, mode: MorphMode) -> float:
+        """Analytical latency for a mode, computed lazily and cached — modes
+        registered after construction (the autoscaler's frontier points) must
+        not KeyError."""
+        a = self.analytical.get(mode.name)
+        if a is None:
+            a = estimate_mode(self.cfg, self._cell, self.design_point,
+                              depth=mode.depth, width=mode.width,
+                              hw=self._hw).latency_s
+            self.analytical[mode.name] = a
+        return a
 
     def _correction(self) -> float:
         ratios = []
@@ -285,7 +295,7 @@ class SLOPolicy:
         t = self.controller.telemetry.get(mode.name)
         if t is not None and t.steps >= self.min_samples:
             return t.p50_s
-        return self.analytical[mode.name] * self._correction()
+        return self._analytical_for(mode) * self._correction()
 
     def _queue_pressure(self, queue_depths: Optional[Dict[str, int]]) -> float:
         """Weighted queued-request count per batch slot (0 = empty queue)."""
@@ -1024,6 +1034,10 @@ class EngineSnapshot:
     spec_telemetry: Dict
     paging_stats: Dict[int, Dict[str, float]]
     metrics: Optional[Dict] = None  # Observability.state_dict() of the source
+    # Autoscaler.state_dict() of the source (None when no autoscaler bound):
+    # published/retired units + frontier generation, so a restored engine
+    # rebuilds the same executable pool and keeps deciding deterministically
+    autoscale: Optional[Dict] = None
 
 
 class ServingEngine:
@@ -1182,7 +1196,7 @@ class ServingEngine:
         self._ev_admission_switch = reg.events(
             "engine_admission_switch",
             ("step", "from_mode", "to_mode", "queued_interactive",
-             "queued_batch"))
+             "queued_batch", "frontier_gen"))
         self._ev_admission_decision = reg.events(
             "engine_admission_decision",
             ("step", "budget_s", "effective_budget_s", "queue_pressure",
@@ -1241,6 +1255,17 @@ class ServingEngine:
         # change on admission, and the mode table bounds the distinct values
         # — no per-tick morph_config calls or host-to-device puts
         self._active_cache: Dict[Tuple[float, ...], Dict] = {}
+        # online-MOGA autoscaler (runtime.autoscale.Autoscaler.bind attaches
+        # one); admission-switch events record its frontier generation, and
+        # snapshot/restore carries its state through _pending_autoscale when
+        # a bare standby absorbs a snapshot before an autoscaler binds
+        self.autoscaler = None
+        self._pending_autoscale: Optional[Dict] = None
+        # paged buckets currently backed by a compiled executable; the
+        # autoscaler retires/re-adopts ladder entries through this set (the
+        # cap bucket is never retired, so a covering bucket always exists)
+        self._avail_buckets = (set(paged.buckets(cfg, cache_capacity))
+                               if paged is not None else set())
 
     def _active_for(self, widths: List[float]) -> Dict:
         key = tuple(widths)
@@ -1269,8 +1294,12 @@ class ServingEngine:
     @property
     def admission_switch_log(self):
         """(step, from, to, queued interactive, queued batch) tuples —
-        legacy view of the ``engine_admission_switch`` event stream."""
-        return _TupleView(self._ev_admission_switch)
+        legacy view of the ``engine_admission_switch`` event stream (the
+        stream itself additionally records ``frontier_gen``; the tuple shape
+        predates the autoscaler and stays 5-wide)."""
+        return _TupleView(self._ev_admission_switch,
+                          fields=("step", "from_mode", "to_mode",
+                                  "queued_interactive", "queued_batch"))
 
     @property
     def admission_decision_log(self):
@@ -1467,7 +1496,9 @@ class ServingEngine:
                 step=self.step_count, from_mode=self.admission_mode.name,
                 to_mode=mode.name,
                 queued_interactive=len(self._queues["interactive"]),
-                queued_batch=len(self._queues["batch"]))
+                queued_batch=len(self._queues["batch"]),
+                frontier_gen=(self.autoscaler.generation
+                              if self.autoscaler is not None else -1))
             # the policy decision is the real "mode switch" — route it
             # through the controller so its switch stats/log record it
             # (group-drain dispatches in step() deliberately don't)
@@ -1951,7 +1982,7 @@ class ServingEngine:
                                           self.executor.put(np.int32(src)),
                                           self.executor.put(np.int32(dst)))
             needed = max(needed, min(pos // pg.ps + 1, pg.cap_pages))
-        bucket = self.paged.bucket_for(self.cfg, self.cache_capacity, needed)
+        bucket = self._bucket_for(needed)
         pages_op = self.executor.put(pg.table[:, :bucket].copy())
         toks = np.zeros((self.batch_size, 1), np.int32)
         for i in active_ix:
@@ -2000,6 +2031,15 @@ class ServingEngine:
                 widths=[g.widths[i] for i in active_ix],
                 key=list(paged_decode_compile_key(g.depth, bucket)))
         return dt
+
+    def _bucket_for(self, needed: int) -> int:
+        """Smallest AVAILABLE compiled page-table bucket covering ``needed``
+        pages. The ladder entry ``PagedLayout.bucket_for`` would pick may
+        have been retired by the autoscaler; rounding up to the next live
+        bucket is bit-identical (the extra table columns are scratch-backed,
+        exactly like a free slot's). The cap bucket is never retired, so a
+        covering bucket always exists."""
+        return min(b for b in self._avail_buckets if b >= needed)
 
     # -- page-pool accounting ----------------------------------------------
 
@@ -2058,7 +2098,10 @@ class ServingEngine:
             backpressure_events=self.backpressure_events,
         )
         logs = dict(
-            admission_switch_log=list(self.admission_switch_log),
+            # dict rows, not the legacy 5-tuples: the stream carries
+            # ``frontier_gen`` the tuple view deliberately hides
+            admission_switch_log=copy.deepcopy(
+                list(self._ev_admission_switch.rows)),
             admission_decision_log=copy.deepcopy(
                 list(self.admission_decision_log)),
             spec_fallback_log=list(self.spec_fallback_log),
@@ -2078,6 +2121,8 @@ class ServingEngine:
             spec_telemetry=copy.deepcopy(self.spec_telemetry),
             paging_stats=self.page_pool_stats(),
             metrics=self.obs.state_dict(),
+            autoscale=(self.autoscaler.state_dict()
+                       if self.autoscaler is not None else None),
         )
 
     def restore(self, snap: EngineSnapshot) -> None:
@@ -2149,8 +2194,7 @@ class ServingEngine:
         self.spec_generated_tokens = c["spec_generated_tokens"]
         self.backpressure_events = c["backpressure_events"]
         sw = self._ev_admission_switch
-        sw.rows = deque((dict(zip(sw.fields, t))
-                         for t in snap.logs["admission_switch_log"]),
+        sw.rows = deque(copy.deepcopy(snap.logs["admission_switch_log"]),
                         maxlen=sw.rows.maxlen)
         ad = self._ev_admission_decision
         ad.rows = deque(copy.deepcopy(snap.logs["admission_decision_log"]),
@@ -2174,6 +2218,18 @@ class ServingEngine:
         # absorbed the snapshot, not the dead source); key replacement evicts
         # any stale registration sharing the registry
         self.metrics.register_callback(self._metric_gauges, key="engine")
+        if snap.autoscale is not None:
+            if self.autoscaler is not None:
+                # rebuild the published/retired executable pool so the next
+                # generation decides exactly as the source would have (this
+                # is the recovery path — synchronous compiles are allowed)
+                self.autoscaler.load_state(snap.autoscale)
+            else:
+                # bare standby: hold the state until an Autoscaler binds
+                # (runtime.autoscale.Autoscaler.bind applies it); the groups
+                # may reference published draft shapes the bare table lacks,
+                # so a bind must happen before the next speculative tick
+                self._pending_autoscale = copy.deepcopy(snap.autoscale)
         if self._rec.enabled:
             for g in self.groups.values():
                 for r in g.slots:
@@ -2213,8 +2269,7 @@ class ServingEngine:
                         g.cache, self.executor.put(np.int32(src)),
                         self.executor.put(np.int32(dst)))
                 needed = max(needed, min(pos // pg.ps + 1, pg.cap_pages))
-            bucket = self.paged.bucket_for(self.cfg, self.cache_capacity,
-                                           needed)
+            bucket = self._bucket_for(needed)
             fn = self.ctrl.aux_step(paged_decode_compile_key(g.depth,
                                                              bucket))
             _, g.cache = fn(self.params, g.cache, self.executor.put(toks),

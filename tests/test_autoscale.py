@@ -1,0 +1,383 @@
+"""Online NeuroForge autoscaler: live MOGA over the executable pool.
+
+The acceptance criteria of the autoscaler PR, asserted end to end: under a
+mid-run traffic shift the online MOGA adopts at least one design point that
+was NOT hand-warmed (a background-compiled draft/verify pair published via
+``publish_aux``) and retires at least one cold executable to fit the
+compile-table budget — while committed token streams stay bit-identical to
+a fixed-mode run of the same trace and zero serving ticks stall on a
+background compile. Dense + paged, local + 2x4 mesh (subprocess)."""
+import os
+import subprocess
+import sys
+import threading
+import time
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.configs.base import MorphMode
+from repro.models import init_params
+from repro.models.paged import PagedLayout
+from repro.runtime.autoscale import (AutoscaleConfig, AutoscalePolicy,
+                                     Autoscaler, ServePoint, ServeSpace,
+                                     measured_accept_rate)
+from repro.runtime.serving import (Request, ServingEngine, SLOPolicy,
+                                   poisson_trace)
+from repro.runtime.speculative import SpecConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARCH = "tinyllama-1.1b"
+
+
+def _spec_engine(params, cfg, *, paged=False, capacity=32):
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=capacity,
+                        prefill_threshold=4,
+                        speculative=SpecConfig(ks=(2,)),
+                        paged=PagedLayout(page_size=4) if paged else None)
+    eng.warmup()
+    return eng
+
+
+def _two_phase_traces():
+    """A shift: dense fast arrivals, then sparse slow ones; phase-2 rids are
+    offset so the merged by-rid comparison against the baseline is sound."""
+    t1 = poisson_trace(10, 200.0, seed=1, new_tokens=(4, 8))
+    t2 = [replace(r, rid=r.rid + 100)
+          for r in poisson_trace(8, 30.0, seed=2, new_tokens=(4, 8))]
+    return t1, t2
+
+
+def _await_builds(asc, timeout_s=60.0):
+    """Wait for the background worker, publishing finished units the same
+    way a serving tick would (drain on the caller's thread, dict swaps)."""
+    t0 = time.monotonic()
+    while asc._pending and time.monotonic() - t0 < timeout_s:
+        asc._drain_publish()
+        time.sleep(0.05)
+    asc._drain_publish()
+    assert not asc._pending, "background builds never finished"
+
+
+def _lifecycle(paged):
+    cfg = smoke_config(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    # baseline: fixed-mode, no autoscaler — greedy speculative serving is
+    # rollback-exact, so this is the bit-identity reference
+    base = _spec_engine(params, cfg, paged=paged)
+    pinned = base.ctrl.modes[-1]
+    base.set_admission_mode(pinned)
+    t1, t2 = _two_phase_traces()  # Requests are stateful: fresh per engine
+    base.run(t1)
+    base.run(t2)
+    want = {r.rid: tuple(r.generated) for r in base.completed}
+
+    eng = _spec_engine(params, cfg, paged=paged)
+    warm_ks = set(eng.ctrl.spec_plan[pinned.depth].ks)
+    assert 4 not in warm_ks, "K=4 must NOT be hand-warmed"
+    budget = eng.compiles_after_warmup + 1  # adopting K=4 adds 2 keys
+    asc = Autoscaler(AutoscaleConfig(
+        interval_ticks=1, table_budget=budget, spec_ks=(4,),
+        pop_size=8, generations=2, seed=0)).bind(eng)
+    policy = AutoscalePolicy(cfg, eng.ctrl, autoscaler=asc,
+                             batch_size=eng.batch_size, cache_capacity=32,
+                             metrics=eng.metrics)
+    try:
+        compiles0 = eng.ctrl.stats["compiles"]
+        t1, t2 = _two_phase_traces()
+        eng.run(t1, policy=policy, budget_fn=lambda t: 0.5)
+        # phase boundary: let the background builder finish so phase 2's
+        # first tick publishes, uses the new shape, then ages + retires it
+        _await_builds(asc)
+        eng.run(t2, policy=policy, budget_fn=lambda t: 0.5)
+
+        # adopt: a frontier point that was not hand-warmed went live
+        assert asc.stats["published"] >= 1, asc.stats
+        assert ("spec_k", pinned.depth, 4) in (
+            asc._published_units + asc._retired_units)
+        # retire: the table came back under budget by evicting a cold unit
+        assert asc.stats["retired"] >= 1, asc.stats
+        assert eng.ctrl.compile_table_size <= budget
+        # every post-warmup compile went through publish_aux off-thread
+        assert eng.ctrl.stats["compiles"] == \
+            compiles0 + asc.stats["published_keys"]
+        assert asc.stats["tick_stalls"] == 0
+        assert asc.worker_idents and \
+            threading.get_ident() not in asc.worker_idents, \
+            "compiles must happen on the background worker only"
+        # bit-identity: same committed streams as the fixed-mode baseline
+        got = {r.rid: tuple(r.generated) for r in eng.completed}
+        assert got == want
+        # the event stream narrates the lifecycle in order
+        evs = [(e["event"], e["unit"]) for e in
+               eng.metrics.events("autoscale_events",
+                                  ("step", "event", "unit", "generation",
+                                   "detail"))]
+        labels = [u for k, u in evs if k == "publish"]
+        assert f"spec_k:d{pinned.depth}:4" in labels
+        assert any(k == "retire" for k, _ in evs)
+    finally:
+        asc.close()
+
+
+def test_adopt_and_retire_lifecycle_dense():
+    _lifecycle(paged=False)
+
+
+def test_adopt_and_retire_lifecycle_paged():
+    _lifecycle(paged=True)
+
+
+def test_snapshot_restore_carries_autoscaler_state():
+    """A bare standby that absorbs a snapshot re-publishes the adopted
+    units synchronously at bind() and replays the autoscaler state exactly
+    (front, generation, published units, compile accounting)."""
+    cfg = smoke_config(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = _spec_engine(params, cfg)
+    pinned = eng.ctrl.modes[-1]
+    asc = Autoscaler(AutoscaleConfig(interval_ticks=1, spec_ks=(4,),
+                                     pop_size=8, generations=2,
+                                     seed=0)).bind(eng)
+    policy = AutoscalePolicy(cfg, eng.ctrl, autoscaler=asc,
+                             batch_size=eng.batch_size, cache_capacity=32,
+                             metrics=eng.metrics)
+    try:
+        t1, _ = _two_phase_traces()
+        eng.run(list(t1), policy=policy, budget_fn=lambda t: 0.5)
+        _await_builds(asc)
+        # one more decision tick drains + publishes the finished unit
+        policy.choose(0.5)
+        assert 4 in eng.ctrl.spec_plan[pinned.depth].ks
+        snap = eng.snapshot()
+        assert snap.autoscale is not None
+
+        standby = _spec_engine(params, cfg)
+        warm = standby.ctrl.stats["compiles"]
+        standby.restore(snap)
+        assert standby._pending_autoscale is not None
+        asc2 = Autoscaler(AutoscaleConfig(interval_ticks=1, spec_ks=(4,),
+                                          pop_size=8, generations=2,
+                                          seed=0)).bind(standby)
+        try:
+            # bind applied the stash: the adopted shape is live again, the
+            # recovery republish is the only post-warmup compile source
+            assert standby._pending_autoscale is None
+            assert 4 in standby.ctrl.spec_plan[pinned.depth].ks
+            assert standby.ctrl.stats["compiles"] == \
+                warm + asc2.stats["published_keys"]
+            assert asc2.generation == asc.generation
+            assert asc2.front == asc.front
+            a, b = asc.state_dict(), asc2.state_dict()
+            for key in ("generation", "front", "published", "retired",
+                        "active_spec", "avail_buckets"):
+                assert a[key] == b[key], key
+        finally:
+            asc2.close()
+    finally:
+        asc.close()
+
+
+def test_policy_bit_identity_and_no_stall_under_constant_traffic():
+    """Even with generations firing every tick and nothing adopted (no
+    candidate shapes), AutoscalePolicy serves the exact fixed-mode streams
+    and never stalls a tick — the policy overhead is pure bookkeeping."""
+    cfg = smoke_config(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    base = _spec_engine(params, cfg)
+    base.set_admission_mode(base.ctrl.modes[-1])
+    base.run(poisson_trace(8, 100.0, seed=3))
+    want = {r.rid: tuple(r.generated) for r in base.completed}
+
+    eng = _spec_engine(params, cfg)
+    asc = Autoscaler(AutoscaleConfig(interval_ticks=1, pop_size=8,
+                                     generations=2)).bind(eng)
+    policy = AutoscalePolicy(cfg, eng.ctrl, autoscaler=asc,
+                             batch_size=eng.batch_size, cache_capacity=32,
+                             metrics=eng.metrics)
+    try:
+        eng.run(poisson_trace(8, 100.0, seed=3), policy=policy,
+                budget_fn=lambda t: 0.5)
+        assert asc.stats["generations"] >= 1
+        assert asc.stats["tick_stalls"] == 0
+        assert eng.ctrl.stats["compiles"] == eng.compiles_after_warmup
+        got = {r.rid: tuple(r.generated) for r in eng.completed}
+        assert got == want
+        # gauges export through the registry callback
+        g = eng.metrics.to_json()["gauges"]
+        assert g["autoscale_generation"] >= 1.0
+        assert g["autoscale_compile_table"] == float(
+            eng.ctrl.compile_table_size)
+    finally:
+        asc.close()
+
+
+def test_admission_switch_records_frontier_generation():
+    """Admission-switch events stamp the live frontier generation (and -1
+    without an autoscaler), and the legacy tuple view stays 5 fields."""
+    cfg = smoke_config(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32)
+    eng.warmup()
+    eng.set_admission_mode(eng.ctrl.modes[0])
+    evs = list(eng.metrics.events(
+        "engine_admission_switch",
+        ("step", "from_mode", "to_mode", "queued_interactive",
+         "queued_batch", "frontier_gen")))
+    assert evs and evs[-1]["frontier_gen"] == -1
+    assert len(eng.admission_switch_log[-1]) == 5  # legacy tuple shape
+
+    asc = Autoscaler(AutoscaleConfig(interval_ticks=1, pop_size=8,
+                                     generations=2)).bind(eng)
+    policy = AutoscalePolicy(cfg, eng.ctrl, autoscaler=asc,
+                             batch_size=eng.batch_size, cache_capacity=32,
+                             metrics=eng.metrics)
+    try:
+        policy.choose(0.5)  # runs generation 1
+        eng.set_admission_mode(eng.ctrl.modes[-1])
+        evs = list(eng.metrics.events(
+            "engine_admission_switch",
+            ("step", "from_mode", "to_mode", "queued_interactive",
+             "queued_batch", "frontier_gen")))
+        assert evs[-1]["frontier_gen"] == asc.generation >= 1
+    finally:
+        asc.close()
+
+
+def test_serve_space_decode_normalizes_and_front_is_consistent():
+    """Every genome decodes to an executable point (depths with no spec
+    plan collapse to plain), and a generation's front contains no
+    dominated point — including points the sampled population missed
+    (the exhaustive small-space refinement)."""
+    cfg = smoke_config(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = _spec_engine(params, cfg)
+    space = ServeSpace(eng, spec_ks=(4,))
+    nm, ns, nb = space.bounds()
+    assert nm == len({(m.depth, m.width) for m in eng.ctrl.modes})
+    assert ns == 3  # plain, K=2 (hand-warmed), K=4 (candidate)
+    for g0 in range(nm):
+        for g1 in range(ns):
+            for g2 in range(nb):
+                pt = space.decode((g0, g1, g2))
+                if eng.ctrl.spec_plan.get(pt.depth) is None:
+                    assert pt.spec_k == 0 and pt.spec_tree is None
+    # default acceptance before telemetry is the optimistic ladder bottom
+    assert measured_accept_rate(eng, eng.ctrl.modes[-1].depth) == 0.75
+
+    asc = Autoscaler(AutoscaleConfig(interval_ticks=1, spec_ks=(4,),
+                                     pop_size=4, generations=1)).bind(eng)
+    policy = AutoscalePolicy(cfg, eng.ctrl, autoscaler=asc,
+                             batch_size=eng.batch_size, cache_capacity=32,
+                             metrics=eng.metrics)
+    try:
+        policy.choose(0.5)
+        assert asc.front, "generation produced an empty front"
+        assert len(set(asc.front)) == len(asc.front), "front has duplicates"
+        # before any traffic the launch-bound spec model makes the largest
+        # candidate K strictly dominate smaller ones at the same point:
+        # K=2 must never sit on the front next to K=4
+        ks_on_front = {p.spec_k for p in asc.front if p.spec_k}
+        assert ks_on_front in (set(), {4}), asc.front
+    finally:
+        asc.close()
+
+
+_MESH_LIFECYCLE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import threading, time
+from dataclasses import replace
+import jax
+from repro.configs import smoke_config
+from repro.launch.mesh import make_serve_mesh
+from repro.models import init_params
+from repro.runtime.autoscale import AutoscaleConfig, AutoscalePolicy, Autoscaler
+from repro.runtime.serving import MeshExecutor, ServingEngine, poisson_trace
+from repro.runtime.speculative import SpecConfig
+
+cfg = smoke_config("tinyllama-1.1b")
+params = init_params(jax.random.PRNGKey(0), cfg)
+
+def build(executor):
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32,
+                        prefill_threshold=4, speculative=SpecConfig(ks=(2,)),
+                        executor=executor)
+    eng.warmup()
+    return eng
+
+def traces():  # Requests are stateful: fresh per engine
+    t1 = poisson_trace(8, 200.0, seed=1, new_tokens=(4, 6))
+    t2 = [replace(r, rid=r.rid + 100)
+          for r in poisson_trace(6, 30.0, seed=2, new_tokens=(4, 6))]
+    return t1, t2
+
+base = build(MeshExecutor(make_serve_mesh(2, 4)))
+base.set_admission_mode(base.ctrl.modes[-1])
+t1, t2 = traces()
+base.run(t1); base.run(t2)
+want = {r.rid: tuple(r.generated) for r in base.completed}
+
+eng = build(MeshExecutor(make_serve_mesh(2, 4)))
+budget = eng.compiles_after_warmup + 1
+asc = Autoscaler(AutoscaleConfig(interval_ticks=1, table_budget=budget,
+                                 spec_ks=(4,), pop_size=8,
+                                 generations=2, seed=0)).bind(eng)
+policy = AutoscalePolicy(cfg, eng.ctrl, autoscaler=asc,
+                         batch_size=eng.batch_size, cache_capacity=32,
+                         dp=2, tp=4, metrics=eng.metrics)
+compiles0 = eng.ctrl.stats["compiles"]
+t1, t2 = traces()
+eng.run(t1, policy=policy, budget_fn=lambda t: 0.5)
+t0 = time.monotonic()
+while asc._pending and time.monotonic() - t0 < 120.0:
+    asc._drain_publish()
+    time.sleep(0.05)
+asc._drain_publish()
+assert not asc._pending, "mesh background build never finished"
+eng.run(t2, policy=policy, budget_fn=lambda t: 0.5)
+assert asc.stats["published"] >= 1, asc.stats
+assert asc.stats["retired"] >= 1, asc.stats
+assert eng.ctrl.compile_table_size <= budget
+assert eng.ctrl.stats["compiles"] == compiles0 + asc.stats["published_keys"]
+assert asc.stats["tick_stalls"] == 0
+assert asc.worker_idents and threading.get_ident() not in asc.worker_idents
+got = {r.rid: tuple(r.generated) for r in eng.completed}
+assert got == want, "mesh autoscaled run diverged from fixed-mode baseline"
+asc.close()
+print("MESH_AUTOSCALE_OK")
+"""
+
+
+def test_adopt_and_retire_lifecycle_mesh_2x4():
+    """The full lifecycle on a dp2 x tp4 mesh: the background worker warms
+    sharded executables off-thread and the committed streams still match
+    the fixed-mode mesh baseline bit-for-bit."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", _MESH_LIFECYCLE],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-2000:])
+    assert "MESH_AUTOSCALE_OK" in out.stdout
+
+
+def test_slo_policy_analytical_cache_is_lazy():
+    """est_latency on a mode outside the warmed table computes on demand
+    and caches (the autoscaler evaluates frontier candidates that the
+    constructor never saw)."""
+    cfg = smoke_config(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_size=2, cache_capacity=32)
+    eng.warmup()
+    pol = SLOPolicy(cfg, eng.ctrl, batch_size=2, cache_capacity=32)
+    known = set(pol.analytical)
+    novel = MorphMode(depth=2, width=1.0)  # depth outside the warmed table
+    assert novel.name not in known
+    lat = pol.est_latency(novel)
+    assert lat > 0.0
+    assert novel.name in pol.analytical  # cached for the next call
+    assert pol.est_latency(novel) == lat
